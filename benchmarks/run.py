@@ -1,0 +1,313 @@
+"""Benchmark harness: one function per paper table/figure + the TPU
+roofline/autoshard analyses.  Prints ``name,us_per_call,derived`` CSV rows
+and writes the full tables to experiments/tables/*.csv.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (accelerator, dse, energymodel, hetero, partition,
+                        topology)
+from repro.core import autoshard
+from repro.core.tpu_costmodel import ShardingPolicy, step_time
+
+OUT = Path("experiments/tables")
+
+PAPER_NETS = list(topology.NETWORKS)
+QUICK_NETS = ["AlexNet", "VGG16", "GoogleNet", "ResNet50", "MobileNetV2",
+              "Xception"]
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def _emit(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _write(name, header, rows):
+    OUT.mkdir(parents=True, exist_ok=True)
+    with open(OUT / f"{name}.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+
+
+def _sweeps(nets):
+    return {n: dse.sweep_network(topology.get_network(n), n) for n in nets}
+
+
+def bench_table1_2(sweeps):
+    """Tables 1–2: μ^p_min / δ^max_min per array, ifmap- and psum-swept."""
+    def run():
+        rows = []
+        for net, sw in sweeps.items():
+            t1 = dse.mu_delta(sw, swept="ifmap")
+            t2 = dse.mu_delta(sw, swept="psum")
+            for arr in sw.arrays:
+                rows.append([net, f"{arr[0]}x{arr[1]}",
+                             f"{t1[arr][0]:.2f}", f"{t1[arr][1]:.2f}",
+                             f"{t2[arr][0]:.2f}", f"{t2[arr][1]:.2f}"])
+        return rows
+
+    rows, us = _timed(run)
+    _write("table1_2_mu_delta", ["network", "array", "mu_ifmap",
+                                 "delta_ifmap", "mu_psum", "delta_psum"],
+           rows)
+    d16 = [float(r[5]) for r in rows if r[1] == "16x16"]
+    _emit("table1_2_mu_delta", us,
+          f"psum delta@[16x16] mean={np.mean(d16):.1f}% (paper 4.6-112%)")
+
+
+def bench_table3(sweeps):
+    """Table 3: Δ^max_min over the 25-point space per array."""
+    def run():
+        rows = []
+        for net, sw in sweeps.items():
+            d = dse.delta_whole_space(sw)
+            rows.append([net] + [f"{d[a]:.2f}" for a in sw.arrays])
+        return rows
+
+    rows, us = _timed(run)
+    arrays = next(iter(sweeps.values())).arrays
+    _write("table3_delta", ["network"] + [f"{a[0]}x{a[1]}" for a in arrays],
+           rows)
+    vals = [float(v) for r in rows for v in r[1:]]
+    _emit("table3_delta", us,
+          f"range {min(vals):.0f}-{max(vals):.0f}% (paper 12-114%)")
+
+
+def bench_table4(sweeps):
+    """Table 4: EDP mean/max spread over the whole space."""
+    def run():
+        return [[net, f"{m:.1f}", f"{mx:.1f}"]
+                for net, (m, mx) in
+                ((n, dse.edp_spread(sw)) for n, sw in sweeps.items())]
+
+    rows, us = _timed(run)
+    _write("table4_edp_spread", ["network", "mean_pct", "max_pct"], rows)
+    means = [float(r[1]) for r in rows]
+    _emit("table4_edp_spread", us,
+          f"mean spread {min(means):.0f}-{max(means):.0f}% (paper 17-130%)")
+
+
+def bench_table5(sweeps):
+    """Table 5: per-network 5%-boundary configurations + chip design."""
+    def run():
+        rows = []
+        for net, sw in sweeps.items():
+            cells = dse.boundary_configs(sw, bound=0.05)
+            rows.append([net, len(cells),
+                         " | ".join(sw.cell_label(c) for c in cells[:6])])
+        chip = hetero.design_chip(sweeps, bound=0.05, max_cores=3)
+        return rows, chip
+
+    (rows, chip), us = _timed(run)
+    _write("table5_boundary_configs", ["network", "n_configs",
+                                       "configs(first 6)"], rows)
+    _emit("table5_boundary_configs", us,
+          f"core types={len(chip.core_types)}: "
+          + "; ".join(chip.core_label(i)
+                      for i in range(len(chip.core_types))))
+    return chip
+
+
+def bench_table6(sweeps, chip):
+    """Table 6: Δ_E/Δ_D/Δ_EDP on non-corresponding cores + savings."""
+    def run():
+        rows = []
+        for net in sorted(chip.assignment):
+            own = chip.assignment[net]
+            worst = dict(dE=0.0, dD=0.0, dEDP=0.0)
+            for other in range(len(chip.core_types)):
+                if other == own:
+                    continue
+                pen = hetero.cross_penalty(chip, net, other)
+                if pen["dEDP"] > worst["dEDP"]:
+                    worst = pen
+            rows.append([net, f"{worst['dE']:.2f}", f"{worst['dD']:.2f}",
+                         f"{worst['dEDP']:.2f}"])
+        sav = hetero.savings_summary(chip)
+        return rows, sav
+
+    (rows, sav), us = _timed(run)
+    _write("table6_cross_penalty", ["network", "dE_pct", "dD_pct",
+                                    "dEDP_pct"], rows)
+    es = max(v["energy_saved"] for v in sav.values())
+    ed = max(v["edp_saved"] for v in sav.values())
+    _emit("table6_cross_penalty", us,
+          f"max saved: energy {es:.0f}% / EDP {ed:.0f}% (paper 36%/67%)")
+
+
+def bench_table7_8(nets):
+    """Tables 7–8: Alg. II distribution on the paper's two core configs."""
+    cfg3 = accelerator.AcceleratorConfig(array_rows=32, array_cols=32,
+                                         gb_psum_kb=54, gb_ifmap_kb=54)
+    cfg4 = accelerator.AcceleratorConfig(array_rows=12, array_cols=14,
+                                         gb_psum_kb=216, gb_ifmap_kb=54)
+
+    def run():
+        rows = []
+        for net in nets:
+            layers = topology.get_network(net)
+            cat1 = net in topology.CATEGORY_1
+            cfg, k = (cfg3, 3) if cat1 else (cfg4, 4)
+            rep = energymodel.simulate_network(cfg, layers, net)
+            bb = partition.partition_network(rep, k)
+            opt = partition.partition_network(rep, k, "dp")
+            rows.append([net, k,
+                         " ".join(f"({a},{b})" for a, b in bb.table_row()),
+                         f"{bb.speedup:.2f}", f"{opt.speedup:.2f}"])
+        return rows
+
+    rows, us = _timed(run)
+    _write("table7_8_distribution", ["network", "cores", "(l_init,n_C)",
+                                     "speedup_bb", "speedup_optimal"], rows)
+    s = [float(r[3]) for r in rows]
+    _emit("table7_8_distribution", us,
+          f"speedups {min(s):.2f}-{max(s):.2f} (paper 2.01-3.92)")
+
+
+def bench_autoshard():
+    """TPU adaptation: sharding-policy DSE + fleet design (Table-5 analogue)."""
+    from repro.configs import ARCHS
+
+    def run():
+        rows = []
+        for name, cfg in ARCHS.items():
+            scored = autoshard.sweep(cfg, n_chips=256, seq_len=4096,
+                                     global_batch=256)
+            best, s = scored[0]
+            rows.append([name, best.name, f"{s * 1e3:.2f}"])
+        fleet = autoshard.design_fleet(
+            {n: c for n, c in ARCHS.items()}, n_chips=256, seq_len=4096,
+            global_batch=256, max_policies=3)
+        return rows, fleet
+
+    (rows, fleet), us = _timed(run)
+    _write("autoshard_policies", ["arch", "best_policy", "step_ms"], rows)
+    _emit("autoshard_fleet", us,
+          f"{len(fleet['policies'])} fleet policies cover all 10 archs: "
+          + ", ".join(fleet["policies"]))
+
+
+def bench_pipeline_stages():
+    """B&B pipeline staging from the TPU cost model (Alg. II, TPU edition)."""
+    from repro.configs import ARCHS
+    from repro.core.tpu_costmodel import layer_costs
+
+    def run():
+        rows = []
+        for name in ("qwen2.5-32b", "qwen2-vl-72b", "recurrentgemma-9b",
+                     "arctic-480b"):
+            cfg = ARCHS[name]
+            costs = layer_costs(cfg, ShardingPolicy("p", dp=64, tp=4),
+                                seq_len=4096, global_batch=256)
+            lat = [c.time_s for c in costs]
+            for k in (2, 4):
+                p = partition.bb_partition(lat, k)
+                rows.append([name, k, f"{p.speedup:.2f}",
+                             f"{p.pipeline_latency * 1e3:.2f}"])
+        return rows
+
+    rows, us = _timed(run)
+    _write("pipeline_stages", ["arch", "stages", "speedup",
+                               "stage_ms"], rows)
+    s = [float(r[2]) for r in rows if r[1] == 4]
+    _emit("pipeline_stages", us,
+          f"4-stage speedups {min(s):.2f}-{max(s):.2f}")
+
+
+def bench_fig5_6_7(sweeps):
+    """Fig. 5/6/7: energy & latency curves vs GB sizes per array (CSV)."""
+    def run():
+        rows = []
+        for net in ("VGG16", "ResNet50"):
+            sw = sweeps.get(net)
+            if sw is None:
+                return []
+            for a, arr in enumerate(sw.arrays):
+                for pi, ps in enumerate(sw.psum_kb):
+                    for ii, ifm in enumerate(sw.ifmap_kb):
+                        rows.append([net, f"{arr[0]}x{arr[1]}", ps, ifm,
+                                     f"{sw.energy[a, pi, ii]:.6e}",
+                                     f"{sw.latency[a, pi, ii]:.6e}"])
+        return rows
+
+    rows, us = _timed(run)
+    if rows:
+        _write("fig5_6_7_curves", ["network", "array", "gb_psum_kb",
+                                   "gb_ifmap_kb", "energy_pj",
+                                   "latency_ns"], rows)
+        _emit("fig5_6_7_curves", us, f"{len(rows)} curve points")
+
+
+def bench_roofline_table():
+    """§Roofline: aggregate the dry-run JSON cells into the report table."""
+    import json
+
+    def run():
+        rows = []
+        for f in sorted(Path("experiments/dryrun").glob("*__single.json")):
+            r = json.loads(f.read_text())
+            if r.get("status") != "ok":
+                continue
+            rl = r["roofline"]
+            rows.append([
+                r["arch"], r["shape"], f"{r['per_device_gib']:.2f}",
+                f"{rl['compute_s']:.4f}", f"{rl['memory_s']:.4f}",
+                f"{rl['collective_s']:.4f}", rl["bottleneck"],
+                f"{rl['useful_flops_ratio']:.3f}", f"{rl['mfu']:.4f}"])
+        return rows
+
+    rows, us = _timed(run)
+    if rows:
+        _write("roofline_single_pod", ["arch", "shape", "gib_per_dev",
+                                       "compute_s", "memory_s",
+                                       "collective_s", "bottleneck",
+                                       "useful_flops", "mfu"], rows)
+        bn = [r[6] for r in rows]
+        _emit("roofline_single_pod", us,
+              f"{len(rows)} cells; bottlenecks: "
+              f"compute={bn.count('compute')} memory={bn.count('memory')} "
+              f"collective={bn.count('collective')}")
+    else:
+        _emit("roofline_single_pod", us, "no dry-run cells found (run "
+              "python -m repro.launch.dryrun first)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    nets = QUICK_NETS if args.quick else PAPER_NETS
+
+    print("name,us_per_call,derived")
+    sweeps, us = _timed(lambda: _sweeps(nets))
+    _emit("dse_sweep_all", us, f"{len(nets)} networks x 150 configs")
+    bench_table1_2(sweeps)
+    bench_table3(sweeps)
+    bench_table4(sweeps)
+    chip = bench_table5(sweeps)
+    bench_table6(sweeps, chip)
+    bench_table7_8(nets)
+    bench_fig5_6_7(sweeps)
+    bench_autoshard()
+    bench_pipeline_stages()
+    bench_roofline_table()
+
+
+if __name__ == "__main__":
+    main()

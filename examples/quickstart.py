@@ -1,0 +1,36 @@
+"""Quickstart: the paper's pipeline in 40 lines.
+
+1. Simulate a CNN on an array-based accelerator (the Tool, §II).
+2. Sweep the design space and find the near-optimal configs (§III/Table 5).
+3. Distribute the layers over homogeneous cores with Algorithm II (§IV.B).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import accelerator, dse, energymodel, partition, topology
+
+# --- 1. simulate ResNet50 on a [16,16] core ------------------------------
+cfg = accelerator.AcceleratorConfig(array_rows=16, array_cols=16,
+                                    gb_psum_kb=54, gb_ifmap_kb=54)
+layers = topology.get_network("ResNet50")
+report = energymodel.simulate_network(cfg, layers, "ResNet50")
+print(f"ResNet50 on {cfg.label()}:")
+print(f"  energy  {report.energy:.3e} pJ")
+print(f"  latency {report.latency:.3e} ns")
+print(f"  EDP     {report.edp:.3e}")
+
+# --- 2. design-space exploration ------------------------------------------
+sweep = dse.sweep_network(layers, "ResNet50")
+best = sweep.argmin_cell("edp")
+print(f"\n150-point DSE minimum (EDP): {sweep.cell_label(best)}")
+boundary = dse.boundary_configs(sweep, bound=0.05)
+print(f"configs within 5% of optimum: {len(boundary)}")
+mean, mx = dse.edp_spread(sweep)
+print(f"EDP spread over the space: mean +{mean:.0f}%, max +{mx:.0f}% "
+      "(Table 4)")
+
+# --- 3. Algorithm II: distribute layers over 3 homogeneous cores -----------
+p = partition.partition_network(report, 3)
+print(f"\nAlgorithm II over 3 cores: speedup {p.speedup:.2f}x "
+      f"(ideal 3.0x)")
+print("  (l_initial, n_C):", p.table_row())

@@ -1,0 +1,45 @@
+"""End-to-end LM training driver.
+
+Default: a ~10M-parameter dense LM for 300 steps on CPU (minutes).  The
+``--recipe 100m`` flag selects the ~100M-parameter recipe the driver runs on
+real hardware (same code path; the dry-run proves the production-mesh
+sharding compiles).  Checkpoints + fault-tolerant supervisor included — try
+``--inject-failure-at 120`` to watch a mid-run failure replay exactly.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.launch import train as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--recipe", choices=["10m", "100m"], default="10m")
+    ap.add_argument("--inject-failure-at", type=int, default=-1)
+    args = ap.parse_args()
+
+    if args.recipe == "100m":
+        seq, gb = 512, 16
+        argv = ["--arch", "qwen2-0.5b",          # 0.5B at full size; the
+                "--steps", str(args.steps),       # driver shards it on the
+                "--seq-len", str(seq),            # production mesh
+                "--global-batch", str(gb)]
+    else:
+        argv = ["--arch", "stablelm-1.6b", "--smoke",
+                "--steps", str(args.steps), "--seq-len", "128",
+                "--global-batch", "8", "--lr", "3e-3"]
+    if args.inject_failure_at >= 0:
+        argv += ["--inject-failure-at", str(args.inject_failure_at)]
+
+    losses = T.main(argv)
+    print(f"\nfinal loss {losses[-1]:.4f} (from {losses[0]:.4f}) — "
+          f"{'LEARNING' if losses[-1] < 0.8 * losses[0] else 'check setup'}")
+
+
+if __name__ == "__main__":
+    main()

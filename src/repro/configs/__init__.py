@@ -1,0 +1,48 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from .base import ModelConfig
+from . import (arctic_480b, mamba2_2_7b, phi3_mini_3_8b, qwen2_0_5b,
+               qwen2_5_32b, qwen2_moe_a2_7b, qwen2_vl_72b,
+               recurrentgemma_9b, stablelm_1_6b, whisper_base)
+
+ARCHS: Dict[str, ModelConfig] = {
+    "qwen2-moe-a2.7b": qwen2_moe_a2_7b.CONFIG,
+    "arctic-480b": arctic_480b.CONFIG,
+    "qwen2-vl-72b": qwen2_vl_72b.CONFIG,
+    "whisper-base": whisper_base.CONFIG,
+    "mamba2-2.7b": mamba2_2_7b.CONFIG,
+    "recurrentgemma-9b": recurrentgemma_9b.CONFIG,
+    "qwen2.5-32b": qwen2_5_32b.CONFIG,
+    "stablelm-1.6b": stablelm_1_6b.CONFIG,
+    "phi3-mini-3.8b": phi3_mini_3_8b.CONFIG,
+    "qwen2-0.5b": qwen2_0_5b.CONFIG,
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+# The assigned input-shape set (seq_len, global_batch, kind).
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def shape_applicable(arch: str, shape: str) -> tuple[bool, str]:
+    """(runs?, reason).  long_500k only for sub-quadratic archs."""
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention architecture: 524k dense-KV "
+                       "decode is the quadratic regime this shape excludes "
+                       "(see DESIGN.md §Arch-applicability)")
+    return True, ""

@@ -1,0 +1,25 @@
+"""arctic-480b [hf:Snowflake/snowflake-arctic-base].
+
+35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000,
+MoE: 128 experts top-2 + dense residual MLP.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,
+    vocab=32000,
+    head_dim=128,
+    n_experts=128,
+    n_shared_experts=0,
+    top_k=2,
+    moe_dense_residual=True,
+    dense_residual_ff=4864,
+    optimizer="adafactor",   # 480B params: factored second moment to fit HBM
+    microbatches=8,
+)

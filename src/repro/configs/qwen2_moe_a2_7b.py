@@ -1,0 +1,23 @@
+"""qwen2-moe-a2.7b [hf:Qwen/Qwen1.5-MoE-A2.7B].
+
+24L d_model=2048 16H (kv=16) d_ff=1408(routed) vocab=151936,
+MoE: 4 shared + 60 routed experts, top-4.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab=151936,
+    head_dim=128,
+    qkv_bias=True,
+    n_experts=60,
+    n_shared_experts=4,
+    top_k=4,
+    microbatches=2,
+)

@@ -1,0 +1,24 @@
+"""qwen2-vl-72b [arXiv:2409.12191].
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064.
+M-RoPE (3-section rotary over t/h/w); dynamic-resolution vision frontend is
+a stub — ``input_specs`` feeds precomputed patch embeddings.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29568,
+    vocab=152064,
+    head_dim=128,
+    qkv_bias=True,
+    mrope_sections=(16, 24, 24),
+    vision_tokens=1024,
+    optimizer="adafactor",
+    microbatches=16,
+)

@@ -1,0 +1,23 @@
+"""recurrentgemma-9b [arXiv:2402.19427] — RG-LRU + local attention, 1:2.
+
+38L d_model=4096 16H (MQA kv=1) d_ff=12288 vocab=256000, window 2048.
+Block pattern: (recurrent, recurrent, local-attention) repeating.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    d_ff=12288,
+    vocab=256000,
+    head_dim=256,
+    act="gelu",
+    lru_width=4096,
+    attn_window=2048,
+    block_pattern=("rec", "rec", "attn"),
+    microbatches=8,
+)

@@ -1,0 +1,23 @@
+"""whisper-base [arXiv:2212.04356].
+
+Encoder-decoder, 6L+6L, d_model=512 8H d_ff=2048 vocab=51865.
+Conv/mel frontend is a stub — ``input_specs`` feeds precomputed frame
+embeddings (1500 frames = 30 s at 50 Hz).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    n_layers=6,                 # decoder layers
+    n_encoder_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=51968,   # 51865 padded to 128-multiple so 'vocab' shards cleanly
+    head_dim=64,
+    norm="ln",
+    act="gelu",
+    n_audio_frames=1500,
+)

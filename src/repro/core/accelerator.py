@@ -1,0 +1,122 @@
+"""Accelerator configuration for the array-based DNN accelerator simulator.
+
+This mirrors §II.B.1 of the paper ("Tool's inputs"): PE-array geometry, the
+global-buffer partition (GB_ifmap / GB_psum / GB_weight), register-file sizes,
+per-access energy & latency for every memory level, MAC energy/latency, NoC
+delivery bandwidth, and the storage/compute bit width.
+
+The paper calibrates per-access numbers with CACTI and a synthesized MAC; the
+absolute values are therefore foundry/library-specific.  What the paper *does*
+pin down (§II, "the energy cost of the memory hierarchy from register files to
+DRAM is incremental ... DRAM ≈ several tens of RF, GB ≈ 5–10× RF") is the
+*ratio structure*, which is what all of its observations and tables depend on.
+``EnergyTable.cacti_like`` reproduces that structure with a capacity-dependent
+global-buffer model (energy/latency grow ~sqrt(capacity), the usual SRAM
+scaling CACTI reports to first order).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+# The exact sweep values used throughout §III / §IV of the paper.
+GB_SIZES_KB: Tuple[int, ...] = (13, 27, 54, 108, 216)
+ARRAY_SIZES: Tuple[Tuple[int, int], ...] = (
+    (12, 14), (16, 16), (32, 32), (64, 64), (128, 128), (256, 256))
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyTable:
+    """Per-access energy (pJ) and latency (ns) for each memory level.
+
+    All values are *per word* of the configured bit width (the tool counts
+    word-granularity accesses; wider interfaces are modelled by the
+    ``words_per_cycle`` fields on :class:`AcceleratorConfig`).
+    """
+
+    rf_read: float = 1.0           # register file (scratch pad) read
+    rf_write: float = 1.0
+    gb_read: float = 6.0           # global buffer @ reference capacity
+    gb_write: float = 6.0
+    dram_read: float = 200.0       # off-chip DRAM (Eyeriss-published ratio;
+    dram_write: float = 200.0      # the paper says "several tens of" RF)
+    mac: float = 1.0               # one multiply-accumulate
+    pe_idle: float = 0.02          # per-PE per-cycle clock/leakage energy
+    noc_hop: float = 0.05          # per-word-per-hop transfer energy
+
+    rf_t: float = 1.0              # ns per access
+    gb_t: float = 2.0
+    dram_t: float = 20.0
+    mac_t: float = 1.0             # ns per MAC (pipelined PEs: 1/cycle)
+
+    gb_ref_kb: float = 54.0        # capacity at which gb_read/gb_write hold
+
+    def gb_energy(self, size_kb: float) -> float:
+        """Capacity-scaled GB access energy (CACTI first-order ~sqrt(cap))."""
+        return self.gb_read * math.sqrt(max(size_kb, 1.0) / self.gb_ref_kb)
+
+    def gb_latency(self, size_kb: float) -> float:
+        return self.gb_t * math.sqrt(math.sqrt(max(size_kb, 1.0) / self.gb_ref_kb))
+
+
+@dataclasses.dataclass(frozen=True)
+class AcceleratorConfig:
+    """One processing core (Fig. 2): PE array + RF / GB / DRAM hierarchy."""
+
+    array_rows: int = 16
+    array_cols: int = 16
+    gb_ifmap_kb: float = 54.0      # GB partition for input feature maps
+    gb_psum_kb: float = 54.0       # GB partition for partial sums
+    gb_weight_kb: float = 108.0    # assumed "large enough" (§III) — held fixed
+    rf_ifmap_words: int = 12       # per-PE scratch pad shares (Eyeriss-like)
+    rf_weight_words: int = 224
+    rf_psum_words: int = 24
+    bitwidth: int = 16             # storage & compute bit width
+    noc_words_per_cycle: float = 4.0   # GB->array delivery bandwidth (words/cy)
+    dram_words_per_cycle: float = 1.0  # DRAM<->GB interface bandwidth
+    cycle_ns: float = 1.0
+    energy: EnergyTable = dataclasses.field(default_factory=EnergyTable)
+
+    @property
+    def num_pes(self) -> int:
+        return self.array_rows * self.array_cols
+
+    @property
+    def bytes_per_word(self) -> float:
+        return self.bitwidth / 8.0
+
+    def gb_ifmap_words(self) -> int:
+        return int(self.gb_ifmap_kb * 1024 / self.bytes_per_word)
+
+    def gb_psum_words(self) -> int:
+        return int(self.gb_psum_kb * 1024 / self.bytes_per_word)
+
+    def replace(self, **kw) -> "AcceleratorConfig":
+        return dataclasses.replace(self, **kw)
+
+    def label(self) -> str:
+        return (f"[{self.array_rows},{self.array_cols}]"
+                f" psum={self.gb_psum_kb:g}KB ifmap={self.gb_ifmap_kb:g}KB")
+
+
+def config_grid(
+    gb_psum_kb=GB_SIZES_KB,
+    gb_ifmap_kb=GB_SIZES_KB,
+    arrays=ARRAY_SIZES,
+    base: AcceleratorConfig | None = None,
+) -> Dict[Tuple[float, float, Tuple[int, int]], AcceleratorConfig]:
+    """The paper's search space: |psum| × |ifmap| × |array| configs.
+
+    With the default arguments this is the 5 × 5 × 6 = 150-point space of §IV.
+    """
+    base = base or AcceleratorConfig()
+    grid = {}
+    for p in gb_psum_kb:
+        for i in gb_ifmap_kb:
+            for (r, c) in arrays:
+                grid[(p, i, (r, c))] = base.replace(
+                    gb_psum_kb=float(p), gb_ifmap_kb=float(i),
+                    array_rows=r, array_cols=c)
+    return grid

@@ -1,0 +1,111 @@
+"""Sharding-policy DSE — the paper's §III/§IV search, TPU edition.
+
+The paper sweeps (GB_psum, GB_ifmap, array) per network, finds per-network
+near-optimal configurations within a 5% boundary, and groups networks onto a
+few heterogeneous core types (Table 5 → chip design).  Here the search space
+is the *sharding policy* on a fixed fabric: (dp × tp) factorizations of the
+mesh, fsdp depth, microbatch count.  The objective is the cost-model step
+time (EDP-like trade-offs available via the ``metric`` argument: TPU "energy"
+is approximated as chip-seconds, so EDP ∝ step_s²·chips).
+
+``design_fleet`` is the Table-5 analogue: per-architecture candidate sets
+within a boundary of each arch's optimum, covered greedily by a few common
+policies → a fleet runs every model near-optimally with a handful of
+launch configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+from ..configs.base import ModelConfig
+from .tpu_costmodel import ShardingPolicy, step_time
+
+
+def candidate_policies(n_chips: int, max_tp: int = 64,
+                       microbatch_opts: Sequence[int] = (1, 2, 4, 8, 16),
+                       ) -> List[ShardingPolicy]:
+    out = []
+    tp = 1
+    while tp <= min(max_tp, n_chips):
+        dp = n_chips // tp
+        if dp * tp == n_chips:
+            for m in microbatch_opts:
+                for fsdp in {1, dp}:
+                    out.append(ShardingPolicy(
+                        name=f"dp{dp}_tp{tp}_fsdp{fsdp}_m{m}",
+                        dp=dp, tp=tp, fsdp=fsdp, microbatches=m))
+        tp *= 2
+    return out
+
+
+def score(cfg: ModelConfig, pol: ShardingPolicy, *, seq_len: int,
+          global_batch: int, training: bool = True,
+          metric: str = "step") -> float:
+    st = step_time(cfg, pol, seq_len=seq_len, global_batch=global_batch,
+                   training=training)
+    if metric == "step":
+        return st["step_s"]
+    if metric == "edp":                   # chip-seconds × seconds
+        return st["step_s"] ** 2 * pol.chips
+    if metric == "energy":                # ∝ chip-seconds
+        return st["step_s"] * pol.chips
+    raise ValueError(metric)
+
+
+def sweep(cfg: ModelConfig, *, n_chips: int, seq_len: int, global_batch: int,
+          training: bool = True, metric: str = "step"
+          ) -> List[Tuple[ShardingPolicy, float]]:
+    cands = candidate_policies(n_chips)
+    # batch divisibility constraint
+    cands = [p for p in cands
+             if global_batch % (p.dp * p.microbatches // p.dp if p.dp else 1)
+             == 0 and global_batch % p.dp == 0]
+    scored = [(p, score(cfg, p, seq_len=seq_len, global_batch=global_batch,
+                        training=training, metric=metric)) for p in cands]
+    scored.sort(key=lambda x: x[1])
+    return scored
+
+
+def boundary_set(cfg: ModelConfig, *, n_chips: int, seq_len: int,
+                 global_batch: int, bound: float = 0.05,
+                 metric: str = "step") -> List[str]:
+    """Table-5 analogue: policy names within ``bound`` of this arch's best."""
+    scored = sweep(cfg, n_chips=n_chips, seq_len=seq_len,
+                   global_batch=global_batch, metric=metric)
+    best = scored[0][1]
+    return [p.name for p, s in scored if s <= best * (1 + bound)]
+
+
+def design_fleet(archs: Dict[str, ModelConfig], *, n_chips: int,
+                 seq_len: int, global_batch: int, bound: float = 0.05,
+                 max_policies: int = 3, metric: str = "step"
+                 ) -> Dict[str, object]:
+    """Greedy common-policy cover over per-arch 5% boundary sets."""
+    cand = {name: set(boundary_set(c, n_chips=n_chips, seq_len=seq_len,
+                                   global_batch=global_batch, bound=bound,
+                                   metric=metric))
+            for name, c in archs.items()}
+    uncovered = set(cand)
+    chosen: List[str] = []
+    assignment: Dict[str, str] = {}
+    while uncovered and len(chosen) < max_policies:
+        counts: Dict[str, List[str]] = {}
+        for a in uncovered:
+            for p in cand[a]:
+                counts.setdefault(p, []).append(a)
+        if not counts:
+            break
+        pol, archs_cov = max(counts.items(), key=lambda kv: len(kv[1]))
+        chosen.append(pol)
+        for a in archs_cov:
+            assignment[a] = pol
+        uncovered -= set(archs_cov)
+    for a in sorted(uncovered):
+        # fall back: best already-chosen policy for this arch
+        scored = sweep(archs[a], n_chips=n_chips, seq_len=seq_len,
+                       global_batch=global_batch, metric=metric)
+        by_name = {p.name: s for p, s in scored}
+        assignment[a] = min(chosen, key=lambda p: by_name.get(p, 1e30))
+    return dict(policies=chosen, assignment=assignment, candidates=cand)

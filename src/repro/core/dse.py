@@ -1,0 +1,121 @@
+"""Design-space exploration (§III–§IV): sweeps, and the statistics of
+Tables 1–4 (equations (2)–(5)).
+
+The search space is the paper's: GB_psum × GB_ifmap ∈ {13, 27, 54, 108,
+216}KB² and six array sizes — 150 points per network.  The whole space is
+evaluated in one vectorised call to the Tool.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from .accelerator import (ARRAY_SIZES, GB_SIZES_KB, AcceleratorConfig)
+from . import energymodel
+from .topology import Layer
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Energy / latency over the full (array × psum × ifmap) grid."""
+
+    network: str
+    arrays: Tuple[Tuple[int, int], ...]
+    psum_kb: Tuple[int, ...]
+    ifmap_kb: Tuple[int, ...]
+    energy: np.ndarray      # [n_array, n_psum, n_ifmap]
+    latency: np.ndarray     # [n_array, n_psum, n_ifmap]
+
+    @property
+    def edp(self) -> np.ndarray:
+        return self.energy * self.latency
+
+    def argmin_cell(self, metric: str = "edp") -> Tuple[int, int, int]:
+        arr = getattr(self, metric) if metric != "edp" else self.edp
+        return tuple(np.unravel_index(int(np.argmin(arr)), arr.shape))
+
+    def cell_label(self, cell: Tuple[int, int, int]) -> str:
+        a, p, i = cell
+        return (f"({self.psum_kb[p]}/{self.ifmap_kb[i]}, "
+                f"[{self.arrays[a][0]},{self.arrays[a][1]}])")
+
+
+def sweep_network(layers: Sequence[Layer], network: str = "net",
+                  arrays: Sequence[Tuple[int, int]] = ARRAY_SIZES,
+                  psum_kb: Sequence[int] = GB_SIZES_KB,
+                  ifmap_kb: Sequence[int] = GB_SIZES_KB,
+                  base: AcceleratorConfig | None = None,
+                  use_jax: bool = False) -> SweepResult:
+    base = base or AcceleratorConfig()
+    cfgs: List[AcceleratorConfig] = []
+    for (r, c) in arrays:
+        for p in psum_kb:
+            for i in ifmap_kb:
+                cfgs.append(base.replace(array_rows=r, array_cols=c,
+                                         gb_psum_kb=float(p),
+                                         gb_ifmap_kb=float(i)))
+    e, t = energymodel.simulate_grid(cfgs, layers, use_jax=use_jax)
+    shape = (len(arrays), len(psum_kb), len(ifmap_kb))
+    return SweepResult(network=network, arrays=tuple(arrays),
+                       psum_kb=tuple(psum_kb), ifmap_kb=tuple(ifmap_kb),
+                       energy=e.reshape(shape), latency=t.reshape(shape))
+
+
+# ---------------------------------------------------------------------------
+# Tables 1–2: sweep one GB partition with the other held at the 25-point
+# minimum's value (equations (2) and (3)).
+# ---------------------------------------------------------------------------
+
+def mu_delta(sweep: SweepResult, swept: str = "ifmap"
+             ) -> Dict[Tuple[int, int], Tuple[float, float]]:
+    """μ^p_min and δ^max_min per array size, for the swept partition.
+
+    ``swept='ifmap'`` reproduces Table 1 (GB_psum held at the value of the
+    per-array minimum); ``swept='psum'`` reproduces Table 2.
+    """
+    out = {}
+    for a, arr in enumerate(sweep.arrays):
+        plane = sweep.energy[a]               # [psum, ifmap]
+        pi_min = np.unravel_index(int(np.argmin(plane)), plane.shape)
+        if swept == "ifmap":
+            line = plane[pi_min[0], :]
+        else:
+            line = plane[:, pi_min[1]]
+        e_min = float(line.min())
+        others = line[line != line.min()] if line.size > 1 else line
+        n = line.size
+        mu = float(((line - e_min) / e_min * 100.0).sum() / (n - 1))
+        delta = float((line.max() - e_min) / e_min * 100.0)
+        out[arr] = (mu, delta)
+    return out
+
+
+def delta_whole_space(sweep: SweepResult) -> Dict[Tuple[int, int], float]:
+    """Table 3: Δ^max_min over the 25 (psum × ifmap) points per array."""
+    out = {}
+    for a, arr in enumerate(sweep.arrays):
+        plane = sweep.energy[a]
+        out[arr] = float((plane.max() - plane.min()) / plane.min() * 100.0)
+    return out
+
+
+def edp_spread(sweep: SweepResult) -> Tuple[float, float]:
+    """Table 4: mean and max of (EDP_i − EDP_min)/EDP_min over all points."""
+    edp = sweep.edp.ravel()
+    edp_min = float(edp.min())
+    rel = (edp - edp_min) / edp_min * 100.0
+    return float(rel.mean()), float(rel.max())
+
+
+def boundary_configs(sweep: SweepResult, bound: float = 0.05,
+                     metric: str = "edp") -> List[Tuple[int, int, int]]:
+    """Table 5: all cells within ``bound`` of the minimum (min cell first)."""
+    arr = sweep.edp if metric == "edp" else getattr(sweep, metric)
+    mn = float(arr.min())
+    cells = [tuple(map(int, c))
+             for c in np.argwhere(arr <= mn * (1.0 + bound))]
+    cells.sort(key=lambda c: float(arr[c]))
+    return cells

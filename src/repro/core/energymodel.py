@@ -1,0 +1,319 @@
+"""The Tool (§II): first-order energy & latency estimation of an array-based
+accelerator executing a network under the row-stationary dataflow.
+
+Energy is cumulative (§II.A.1): every data movement at every hierarchy level
+(eq. (1)) and every MAC is counted.  Latency (§II.A.2) follows the paper's
+controller assumption — *"processing does not start unless the last processing
+element responsible for the pass receives its data"* (Fig. 4) — so per-pass
+time is delivery + compute + writeback, serialised with the DRAM interface
+time (latency is **not** cumulative across hierarchy levels in general, but
+this controller gives the serial composition the paper describes).
+
+The two mechanisms behind the paper's Observations are modelled explicitly:
+
+* **psum spill** (Obs. 1/3): with ``n_c`` channel-accumulation rounds, the
+  per-pass psum working set is read-modify-written ``n_c−1`` times.  The
+  fraction exceeding ``GB_psum`` travels to off-chip DRAM instead of the
+  global buffer.
+* **ifmap re-fetch** (Obs. 2/4): when the per-pass ifmap working set exceeds
+  ``GB_ifmap`` the block cannot persist across the ``n_m`` filter blocks and
+  is re-read from DRAM for each of them.
+
+Global-buffer access energy/latency scales with the configured partition
+capacity (CACTI-like √capacity), so oversizing a buffer costs energy — the
+right-hand tails of Fig. 5/6.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Sequence
+
+import numpy as np
+
+from .accelerator import AcceleratorConfig
+from . import rs_mapping
+from .topology import Layer
+
+_POOL_OP_ENERGY = 0.2      # a pooling compare/add relative to a MAC
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerReport:
+    """Per-layer outputs of the Tool (§II.B.2)."""
+
+    name: str
+    energy: float            # pJ
+    latency: float           # ns
+    macs: float
+    dram_reads: float
+    dram_writes: float
+    gb_reads: float
+    gb_writes: float
+    rf_accesses: float
+    utilization: float       # active PEs / total PEs (compute-time weighted)
+    mem_time: float          # ns spent on the memory hierarchy
+    array_time: float        # ns spent computing in the array
+    psum_spilled: float      # words of psum traffic that went to DRAM
+    ifmap_refetched: float   # extra ifmap words re-read from DRAM
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkReport:
+    name: str
+    energy: float
+    latency: float
+    layers: List[LayerReport]
+
+    @property
+    def edp(self) -> float:
+        return self.energy * self.latency
+
+    @property
+    def layer_latencies(self) -> np.ndarray:
+        return np.array([l.latency for l in self.layers])
+
+    @property
+    def layer_energies(self) -> np.ndarray:
+        return np.array([l.energy for l in self.layers])
+
+
+def _counts(xp, cfg: Dict[str, Any], lay: Dict[str, Any]) -> Dict[str, Any]:
+    """Access counts + time terms; broadcast over (configs × layers)."""
+    mp = rs_mapping.mapping(
+        xp,
+        rows=cfg["rows"], cols=cfg["cols"],
+        c_ch=lay["c_ch"], m=lay["m"], ky=lay["ky"], kx=lay["kx"],
+        stride=lay["stride"], ix=lay["ix"], iy=lay["iy"],
+        oy=lay["oy"], ox=lay["ox"],
+        is_acc=lay["is_acc"], is_dw=lay["is_dw"], is_pool=lay["is_pool"],
+        gb_ifmap_words=cfg["gb_ifmap_words"],
+        rf_ifmap_words=cfg["rf_ifmap_words"],
+        rf_weight_words=cfg["rf_weight_words"],
+        rf_psum_words=cfg["rf_psum_words"])
+
+    n_c, n_m, n_oy = mp["n_c"], mp["n_m"], mp["n_oy"]
+    w_psum = mp["w_psum"]
+    ky_serial = mp["ky_serial"]
+
+    ifmap_vol = lay["ifmap_words"]
+    ofmap = lay["ofmap_words"]
+    weights = lay["weight_words"]
+    macs = lay["macs"]
+    is_pool = lay["is_pool"]
+    pool_ops = lay["c_ch"] * lay["ox"] * lay["oy"] * lay["kx"] * lay["ky"]
+
+    # ---- ifmap traffic (Observation 2) -------------------------------------
+    # Channel rounds partition the channel set, so every ifmap word streams
+    # DRAM→GB exactly once (compulsory traffic — the Eyeriss-RS reuse ideal).
+    # GB_ifmap capacity acts through the mapping instead: fewer channels held
+    # per round ⇒ more accumulation rounds ⇒ more psum RMW traffic below.
+    # Within a round the resident channel planes are re-delivered GB→array
+    # for each of the n_m filter blocks (cheap on-chip reads).
+    ifmap_dram_reads = ifmap_vol * xp.ones_like(n_m)
+    ifmap_refetched = ifmap_vol * 0.0
+    gb_ifmap_writes = ifmap_dram_reads                 # DRAM → GB
+    gb_ifmap_reads = ifmap_vol * xp.where(lay["is_acc"], n_m, 1)
+
+    # ---- weight traffic ---------------------------------------------------
+    # GB_weight is provisioned for the in-flight working set (§III); weights
+    # stream from DRAM once, land in the PE weight RFs once per use phase and
+    # are reused across the spatial loop from there.
+    wt_dram_reads = weights
+    gb_wt_writes = weights
+    gb_wt_reads = weights * ky_serial
+
+    # ---- psum traffic (Observation 1) --------------------------------------
+    # The psum planes of the in-flight filter block (w_psum = cap_m·Ox·Oy
+    # words) are read-modify-written on every channel-accumulation round
+    # after the first; the slice exceeding GB_psum makes the round trip to
+    # off-chip DRAM instead (write + re-read, §III).
+    inter_rounds = xp.maximum(n_c * ky_serial - 1, 0)
+    overflow = xp.maximum(w_psum - cfg["gb_psum_words"], 0.0)
+    held = xp.minimum(w_psum, cfg["gb_psum_words"] * xp.ones_like(w_psum))
+    psum_dram_writes = inter_rounds * overflow
+    psum_dram_reads = psum_dram_writes
+    psum_gb_inter = inter_rounds * held
+    gb_psum_writes = psum_gb_inter + ofmap             # + final results
+    gb_psum_reads = psum_gb_inter + ofmap              # reload + writeback
+    ofmap_dram_writes = ofmap
+
+    # ---- totals -------------------------------------------------------------
+    dram_reads = ifmap_dram_reads + wt_dram_reads + psum_dram_reads
+    dram_writes = ofmap_dram_writes + psum_dram_writes
+    gb_reads = gb_ifmap_reads + gb_wt_reads + gb_psum_reads
+    gb_writes = gb_ifmap_writes + gb_wt_writes + gb_psum_writes
+
+    words_into_array = gb_ifmap_reads + gb_wt_reads + psum_gb_inter + psum_dram_reads
+    words_out_of_array = gb_psum_writes + psum_dram_writes
+
+    ops = xp.where(is_pool, pool_ops, macs)
+    rf_accesses = (4.0 * ops) + words_into_array + words_out_of_array
+
+    return dict(
+        mp=mp, ops=ops, macs=macs, pool_ops=pool_ops,
+        dram_reads=dram_reads, dram_writes=dram_writes,
+        gb_ifmap_reads=gb_ifmap_reads, gb_ifmap_writes=gb_ifmap_writes,
+        gb_wt_reads=gb_wt_reads, gb_wt_writes=gb_wt_writes,
+        gb_psum_reads=gb_psum_reads, gb_psum_writes=gb_psum_writes,
+        gb_reads=gb_reads, gb_writes=gb_writes,
+        rf_accesses=rf_accesses,
+        words_into_array=words_into_array,
+        words_out_of_array=words_out_of_array,
+        psum_spilled=psum_dram_writes + psum_dram_reads,
+        ifmap_refetched=ifmap_refetched,
+    )
+
+
+def _energy_latency(xp, cfg: Dict[str, Any], lay: Dict[str, Any],
+                    ct: Dict[str, Any]) -> Dict[str, Any]:
+    e = cfg  # per-access constants pre-flattened into the cfg dict
+    mp = ct["mp"]
+
+    gb_e_if, gb_e_ps, gb_e_wt = e["gb_e_ifmap"], e["gb_e_psum"], e["gb_e_wt"]
+    mac_e = xp.where(lay["is_pool"], e["e_mac"] * _POOL_OP_ENERGY, e["e_mac"])
+
+    noc_hops = (cfg["rows"] + cfg["cols"]) / 2.0
+    # idle PEs still burn clock/leakage power for the whole layer occupancy
+    idle_cycles = (cfg["rows"] * cfg["cols"] - mp["active_pes"]) \
+        * ct["ops"] / mp["active_pes"]
+    energy = (
+        ct["dram_reads"] * e["e_dram_r"] + ct["dram_writes"] * e["e_dram_w"]
+        + (ct["gb_ifmap_reads"] + ct["gb_ifmap_writes"]) * gb_e_if
+        + (ct["gb_psum_reads"] + ct["gb_psum_writes"]) * gb_e_ps
+        + (ct["gb_wt_reads"] + ct["gb_wt_writes"]) * gb_e_wt
+        + ct["rf_accesses"] * e["e_rf"]
+        + ct["ops"] * mac_e
+        + idle_cycles * e["e_pe_idle"]
+        + (ct["words_into_array"] + ct["words_out_of_array"])
+        * e["e_noc_hop"] * noc_hops
+    )
+
+    # Latency: GB→array delivery is paced by the NoC *and* by the access time
+    # of the partition it drains (bigger buffer ⇒ slower access, Fig. 9).
+    lat_if = e["gb_t_ifmap"] / e["gb_t_base"]
+    lat_ps = e["gb_t_psum"] / e["gb_t_base"]
+    delivery_cy = (
+        (ct["gb_ifmap_reads"] + ct["gb_wt_reads"]) * lat_if
+        + (ct["gb_psum_reads"]) * lat_ps
+    ) / e["noc_wpc"]
+    writeback_cy = ct["words_out_of_array"] * lat_ps / e["noc_wpc"]
+    compute_cy = ct["ops"] / mp["active_pes"] * e["mac_t_cy"]
+    array_cy = delivery_cy + compute_cy + writeback_cy
+
+    dram_words = ct["dram_reads"] + ct["dram_writes"]
+    dram_cy = dram_words / e["dram_wpc"]
+
+    array_time = array_cy * e["cycle_ns"]
+    mem_time = dram_cy * e["cycle_ns"] + (delivery_cy + writeback_cy) * e["cycle_ns"]
+    latency = (array_cy + dram_cy) * e["cycle_ns"]
+
+    total_pes = cfg["rows"] * cfg["cols"]
+    utilization = xp.where(
+        array_cy > 0, (compute_cy / xp.maximum(array_cy, 1e-30))
+        * mp["active_pes"] / total_pes, 0.0)
+
+    return dict(energy=energy, latency=latency, array_time=array_time,
+                mem_time=mem_time, utilization=utilization)
+
+
+def _cfg_struct(xp, cfg: AcceleratorConfig) -> Dict[str, Any]:
+    et = cfg.energy
+    return dict(
+        rows=xp.asarray(cfg.array_rows), cols=xp.asarray(cfg.array_cols),
+        gb_ifmap_words=xp.asarray(cfg.gb_ifmap_words()),
+        gb_psum_words=xp.asarray(cfg.gb_psum_words()),
+        rf_ifmap_words=xp.asarray(cfg.rf_ifmap_words),
+        rf_weight_words=xp.asarray(cfg.rf_weight_words),
+        rf_psum_words=xp.asarray(cfg.rf_psum_words),
+        e_rf=xp.asarray(et.rf_read),
+        e_dram_r=xp.asarray(et.dram_read), e_dram_w=xp.asarray(et.dram_write),
+        e_mac=xp.asarray(et.mac), e_noc_hop=xp.asarray(et.noc_hop),
+        e_pe_idle=xp.asarray(et.pe_idle),
+        gb_e_ifmap=xp.asarray(et.gb_energy(cfg.gb_ifmap_kb)),
+        gb_e_psum=xp.asarray(et.gb_energy(cfg.gb_psum_kb)),
+        gb_e_wt=xp.asarray(et.gb_energy(cfg.gb_weight_kb)),
+        gb_t_ifmap=xp.asarray(et.gb_latency(cfg.gb_ifmap_kb)),
+        gb_t_psum=xp.asarray(et.gb_latency(cfg.gb_psum_kb)),
+        gb_t_base=xp.asarray(et.gb_t),
+        noc_wpc=xp.asarray(cfg.noc_words_per_cycle),
+        dram_wpc=xp.asarray(cfg.dram_words_per_cycle),
+        mac_t_cy=xp.asarray(et.mac_t / cfg.cycle_ns),
+        cycle_ns=xp.asarray(cfg.cycle_ns),
+    )
+
+
+def simulate_network(cfg: AcceleratorConfig, layers: Sequence[Layer],
+                     name: str = "net") -> NetworkReport:
+    """Scalar (per-network, per-config) entry point → full layer reports."""
+    xp = np
+    compute = [l for l in layers if l.kind != "input"]
+    lay = rs_mapping.layer_struct(xp, compute)
+    lay = {k: np.asarray(v, dtype=np.float64) for k, v in lay.items()}
+    cfgs = _cfg_struct(xp, cfg)
+    cfgs = {k: v.astype(np.float64) for k, v in cfgs.items()}
+
+    ct = _counts(xp, cfgs, lay)
+    el = _energy_latency(xp, cfgs, lay, ct)
+
+    reports = []
+    for i, l in enumerate(compute):
+        reports.append(LayerReport(
+            name=l.name,
+            energy=float(el["energy"][i]), latency=float(el["latency"][i]),
+            macs=float(lay["macs"][i]),
+            dram_reads=float(ct["dram_reads"][i]),
+            dram_writes=float(ct["dram_writes"][i]),
+            gb_reads=float(ct["gb_reads"][i]), gb_writes=float(ct["gb_writes"][i]),
+            rf_accesses=float(ct["rf_accesses"][i]),
+            utilization=float(el["utilization"][i]),
+            mem_time=float(el["mem_time"][i]),
+            array_time=float(el["array_time"][i]),
+            psum_spilled=float(ct["psum_spilled"][i]),
+            ifmap_refetched=float(ct["ifmap_refetched"][i]),
+        ))
+    return NetworkReport(
+        name=name,
+        energy=float(el["energy"].sum()),
+        latency=float(el["latency"].sum()),
+        layers=reports)
+
+
+def simulate_grid(configs: Sequence[AcceleratorConfig],
+                  layers: Sequence[Layer], use_jax: bool = False):
+    """Vectorised sweep: returns (energy, latency) arrays of shape [n_cfg].
+
+    ``use_jax=True`` evaluates the whole design space inside one jitted
+    program under 64-bit mode (counts exceed float32's integer range).
+    """
+    compute = [l for l in layers if l.kind != "input"]
+
+    if use_jax:
+        import jax
+        import jax.numpy as jnp
+        with jax.enable_x64(True):
+            lay = rs_mapping.layer_struct(np, compute)
+            lay = {k: jnp.asarray(np.asarray(v, dtype=np.float64))[None, :]
+                   for k, v in lay.items()}
+            cfg_rows = [_cfg_struct(np, c) for c in configs]
+            cfgs = {k: jnp.asarray(
+                np.stack([np.float64(c[k]) for c in cfg_rows]))[:, None]
+                for k in cfg_rows[0]}
+
+            @jax.jit
+            def run(cfgs, lay):
+                ct = _counts(jnp, cfgs, lay)
+                el = _energy_latency(jnp, cfgs, lay, ct)
+                return el["energy"].sum(-1), el["latency"].sum(-1)
+
+            e, t = run(cfgs, lay)
+            return np.asarray(e), np.asarray(t)
+
+    lay = rs_mapping.layer_struct(np, compute)
+    lay = {k: np.asarray(v, dtype=np.float64)[None, :] for k, v in lay.items()}
+    cfg_rows = [_cfg_struct(np, c) for c in configs]
+    cfgs = {k: np.stack([np.float64(c[k]) for c in cfg_rows])[:, None]
+            for k in cfg_rows[0]}
+    ct = _counts(np, cfgs, lay)
+    el = _energy_latency(np, cfgs, lay, ct)
+    return el["energy"].sum(-1), el["latency"].sum(-1)

@@ -1,0 +1,163 @@
+"""Model parallelism on homogeneous cores (§IV.B, Algorithm II).
+
+A network's layers are distributed *contiguously* over k identical cores
+forming a processing pipeline through off-chip DRAM (Fig. 11).  The pipeline
+latency is the maximum per-core latency; the speedup of eq. (6) is
+
+    speedup = sum(latencies) / max(core latency).
+
+``bb_partition`` is the paper's branch-and-bound: walk layers accumulating
+latency until the running sum crosses the balanced average, branch on
+including/excluding the crossing layer, and bound any branch whose current
+core latency already exceeds the best pipeline latency found so far.
+
+``dp_partition`` is an exact oracle (classic linear-partition DP) and
+``brute_force_partition`` enumerates all splits — both used by the tests to
+verify the B&B lands on (near-)optimal pipelines, and by the TPU adaptation
+(`parallel/pipeline.py`) to place transformer layers on pipeline stages.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """Contiguous layer → core assignment."""
+
+    boundaries: Tuple[int, ...]   # start index of each core's slice
+    loads: Tuple[float, ...]      # per-core total latency
+    pipeline_latency: float       # max(loads)
+    speedup: float                # eq. (6)
+    n_layers: int = 0
+
+    @property
+    def n_cores(self) -> int:
+        return len(self.loads)
+
+    def table_row(self) -> List[Tuple[int, int]]:
+        """(l_initial, n_C) tuples, 1-indexed like Tables 7–8."""
+        bounds = list(self.boundaries) + [self.n_layers]
+        return [(bounds[i] + 1, bounds[i + 1] - bounds[i])
+                for i in range(len(self.boundaries))]
+
+
+def _mk_partition(lat: Sequence[float], bounds: Sequence[int]) -> Partition:
+    lat = list(lat)
+    total = float(sum(lat))
+    bounds = list(bounds)
+    loads = []
+    for i, start in enumerate(bounds):
+        end = bounds[i + 1] if i + 1 < len(bounds) else len(lat)
+        loads.append(float(sum(lat[start:end])))
+    pipe = max(loads)
+    return Partition(boundaries=tuple(bounds), loads=tuple(loads),
+                     pipeline_latency=pipe,
+                     speedup=total / pipe if pipe > 0 else float("inf"),
+                     n_layers=len(lat))
+
+
+def bb_partition(latencies: Sequence[float], n_cores: int) -> Partition:
+    """Algorithm II: branch-and-bound layer distribution."""
+    lat = [float(x) for x in latencies]
+    n = len(lat)
+    if n_cores <= 1 or n <= n_cores:
+        bounds = list(range(min(n, n_cores)))
+        return _mk_partition(lat, bounds)
+
+    total = sum(lat)
+    avg = total / n_cores
+    suffix = np.concatenate([np.cumsum(lat[::-1])[::-1], [0.0]])
+
+    best = {"pipe": float("inf"), "bounds": None}
+
+    def rec(i: int, cores_left: int, cur_max: float, bounds: List[int]):
+        # Assign layers [i:] to the remaining cores; bounds holds the start
+        # index of every core opened so far.
+        if cur_max >= best["pipe"]:
+            return                      # bound condition
+        if cores_left == 1:
+            seg = float(suffix[i])
+            pipe = max(cur_max, seg)
+            if pipe < best["pipe"]:
+                best["pipe"] = pipe
+                best["bounds"] = bounds + [i]
+            return
+        # accumulate from layer i until the running sum crosses the average
+        s = 0.0
+        j = i
+        while j < n - (cores_left - 1) and s + lat[j] < avg:
+            s += lat[j]
+            j += 1
+        j = min(j, n - (cores_left - 1))
+        # branch 1: include the crossing layer (segment sum ≥ avg)
+        hi = min(j + 1, n - (cores_left - 1))
+        s_hi = float(sum(lat[i:hi]))
+        rec(hi, cores_left - 1, max(cur_max, s_hi), bounds + [i])
+        # branch 2: exclude it (segment sum < avg)
+        if j > i and j != hi:
+            s_lo = float(sum(lat[i:j]))
+            rec(j, cores_left - 1, max(cur_max, s_lo), bounds + [i])
+
+    rec(0, n_cores, 0.0, [])
+    assert best["bounds"] is not None
+    return _mk_partition(lat, best["bounds"])
+
+
+def dp_partition(latencies: Sequence[float], n_cores: int) -> Partition:
+    """Exact minimal-bottleneck contiguous partition (DP oracle)."""
+    lat = [float(x) for x in latencies]
+    n = len(lat)
+    k = min(n_cores, n) if n else 1
+    prefix = np.concatenate([[0.0], np.cumsum(lat)])
+
+    # dp[c][i] = minimal pipeline latency splitting lat[:i] into c cores
+    NEG = float("inf")
+    dp = np.full((k + 1, n + 1), NEG)
+    cut = np.zeros((k + 1, n + 1), dtype=int)
+    dp[0][0] = 0.0
+    for c in range(1, k + 1):
+        for i in range(c, n + 1):
+            bestv, bestj = NEG, c - 1
+            for j in range(c - 1, i):
+                v = max(dp[c - 1][j], prefix[i] - prefix[j])
+                if v < bestv:
+                    bestv, bestj = v, j
+            dp[c][i] = bestv
+            cut[c][i] = bestj
+    bounds: List[int] = []
+    i = n
+    for c in range(k, 0, -1):
+        j = int(cut[c][i])
+        bounds.append(j)
+        i = j
+    bounds.reverse()
+    return _mk_partition(lat, bounds)
+
+
+def brute_force_partition(latencies: Sequence[float], n_cores: int
+                          ) -> Partition:
+    """Enumerate every contiguous split (tests only; exponential)."""
+    lat = [float(x) for x in latencies]
+    n = len(lat)
+    k = min(n_cores, n)
+    best = None
+    for cuts in itertools.combinations(range(1, n), k - 1):
+        bounds = [0] + list(cuts)
+        p = _mk_partition(lat, bounds)
+        if best is None or p.pipeline_latency < best.pipeline_latency:
+            best = p
+    return best if best is not None else _mk_partition(lat, [0])
+
+
+def partition_network(report, n_cores: int, method: str = "bb") -> Partition:
+    """Distribute a simulated network (NetworkReport) across cores."""
+    lat = report.layer_latencies
+    fn = {"bb": bb_partition, "dp": dp_partition,
+          "brute": brute_force_partition}[method]
+    return fn(lat, n_cores)

@@ -1,0 +1,210 @@
+"""Analytic per-layer TPU cost model — the paper's Tool, re-targeted.
+
+The paper's simulator counts data movement through RF→GB→DRAM and MACs per
+layer under a fixed dataflow; here the hierarchy is VMEM→HBM→ICI and the
+"dataflow" is the sharding policy.  For each transformer-family layer we
+produce the same three quantities the roofline consumes:
+
+    flops_fwd       — dense matmul work per layer (per chip, after sharding)
+    hbm_bytes       — parameter + activation traffic per layer
+    ici_bytes       — collective payload implied by the sharding policy
+
+These per-layer latency estimates feed (a) the B&B pipeline-stage
+partitioner (exactly the role the Tool's per-layer latencies play in the
+paper's Algorithm II), and (b) the sharding-policy DSE in ``autoshard.py``
+(the analogue of the paper's GB/array design-space sweep).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from ..configs.base import ModelConfig
+from ..launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """How the model is laid out on the mesh (the DSE decision variables)."""
+
+    name: str
+    dp: int = 1                 # data-parallel ways (batch)
+    tp: int = 1                 # tensor-parallel ways (mlp/heads/experts)
+    fsdp: int = 1               # parameter-sharding ways on top of dp
+    microbatches: int = 1
+    remat: bool = True
+    seq_shard: int = 1          # sequence parallelism ways (long context)
+
+    @property
+    def chips(self) -> int:
+        return self.dp * self.tp
+
+
+@dataclasses.dataclass
+class LayerCost:
+    name: str
+    flops: float                # per chip
+    hbm_bytes: float            # per chip
+    ici_bytes: float            # per chip
+
+    @property
+    def time_s(self) -> float:
+        return max(self.flops / PEAK_FLOPS, self.hbm_bytes / HBM_BW,
+                   self.ici_bytes / ICI_BW)
+
+
+def _attn_layer(cfg: ModelConfig, pol: ShardingPolicy, tokens_per_chip: int,
+                seq: int, bytes_per=2) -> Tuple[float, float, float]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    t = tokens_per_chip
+    proj = 2.0 * t * d * (h * hd + 2 * kv * hd + h * hd) / pol.tp
+    window = cfg.attn_window or seq
+    eff = min(seq, window)
+    sdpa = 2.0 * t * eff * hd * (h / pol.tp) * 2 / 2   # causal halves
+    params = d * (2 * h * hd + 2 * kv * hd) * bytes_per / (pol.tp * pol.fsdp)
+    act = t * d * bytes_per * 4
+    # fsdp all-gather of the layer's params before use
+    ici = params * (pol.fsdp - 1) / max(pol.fsdp, 1) if pol.fsdp > 1 else 0.0
+    # tp: all-reduce of the attention output partial sums
+    if pol.tp > 1:
+        ici += 2.0 * t * d * bytes_per
+    return proj + sdpa, params + act, ici
+
+
+def _mlp_layer(cfg: ModelConfig, pol: ShardingPolicy, tokens_per_chip: int,
+               d_ff: int, bytes_per=2) -> Tuple[float, float, float]:
+    d = cfg.d_model
+    t = tokens_per_chip
+    mult = 3 if cfg.act == "swiglu" else 2
+    flops = 2.0 * t * d * d_ff * mult / pol.tp
+    params = mult * d * d_ff * bytes_per / (pol.tp * pol.fsdp)
+    act = t * (d + d_ff / pol.tp) * bytes_per * 2
+    ici = params * (pol.fsdp - 1) / max(pol.fsdp, 1) if pol.fsdp > 1 else 0.0
+    if pol.tp > 1:
+        ici += 2.0 * t * d * bytes_per
+    return flops, params + act, ici
+
+
+def _moe_layer(cfg: ModelConfig, pol: ShardingPolicy, tokens_per_chip: int,
+               bytes_per=2) -> Tuple[float, float, float]:
+    d, f = cfg.d_model, cfg.d_ff
+    t = tokens_per_chip
+    mult = 3
+    # routed experts: top_k × expert mlp on each token; experts sharded tp-way
+    flops = 2.0 * t * d * f * mult * cfg.top_k / 1.0
+    flops += 2.0 * t * d * cfg.n_experts            # router
+    if cfg.n_shared_experts:
+        flops += 2.0 * t * d * f * cfg.n_shared_experts * mult
+    if cfg.moe_dense_residual:
+        flops += 2.0 * t * d * cfg.dense_residual_ff * mult
+    flops /= pol.tp
+    params = (cfg.n_experts + cfg.n_shared_experts) * mult * d * f \
+        * bytes_per / (pol.tp * pol.fsdp)
+    if cfg.moe_dense_residual:
+        params += mult * d * cfg.dense_residual_ff * bytes_per / pol.fsdp
+    act = t * d * bytes_per * (2 + cfg.top_k)
+    # expert-parallel dispatch/combine ≈ all-to-all of top_k token copies
+    ici = 2.0 * t * cfg.top_k * d * bytes_per * (pol.tp - 1) / max(pol.tp, 1)
+    ici += params * (pol.fsdp - 1) / max(pol.fsdp, 1) if pol.fsdp > 1 else 0.0
+    return flops, params + act, ici
+
+
+def _ssm_layer(cfg: ModelConfig, pol: ShardingPolicy, tokens_per_chip: int,
+               bytes_per=2) -> Tuple[float, float, float]:
+    d = cfg.d_model
+    di = d * cfg.ssm_expand
+    n, q = cfg.ssm_state, cfg.ssm_chunk
+    t = tokens_per_chip
+    proj = 2.0 * t * d * (2 * di + 2 * cfg.ssm_groups * n + cfg.ssm_heads) \
+        + 2.0 * t * di * d
+    ssd = (2.0 * t * q * n * cfg.ssm_groups          # CB^T within chunk
+           + 2.0 * t * q * di                        # L·X
+           + 4.0 * t * n * di)                       # states in/out
+    flops = (proj + ssd) / pol.tp
+    params = (d * (2 * di + 2 * cfg.ssm_groups * n + cfg.ssm_heads)
+              + di * d) * bytes_per / (pol.tp * pol.fsdp)
+    act = t * (d + di) * bytes_per * 2
+    ici = params * (pol.fsdp - 1) / max(pol.fsdp, 1) if pol.fsdp > 1 else 0.0
+    if pol.tp > 1:
+        ici += 2.0 * t * d * bytes_per
+    return flops, params + act, ici
+
+
+def _lru_layer(cfg: ModelConfig, pol: ShardingPolicy, tokens_per_chip: int,
+               bytes_per=2) -> Tuple[float, float, float]:
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    t = tokens_per_chip
+    flops = (2.0 * t * d * w * 2 + 2.0 * t * w * w * 2
+             + 2.0 * t * w * d) / pol.tp
+    params = (d * w * 2 + w * w * 2 + w * d) * bytes_per \
+        / (pol.tp * pol.fsdp)
+    act = t * (d + w) * bytes_per * 2
+    ici = params * (pol.fsdp - 1) / max(pol.fsdp, 1) if pol.fsdp > 1 else 0.0
+    if pol.tp > 1:
+        ici += 2.0 * t * d * bytes_per
+    return flops, params + act, ici
+
+
+def layer_costs(cfg: ModelConfig, pol: ShardingPolicy, *, seq_len: int,
+                global_batch: int, training: bool = True
+                ) -> List[LayerCost]:
+    """Per-layer cost vector — the Tool's per-layer report, TPU edition.
+
+    Training multiplies flops by 3 (fwd+bwd) + 1 more refwd under remat,
+    and adds the DP gradient all-reduce amortised over layers.
+    """
+    tokens_per_chip = seq_len * global_batch // pol.dp
+    mult = (4.0 if pol.remat else 3.0) if training else 1.0
+    out: List[LayerCost] = []
+
+    def add(name, fhi):
+        f, h, i = fhi
+        grad_ar = 0.0
+        if training and pol.dp > 1:
+            # ring all-reduce of this layer's grads across dp
+            param_bytes = h  # params dominate h's param share; first order
+            grad_ar = 2.0 * param_bytes
+        out.append(LayerCost(name, f * mult, h * (2.0 if training else 1.0),
+                             i * (2.0 if training else 1.0) + grad_ar))
+
+    for li in range(cfg.n_layers):
+        if cfg.family == "ssm":
+            add(f"ssm{li}", _ssm_layer(cfg, pol, tokens_per_chip))
+            continue
+        if cfg.family == "hybrid":
+            kind = cfg.block_pattern[li % len(cfg.block_pattern)]
+            if kind == "rec":
+                add(f"rec{li}", _lru_layer(cfg, pol, tokens_per_chip))
+            else:
+                add(f"attn{li}", _attn_layer(cfg, pol, tokens_per_chip,
+                                             seq_len))
+            add(f"mlp{li}", _mlp_layer(cfg, pol, tokens_per_chip, cfg.d_ff))
+            continue
+        add(f"attn{li}", _attn_layer(cfg, pol, tokens_per_chip, seq_len))
+        if cfg.family == "moe":
+            add(f"moe{li}", _moe_layer(cfg, pol, tokens_per_chip))
+        else:
+            add(f"mlp{li}", _mlp_layer(cfg, pol, tokens_per_chip, cfg.d_ff))
+
+    # embedding / unembedding as boundary layers
+    t = tokens_per_chip
+    emb_flops = 2.0 * t * cfg.d_model * cfg.vocab / pol.tp
+    emb_bytes = cfg.vocab * cfg.d_model * 2 / (pol.tp * pol.fsdp)
+    out.append(LayerCost("unembed", emb_flops * (3.0 if training else 1.0),
+                         emb_bytes + t * cfg.vocab * 2 / pol.tp, 0.0))
+    return out
+
+
+def step_time(cfg: ModelConfig, pol: ShardingPolicy, *, seq_len: int,
+              global_batch: int, training: bool = True) -> Dict[str, float]:
+    costs = layer_costs(cfg, pol, seq_len=seq_len, global_batch=global_batch,
+                        training=training)
+    f = sum(c.flops for c in costs)
+    h = sum(c.hbm_bytes for c in costs)
+    i = sum(c.ici_bytes for c in costs)
+    return dict(
+        compute_s=f / PEAK_FLOPS, memory_s=h / HBM_BW,
+        collective_s=i / ICI_BW,
+        step_s=max(f / PEAK_FLOPS, h / HBM_BW, i / ICI_BW),
+        flops=f, hbm_bytes=h, ici_bytes=i)

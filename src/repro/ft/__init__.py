@@ -1,0 +1,1 @@
+from .supervisor import Supervisor, FaultInjector  # noqa: F401

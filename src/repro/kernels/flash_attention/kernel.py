@@ -1,0 +1,126 @@
+"""Flash attention as a Pallas TPU kernel.
+
+Grid: (batch·kv_heads·q_groups, num_q_blocks, num_kv_blocks) — the kv block
+index is innermost, so on TPU's sequential grid the VMEM scratch
+(m, l, acc) persists across the kv sweep of one q block (the standard TPU
+flash pattern).  Blocks are MXU-aligned (block_q × head_dim, block_kv ×
+head_dim; head_dim is zero-padded to 128 by the wrapper when needed).
+
+Causal masking is done with block-index arithmetic; kv blocks entirely
+above the diagonal are skipped with ``pl.when`` (no MXU work issued — this
+is the FLOP saving the XLA fallback in ``models.layers`` reproduces with
+its triangular q-block schedule).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_kv: int, causal: bool, window: int,
+                  sm_scale: float, num_kv_blocks: int, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    # is any (q, k) pair in this block pair visible?
+    diag_ok = (not causal) or (k_start <= q_start + block_q - 1)
+    win_ok = (window == 0) or (k_start + block_kv > q_start - window + 1)
+
+    run = jnp.logical_and(jnp.asarray(diag_ok), jnp.asarray(win_ok))
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * sm_scale       # [bq, d]
+        k = k_ref[0].astype(jnp.float32)                  # [bkv, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # [bq, bkv]
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < kv_len                        # padded keys never score
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           block_q: int = DEFAULT_BLOCK_Q,
+                           block_kv: int = DEFAULT_BLOCK_KV,
+                           kv_len: int = 0,
+                           interpret: bool = True) -> jax.Array:
+    """q: [BH, T, D]; k, v: [BH, S, D] → [BH, T, D].
+
+    BH is the flattened batch·heads dim (the wrapper handles GQA layout).
+    T % block_q == 0 and S % block_kv == 0 are required (wrapper pads);
+    ``kv_len`` masks the padded key tail (defaults to S).
+    """
+    bh, t, d = q.shape
+    s = k.shape[1]
+    assert t % block_q == 0 and s % block_kv == 0, (t, s)
+    nq, nkv = t // block_q, s // block_kv
+    sm_scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_kv=block_kv, causal=causal,
+        window=window, sm_scale=sm_scale, num_kv_blocks=nkv,
+        kv_len=kv_len or s)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # running max m
+            pltpu.VMEM((block_q,), jnp.float32),       # running sum l
+            pltpu.VMEM((block_q, d), jnp.float32),     # fp32 accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q: [B, H, T, D]; k, v: [B, H, S, D] → [B, H, T, D] (fp32 math)."""
+    b, h, t, d = q.shape
+    s = k.shape[2]
+    scores = jnp.einsum("bhtd,bhsd->bhts",
+                        q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    qpos = jnp.arange(t)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bhsd->bhtd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,1 @@
+from .ops import rmsnorm  # noqa: F401

@@ -1,0 +1,102 @@
+"""Mamba-2 SSD chunked-scan Pallas kernel.
+
+Grid: (batch·heads, num_chunks) with the chunk index innermost — the
+[P, N] state scratch persists across the sequential chunk sweep (same
+VMEM-carry pattern as the flash kernel).  Each step computes, for one
+(batch, head) and one Q-length chunk:
+
+    intra-chunk:  Y_diag = (C Bᵀ ⊙ L_decay) · (dt·X)        (MXU matmuls)
+    chunk state:  S_c    = Σ_q decay_out_q · dt_q B_q x_qᵀ
+    inter-chunk:  Y_off  = decay_in · C · S_prev
+    carry:        S      = exp(ΣdA) · S_prev + S_c
+
+Tiles are [Q, P] / [Q, N] with Q, P, N multiples of the MXU dim (the
+assigned mamba2 config: Q=256, P=64, N=128)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref, *,
+                chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # [Q, P]
+    dt = dt_ref[0].astype(jnp.float32)        # [Q]
+    a = a_ref[0, 0]                           # scalar A_h (negative)
+    b = b_ref[0].astype(jnp.float32)          # [Q, N]
+    c = c_ref[0].astype(jnp.float32)          # [Q, N]
+
+    da = dt * a                               # [Q]
+    cum = jnp.cumsum(da)                      # [Q]
+    total = cum[-1]
+
+    xdt = x * dt[:, None]                     # [Q, P]
+
+    # intra-chunk: L[q, k] = exp(cum_q - cum_k) for k <= q
+    qi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    lmat = jnp.where(ki <= qi, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q, Q]
+    y_diag = jax.lax.dot_general(cb * lmat, xdt,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    # inter-chunk: read previous state
+    s_prev = s_ref[...]                       # [P, N]
+    decay_in = jnp.exp(cum)                   # [Q]
+    y_off = jax.lax.dot_general(c, s_prev,
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [Q, P]
+    y_off = y_off * decay_in[:, None]
+
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # chunk state + carry update
+    decay_out = jnp.exp(total - cum)          # [Q]
+    s_c = jax.lax.dot_general(xdt * decay_out[:, None], b,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # [P, N]
+    s_ref[...] = s_prev * jnp.exp(total) + s_c
+
+
+def ssd_scan_kernel(x: jax.Array, dt: jax.Array, a: jax.Array,
+                    b: jax.Array, c: jax.Array, *, chunk: int = 256,
+                    interpret: bool = True) -> jax.Array:
+    """x: [BH, T, P]; dt: [BH, T]; a: [BH]; b, c: [BH, T, N] → [BH, T, P].
+
+    BH = flattened batch·heads (groups pre-broadcast by the wrapper);
+    T % chunk == 0 (wrapper pads)."""
+    bh, t, p = x.shape
+    n = b.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda i, ci: (i, ci)),
+            pl.BlockSpec((1, 1), lambda i, ci: (i, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, ci: (i, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda i, ci: (i, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, p), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((p, n), jnp.float32),       # carried SSM state
+        ],
+        interpret=interpret,
+    )(x, dt, a.reshape(bh, 1), b, c)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the Mamba-2 SSD scan kernel: the exact sequential
+recurrence h_t = exp(dA_t)·h_{t-1} + dt_t·B_t x_tᵀ ; y_t = C_t·h_t."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, b: jax.Array,
+            c: jax.Array) -> jax.Array:
+    """x: [B, T, H, P]; dt: [B, T, H]; A: [H]; b, c: [B, T, H, N]
+    (groups pre-broadcast to heads) → y [B, T, H, P], fp32 math."""
+    bs, t, h, p = x.shape
+    n = b.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+
+    def step(hstate, inp):
+        xt, dtt, bt, ct = inp
+        da = jnp.exp(dtt * A)[..., None, None]          # [B, H, 1, 1]
+        upd = jnp.einsum("bhn,bh,bhp->bhpn", bt, dtt, xt)
+        hstate = hstate * da + upd
+        y = jnp.einsum("bhn,bhpn->bhp", ct, hstate)
+        return hstate, y
+
+    h0 = jnp.zeros((bs, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+         bf.transpose(1, 0, 2, 3), cf.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

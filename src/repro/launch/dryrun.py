@@ -1,0 +1,169 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell with 512 placeholder host devices, prove the sharding config is
+coherent, and extract memory/cost/collective analyses for §Roofline.
+
+The two XLA_FLAGS lines above MUST stay the first statements in this module
+(before any jax-importing import): jax locks the device count on first init.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch all --shape all --mesh both --out experiments/dryrun
+
+Each cell writes experiments/dryrun/<arch>__<shape>__<mesh>.json
+incrementally; existing files are skipped (resumable).
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.launch import roofline as R
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path,
+             force: bool = False, rules=None, tag: str = "") -> dict:
+    out_path = out_dir / f"{arch}__{shape}__{mesh_kind}{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    ok, reason = shape_applicable(arch, shape)
+    rec = dict(arch=arch, shape=shape, mesh=mesh_kind,
+               seq_len=sh["seq_len"], global_batch=sh["global_batch"],
+               kind=sh["kind"])
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        if sh["kind"] == "train":
+            step, (ins, outs), args, _ = ST.build_train_step(
+                cfg, mesh, seq_len=sh["seq_len"],
+                global_batch=sh["global_batch"], rules=rules)
+            jitted = jax.jit(step, in_shardings=ins, out_shardings=outs,
+                             donate_argnums=(0, 1))
+        elif sh["kind"] == "prefill":
+            step, (ins, outs), args = ST.build_prefill_step(
+                cfg, mesh, seq_len=sh["seq_len"],
+                global_batch=sh["global_batch"], rules=rules)
+            jitted = jax.jit(step, in_shardings=ins, out_shardings=outs)
+        else:
+            step, (ins, outs), args = ST.build_serve_step(
+                cfg, mesh, seq_len=sh["seq_len"],
+                global_batch=sh["global_batch"], rules=rules)
+            jitted = jax.jit(step, in_shardings=ins, out_shardings=outs,
+                             donate_argnums=(2,))
+
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # trip-count-aware HLO walk (XLA's cost_analysis counts each while
+        # body once — useless under scan-over-layers; see roofline.HloCosts)
+        hc = R.hlo_costs(hlo)
+
+        rl = R.Roofline(
+            flops=hc["flops"], hbm_bytes=hc["bytes"], coll_bytes=hc["coll"],
+            n_chips=n_chips,
+            model_flops=R.model_flops_per_chip(
+                cfg, seq_len=sh["seq_len"], global_batch=sh["global_batch"],
+                kind=sh["kind"], n_chips=n_chips))
+
+        mem_rec = {}
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            mem_rec[k] = int(getattr(mem, k, 0) or 0)
+        per_dev_bytes = (mem_rec["argument_size_in_bytes"]
+                         + mem_rec["temp_size_in_bytes"]
+                         + mem_rec["output_size_in_bytes"]
+                         - mem_rec["alias_size_in_bytes"])
+
+        rec.update(
+            status="ok", n_chips=n_chips,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            memory=mem_rec, per_device_bytes=per_dev_bytes,
+            per_device_gib=round(per_dev_bytes / 2**30, 3),
+            roofline=rl.as_dict(),
+            xla_cost_analysis=dict(        # cross-check (per-body, unscaled)
+                flops=float(cost.get("flops", 0.0)),
+                bytes=float(cost.get("bytes accessed", 0.0))),
+        )
+    except Exception as e:                                  # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--policy", default="baseline",
+                    help="sharding-policy override (parallel.policies)")
+    args = ap.parse_args()
+
+    from repro.parallel.policies import get_policy
+    rules = get_policy(args.policy)
+    tag = "" if args.policy == "baseline" else f"__{args.policy}"
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = (["single", "multi"] if args.mesh == "both"
+              else [args.mesh])
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                t0 = time.time()
+                rec = run_cell(arch, shape, mesh_kind, out_dir,
+                               force=args.force, rules=rules, tag=tag)
+                dt = time.time() - t0
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_err += st == "error"
+                extra = ""
+                if st == "ok":
+                    rl = rec["roofline"]
+                    extra = (f" {rec['per_device_gib']:.2f}GiB/dev "
+                             f"bottleneck={rl['bottleneck']}"
+                             f" mfu={rl['mfu']:.3f}")
+                elif st == "error":
+                    extra = " " + rec["error"][:120]
+                print(f"[{st:7s}] {arch} × {shape} × {mesh_kind}"
+                      f" ({dt:.0f}s){extra}", flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} error={n_err}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

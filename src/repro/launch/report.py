@@ -1,0 +1,97 @@
+"""Generate the §Dry-run and §Roofline markdown tables from the dry-run
+JSON cells and inject them into EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def load_cells(d: Path, policy_tag: str = ""):
+    cells = {}
+    for f in sorted(d.glob("*.json")):
+        parts = f.stem.split("__")
+        if len(parts) == 3 and not policy_tag:
+            arch, shape, mesh = parts
+        elif len(parts) == 4 and policy_tag and parts[3] == policy_tag:
+            arch, shape, mesh = parts[:3]
+        else:
+            continue
+        cells[(arch, shape, mesh)] = json.loads(f.read_text())
+    return cells
+
+
+def dryrun_table(cells) -> str:
+    lines = [
+        "| arch | shape | mesh | status | GiB/dev | lower s | compile s |",
+        "|---|---|---|---|---:|---:|---:|",
+    ]
+    for (arch, shape, mesh), r in sorted(cells.items()):
+        if r["status"] == "ok":
+            lines.append(
+                f"| {arch} | {shape} | {mesh} | ok "
+                f"| {r['per_device_gib']:.2f} | {r['lower_s']:.1f} "
+                f"| {r['compile_s']:.1f} |")
+        elif r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | {mesh} | skipped "
+                         f"(sub-quadratic-only shape) | — | — | — |")
+        else:
+            lines.append(f"| {arch} | {shape} | {mesh} | ERROR: "
+                         f"{r['error'][:60]} | — | — | — |")
+    ok = sum(1 for r in cells.values() if r["status"] == "ok")
+    sk = sum(1 for r in cells.values() if r["status"] == "skipped")
+    er = sum(1 for r in cells.values() if r["status"] == "error")
+    lines.append("")
+    lines.append(f"**{ok} compiled, {sk} skipped by rule, {er} errors.**")
+    return "\n".join(lines)
+
+
+def roofline_table(cells) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck "
+        "| useful FLOPs | MFU @ roofline |",
+        "|---|---|---:|---:|---:|---|---:|---:|",
+    ]
+    for (arch, shape, mesh), r in sorted(cells.items()):
+        if mesh != "single" or r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {rl['compute_s']:.4f} "
+            f"| {rl['memory_s']:.4f} | {rl['collective_s']:.4f} "
+            f"| {rl['bottleneck']} | {rl['useful_flops_ratio']:.3f} "
+            f"| {rl['mfu']:.4f} |")
+    return "\n".join(lines)
+
+
+def inject(md_path: Path, marker: str, content: str):
+    text = md_path.read_text()
+    tag = f"<!-- {marker} -->"
+    assert tag in text, marker
+    # replace the tag (keep it so re-runs re-inject)
+    new = text.split(tag)
+    # content replaces everything until the next section header after tag
+    tail = new[1]
+    nxt = tail.find("\n## ")
+    tail_keep = tail[nxt:] if nxt >= 0 else ""
+    md_path.write_text(new[0] + tag + "\n\n" + content + "\n" + tail_keep)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--md", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+    cells = load_cells(Path(args.dir))
+    md = Path(args.md)
+    inject(md, "DRYRUN_TABLE", dryrun_table(cells))
+    inject(md, "ROOFLINE_TABLE", roofline_table(cells))
+    print(f"injected {len(cells)} cells into {md}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Jittable train / serve steps with full sharding plumbing.
+
+``build_train_step`` returns (step_fn, in_shardings, out_shardings,
+abstract inputs) ready for ``jax.jit(...).lower(...)`` — used identically by
+the real trainer and the allocation-free dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..configs.base import ModelConfig
+from ..models import model_zoo as Z
+from ..models import params as P
+from ..optim import make_optimizer
+from ..optim.clip import clip_by_global_norm
+from ..parallel import shardings as S
+
+
+def batch_shardings(cfg: ModelConfig, batch_specs, mesh: Mesh,
+                    rules=None) -> Dict[str, Any]:
+    def mk(leaf):
+        # dim 0 is always the (global) batch; shard it over (pod, data).
+        axes = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return S.named_sharding(leaf.shape, axes, mesh, rules)
+
+    return jax.tree.map(mk, batch_specs)
+
+
+def model_shardings(cfg: ModelConfig, mesh: Mesh, rules=None):
+    spec_tree = Z.spec(cfg)
+    axes = P.axes_tree(spec_tree)
+    flat_s, treedef = jax.tree.flatten(spec_tree,
+                                       is_leaf=P.is_spec)
+    flat_a = treedef.flatten_up_to(axes)
+    out = [S.named_sharding(s.shape, a, mesh, rules)
+           for s, a in zip(flat_s, flat_a)]
+    return treedef.unflatten(out)
+
+
+def cache_shardings(cfg: ModelConfig, batch: int, seq_len: int, mesh: Mesh,
+                    rules=None):
+    spec_tree = Z.cache_spec(cfg, batch, seq_len)
+    axes = P.axes_tree(spec_tree)
+    flat_s, treedef = jax.tree.flatten(spec_tree, is_leaf=P.is_spec)
+    flat_a = treedef.flatten_up_to(axes)
+    out = [S.named_sharding(s.shape, a, mesh, rules)
+           for s, a in zip(flat_s, flat_a)]
+    return treedef.unflatten(out)
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, *, seq_len: int,
+                     global_batch: int, rules=None, lr: float = 3e-4,
+                     microbatches: Optional[int] = None):
+    """Returns (step_fn, (in_shardings, out_shardings), abstract_args).
+
+    ``microbatches`` > 1 runs gradient accumulation: the global batch is
+    split on dim 0 and scanned, bounding the per-microbatch activation /
+    remat-carry footprint.  Accumulation is f32 (bf16 above 100B params to
+    fit HBM).
+    """
+    opt = make_optimizer(cfg, lr=lr)
+    m = microbatches if microbatches is not None else cfg.microbatches
+    acc_dtype = (jnp.bfloat16 if cfg.param_count() > 100e9 else jnp.float32)
+
+    def step(params, opt_state, batch):
+        with S.sharding_context(mesh, rules):
+            if m <= 1:
+                (loss, aux), grads = jax.value_and_grad(
+                    Z.loss_fn, has_aux=True)(params, cfg, batch)
+            else:
+                mb = jax.tree.map(
+                    lambda x: x.reshape(m, x.shape[0] // m, *x.shape[1:]),
+                    batch)
+
+                def micro(carry, one):
+                    gacc, lsum = carry
+                    (l, _), g = jax.value_and_grad(
+                        Z.loss_fn, has_aux=True)(params, cfg, one)
+                    gacc = jax.tree.map(
+                        lambda a, b: a + b.astype(acc_dtype), gacc, g)
+                    return (gacc, lsum + l), None
+
+                gacc0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, acc_dtype), params)
+                (gacc, lsum), _ = jax.lax.scan(
+                    micro, (gacc0, jnp.zeros((), jnp.float32)), mb)
+                grads = jax.tree.map(lambda g: g / m, gacc)
+                loss = lsum / m
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+            new_params, new_state = opt.update(grads, opt_state, params)
+            metrics = dict(loss=loss, grad_norm=gnorm)
+            return new_params, new_state, metrics
+
+    params_abs = P.abstract_tree(Z.spec(cfg))
+    p_shard = model_shardings(cfg, mesh, rules)
+    state_abs = jax.eval_shape(opt.init, params_abs)
+    s_shard = opt.state_shardings(p_shard, params_abs, mesh)
+    batch_abs = Z.input_specs(cfg, seq_len=seq_len,
+                              global_batch=global_batch, kind="train")
+    b_shard = batch_shardings(cfg, batch_abs, mesh, rules)
+
+    rep = NamedSharding(mesh, PartitionSpec())
+    in_shardings = (p_shard, s_shard, b_shard)
+    out_shardings = (p_shard, s_shard, dict(loss=rep, grad_norm=rep))
+    abstract_args = (params_abs, state_abs, batch_abs)
+    return step, (in_shardings, out_shardings), abstract_args, opt
+
+
+def build_serve_step(cfg: ModelConfig, mesh: Mesh, *, seq_len: int,
+                     global_batch: int, rules=None):
+    """Single-token decode step against a seq_len cache."""
+
+    def step(params, tokens, cache):
+        with S.sharding_context(mesh, rules):
+            logits, new_cache = Z.decode_step(params, cfg, tokens, cache)
+            # greedy next token (serving returns ids + updated cache)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return next_tok, new_cache
+
+    params_abs = P.abstract_tree(Z.spec(cfg))
+    p_shard = model_shardings(cfg, mesh, rules)
+    inputs = Z.input_specs(cfg, seq_len=seq_len, global_batch=global_batch,
+                           kind="decode")
+    tok_shard = S.named_sharding(inputs["tokens"].shape, ("batch", None),
+                                 mesh, rules)
+    c_shard = cache_shardings(cfg, global_batch, seq_len, mesh, rules)
+
+    in_shardings = (p_shard, tok_shard, c_shard)
+    out_shardings = (S.named_sharding((global_batch,), ("batch",), mesh,
+                                      rules), c_shard)
+    abstract_args = (params_abs, inputs["tokens"], inputs["cache"])
+    return step, (in_shardings, out_shardings), abstract_args
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, *, seq_len: int,
+                       global_batch: int, rules=None):
+    """Forward over the full prompt (logits only — cache fill fused in real
+    serving; the dry-run exercises the compute/collective pattern)."""
+
+    def step(params, batch):
+        with S.sharding_context(mesh, rules):
+            return Z.forward(params, cfg, batch)
+
+    params_abs = P.abstract_tree(Z.spec(cfg))
+    p_shard = model_shardings(cfg, mesh, rules)
+    batch_abs = Z.input_specs(cfg, seq_len=seq_len,
+                              global_batch=global_batch, kind="prefill")
+    b_shard = batch_shardings(cfg, batch_abs, mesh, rules)
+    extra = (cfg.vision_tokens if cfg.family == "vlm" else 0)
+    out_shape = (global_batch, seq_len + extra, cfg.vocab)
+    out_shardings = S.named_sharding(out_shape, ("batch", None, "vocab"),
+                                     mesh, rules)
+    return step, ((p_shard, b_shard), out_shardings), (params_abs, batch_abs)

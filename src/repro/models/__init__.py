@@ -1,0 +1,1 @@
+from . import model_zoo  # noqa: F401

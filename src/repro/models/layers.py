@@ -1,0 +1,380 @@
+"""Shared transformer building blocks: norms, RoPE / M-RoPE, GQA attention
+(with KV cache and local windows), dense MLPs.
+
+All functions are pure; parameters come in as dict subtrees created from the
+Spec trees in each model module.  Activation sharding uses logical names via
+``parallel.shardings.shard`` (no-op outside a mesh context).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.shardings import shard
+from .params import Spec
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_spec(cfg, d: Optional[int] = None) -> Dict[str, Spec]:
+    d = d or cfg.d_model
+    s = {"scale": Spec((d,), ("embed",), init="ones", dtype=jnp.float32)}
+    if cfg.norm == "ln":
+        s["bias"] = Spec((d,), ("embed",), init="zeros", dtype=jnp.float32)
+    return s
+
+
+def apply_norm(p, cfg, x: jax.Array) -> jax.Array:
+    # f32 is confined to fused reductions / per-row scalars: materialising a
+    # full f32 copy of x here makes XLA hoist the convert outside the layer
+    # scan and stack f32 carries (observed +5 GiB/device on the dry-run).
+    if cfg.norm == "ln":
+        mu = x.astype(jnp.float32).mean(-1, keepdims=True)
+        var = jnp.square(x.astype(jnp.float32) - mu).mean(-1, keepdims=True)
+        inv = jax.lax.rsqrt(var + 1e-6)
+        y = ((x - mu.astype(x.dtype)) * inv.astype(x.dtype)
+             * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype))
+    else:
+        ms = jnp.square(x.astype(jnp.float32)).mean(-1, keepdims=True)
+        inv = jax.lax.rsqrt(ms + 1e-6)
+        y = x * inv.astype(x.dtype) * p["scale"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, T, H, D]; positions: [B, T] (or [T])."""
+    d = x.shape[-1]
+    freqs = _rope_freqs(d, theta)                      # [D/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, T, D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def mrope(x: jax.Array, positions3: jax.Array, theta: float,
+          sections: Tuple[int, int, int]) -> jax.Array:
+    """M-RoPE (Qwen2-VL): 3 position streams over frequency sections.
+
+    x: [B, T, H, D]; positions3: [3, B, T] (temporal, height, width ids).
+    ``sections`` partitions the D/2 frequency slots.
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = _rope_freqs(d, theta)                      # [D/2]
+    # per-frequency-slot stream selector
+    sel = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                     total_repeat_length=d // 2)       # [D/2]
+    pos = positions3.astype(jnp.float32)               # [3, B, T]
+    ang = pos[..., None] * freqs                       # [3, B, T, D/2]
+    onehot = jax.nn.one_hot(sel, 3, dtype=jnp.float32)  # [D/2, 3]
+    ang = jnp.einsum("sbtf,fs->btf", ang, onehot)      # stream per freq slot
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention_spec(cfg, d: Optional[int] = None) -> Dict[str, Spec]:
+    d = d or cfg.d_model
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {
+        "wq": Spec((d, h, hd), ("embed_fsdp", "heads", "head_dim")),
+        "wk": Spec((d, kv, hd), ("embed_fsdp", "kv_heads", "head_dim")),
+        "wv": Spec((d, kv, hd), ("embed_fsdp", "kv_heads", "head_dim")),
+        "wo": Spec((h, hd, d), ("heads", "head_dim", "embed_fsdp")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = Spec((h, hd), ("heads", "head_dim"), init="zeros")
+        s["bk"] = Spec((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = Spec((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+    return s
+
+
+def _qkv(p, cfg, x, xkv=None):
+    xkv = x if xkv is None else xkv
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def _sdpa(cfg, q, k, v, mask) -> jax.Array:
+    """Grouped-query attention core.  q: [B,T,H,D]; k,v: [B,S,KV,D]."""
+    b, t, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, t, kvh, g, hd)
+    scores = jnp.einsum("btkgd,bskd->bkgts", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    if mask is not None:
+        scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    return out.reshape(b, t, h, hd)
+
+
+def causal_mask(t: int, s: int, window: int = 0,
+                offset: int = 0) -> jax.Array:
+    """[1,1,1,t,s] boolean mask; query i attends keys ≤ i+offset, within
+    ``window`` when nonzero."""
+    qpos = jnp.arange(t)[:, None] + offset
+    kpos = jnp.arange(s)[None, :]
+    m = kpos <= qpos
+    if window:
+        m = m & (kpos > qpos - window)
+    return m[None, None, None]
+
+
+_BLOCK_Q = 512
+_BLOCK_KV = 512
+
+
+def _sdpa_blockwise(cfg, q, k, v, *, causal: bool, window: int = 0,
+                    bq: int = _BLOCK_Q, bkv: int = _BLOCK_KV) -> jax.Array:
+    """Flash-style blockwise attention in pure XLA (online softmax).
+
+    Bounds the live score tensor to [B, KV, G, bq, bkv] instead of
+    [B, KV, G, T, S]; for causal masks each query block only sweeps the KV
+    blocks up to its diagonal (a *static* bound per unrolled q block), so
+    no phantom FLOPs are spent above the diagonal.  This mirrors the
+    Pallas kernel in ``repro.kernels.flash_attention`` — the TPU target —
+    and is the portable XLA fallback the dry-run compiles.
+    """
+    b, t, h, hd = q.shape
+    s = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    nq = t // bq
+    q = q.reshape(b, nq, bq, kvh, g, hd)
+    # pad keys/values to a kv-block multiple; kpos < s masks the tail
+    pad = (-s) % bkv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    def q_block_sweep(q_blk, k, v, *, q_start: int, nkv: int):
+        def kv_step(carry, kj):
+            m_run, l_run, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, kj * bkv, bkv, 1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, kj * bkv, bkv, 1)
+            sc = jnp.einsum("bqkgd,bskd->bkgqs", q_blk,
+                            k_blk).astype(jnp.float32)
+            qpos = q_start + jnp.arange(bq)[:, None]
+            kpos = kj * bkv + jnp.arange(bkv)[None, :]
+            valid = kpos < s
+            if causal:
+                valid = valid & (kpos <= qpos)
+            if window:
+                valid = valid & (kpos > qpos - window)
+            sc = jnp.where(valid[None, None, None], sc, -1e30)
+            m_new = jnp.maximum(m_run, sc.max(-1))
+            # NOTE (§Perf, qwen2.5-32b iterations 2–3): streaming the prob
+            # block in bf16 (exp fused into a convert, or exp recomputed
+            # inside the row-sum reduction) measured *worse* under the XLA
+            # fusion-boundary accounting (194.6 → 202/204 s).  The f32
+            # [bq, bkv] prob stream is eliminated for real by the Pallas
+            # flash kernel (kernels/flash_attention), which keeps p in VMEM
+            # scratch — the projected memory term is in EXPERIMENTS.md.
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(-1)
+            acc = (acc * corr[..., None]
+                   + jnp.einsum("bkgqs,bskd->bkgqd",
+                                p.astype(v_blk.dtype), v_blk)
+                   .astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kvh, g, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, bq, hd), jnp.float32)
+        # remat the kv step: backward recomputes each block's probs instead
+        # of stacking [nkv, B, KV, G, bq, bkv] f32 saves.
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step,
+                           policy=jax.checkpoint_policies.nothing_saveable),
+            (m0, l0, a0), jnp.arange(nkv))
+        return acc / jnp.maximum(l_f, 1e-30)[..., None]
+
+    out_blocks = []
+    for qi in range(nq):
+        q_blk = q[:, qi] * scale                       # [B, bq, KV, G, hd]
+        q_start = qi * bq
+        # causal: only KV blocks intersecting [0, q_start + bq) matter
+        kv_end = min(s + pad, q_start + bq) if causal else s + pad
+        nkv = -(-kv_end // bkv)
+        o = q_block_sweep(q_blk, k, v, q_start=q_start, nkv=nkv)
+        # [B, KV, G, bq, hd] -> [B, bq, H, hd]
+        o = o.transpose(0, 3, 1, 2, 4).reshape(b, bq, h, hd)
+        out_blocks.append(o.astype(v.dtype))
+    return jnp.concatenate(out_blocks, axis=1)
+
+
+def mha(p, cfg, x, *, positions, mask_mode="causal", window=0,
+        cache=None, mrope_pos=None, cross_kv=None, apply_rope=True):
+    """Full attention path.
+
+    Train/prefill: cache is None → self-attention over x (mask_mode =
+    'causal' or 'full'; window > 0 adds a sliding window).
+    Decode: cache = dict(k, v, length); x is the new token(s), k/v appended.
+    Cross-attention: cross_kv = (k, v) precomputed from the encoder.
+    Returns (out, new_cache).
+    """
+    if cross_kv is not None:
+        b, t, _ = x.shape
+        q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+        if "bq" in p:
+            q = q + p["bq"]
+        k, v = cross_kv
+        if t >= 2 * _BLOCK_Q and t % _BLOCK_Q == 0:
+            out = _sdpa_blockwise(cfg, q, k, v, causal=False)
+        else:
+            out = _sdpa(cfg, q, k, v, None)
+        out = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+        return out, None
+
+    q, k, v = _qkv(p, cfg, x)
+    if apply_rope:
+        if mrope_pos is not None:
+            q = mrope(q, mrope_pos, cfg.rope_theta, cfg.mrope_sections)
+            k = mrope(k, mrope_pos, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is None:
+        t = x.shape[1]
+        k = shard(k, "batch", "seq", "kv_heads", None)
+        v = shard(v, "batch", "seq", "kv_heads", None)
+        causal = mask_mode == "causal"
+        if (t >= 2 * _BLOCK_Q and t % _BLOCK_Q == 0
+                and t % _BLOCK_KV == 0):
+            out = _sdpa_blockwise(cfg, q, k, v, causal=causal,
+                                  window=window)
+        else:
+            mask = causal_mask(t, t, window) if causal else None
+            out = _sdpa(cfg, q, k, v, mask)
+    else:
+        # single-token decode against a prefilled cache
+        length = cache["length"]                       # int32 scalar
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, length, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, length, 0, 0))
+        new_cache = dict(k=ck, v=cv, length=length + x.shape[1])
+        s = ck.shape[1]
+        kpos = jnp.arange(s)
+        valid = kpos[None, :] <= length                # [1, S]
+        if window:
+            valid = valid & (kpos[None, :] > length - window)
+        mask = valid[None, None, None, :, :] * jnp.ones(
+            (1, 1, 1, x.shape[1], 1), bool)
+        out = _sdpa(cfg, q, ck, cv, mask)
+    out = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    return out, new_cache
+
+
+def cross_kv_spec(cfg) -> Dict[str, Spec]:
+    d, kv, hd = cfg.d_model, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wk": Spec((d, kv, hd), ("embed_fsdp", "kv_heads", "head_dim")),
+        "wv": Spec((d, kv, hd), ("embed_fsdp", "kv_heads", "head_dim")),
+    }
+
+
+def make_cross_kv(p, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+def mlp_spec(cfg, d_ff: Optional[int] = None) -> Dict[str, Spec]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "wi_gate": Spec((d, f), ("embed_fsdp", "mlp")),
+            "wi_up": Spec((d, f), ("embed_fsdp", "mlp")),
+            "wo": Spec((f, d), ("mlp", "embed_fsdp")),
+        }
+    return {
+        "wi": Spec((d, f), ("embed_fsdp", "mlp")),
+        "wo": Spec((f, d), ("mlp", "embed_fsdp")),
+    }
+
+
+def apply_mlp(p, cfg, x: jax.Array) -> jax.Array:
+    if "wi_gate" in p:
+        g = jnp.einsum("btd,df->btf", x, p["wi_gate"])
+        u = jnp.einsum("btd,df->btf", x, p["wi_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jnp.einsum("btd,df->btf", x, p["wi"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = shard(h, "batch", "seq", "mlp")
+    return jnp.einsum("btf,fd->btd", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_spec(cfg) -> Dict[str, Spec]:
+    # untied tables get their own logical name for the feature dim so perf
+    # policies can shard lookups on d (local gathers) while the unembedding
+    # projection keeps vocab sharding; tied tables must share the layout.
+    lookup_axis = "embed_fsdp" if cfg.tie_embeddings else "embed_lookup"
+    vocab_axis = "vocab" if cfg.tie_embeddings else "vocab_in"
+    s = {"tok": Spec((cfg.vocab, cfg.d_model), (vocab_axis, lookup_axis),
+                     scale=1.0)}
+    if not cfg.tie_embeddings:
+        s["unembed"] = Spec((cfg.d_model, cfg.vocab),
+                            ("embed_fsdp", "vocab"))
+    return s
+
+
+def embed(p, cfg, tokens: jax.Array) -> jax.Array:
+    x = p["tok"][tokens]
+    return shard(x, "batch", "seq", "embed")
+
+
+def unembed(p, cfg, x: jax.Array) -> jax.Array:
+    """Logits stay in bf16; the loss upcasts inside fused reductions only."""
+    w = p.get("unembed")
+    if w is None:
+        w = p["tok"].T
+    logits = jnp.einsum("btd,dv->btv", x, w)
+    return shard(logits, "batch", "seq", "vocab")

@@ -1,0 +1,247 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060), attention-free.
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk (quadratic
+within a small chunk — MXU-shaped matmuls) + inter-chunk linear state
+recurrence.  Decode is the O(1) recurrent update against a [B, H, P, N]
+state — which is why this family runs the 500k long-context shape.
+
+Block layout (Mamba-2 paper): fused in-projection → (z | x | B | C | dt),
+causal depthwise conv over (x|B|C), SSD core, gated RMSNorm, out-projection.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.shardings import shard
+from . import layers as L
+from .params import Spec
+
+
+def _dims(cfg):
+    di = cfg.d_model * cfg.ssm_expand         # inner width
+    h = di // cfg.ssm_head_dim                # heads
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    conv_dim = di + 2 * g * n
+    return di, h, g, n, conv_dim
+
+
+def block_spec(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    di, h, g, n, conv_dim = _dims(cfg)
+    proj_out = 2 * di + 2 * g * n + h          # z, x, B, C, dt
+    return {
+        "norm": L.norm_spec(cfg),
+        "in_proj": Spec((d, proj_out), ("embed_fsdp", "mlp")),
+        "conv_w": Spec((cfg.conv_kernel, conv_dim), ("conv", "mlp")),
+        "conv_b": Spec((conv_dim,), ("mlp",), init="zeros"),
+        "A_log": Spec((h,), ("heads",), init="zeros", dtype=jnp.float32),
+        "D": Spec((h,), ("heads",), init="ones", dtype=jnp.float32),
+        "dt_bias": Spec((h,), ("heads",), init="zeros", dtype=jnp.float32),
+        "gate_norm": Spec((di,), ("mlp",), init="ones", dtype=jnp.float32),
+        "out_proj": Spec((di, d), ("mlp", "embed_fsdp")),
+    }
+
+
+def spec(cfg) -> Dict[str, Any]:
+    from .transformer import stack_specs
+    return {
+        "embed": L.embed_spec(cfg),
+        "layers": stack_specs(block_spec(cfg), cfg.n_layers),
+        "final_norm": L.norm_spec(cfg),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, h, g, n, _ = _dims(cfg)
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+    return z, xin, bmat, cmat, dt
+
+
+def _causal_conv(x, w, b):
+    """x: [B, T, C]; depthwise causal conv, kernel K."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(x.dtype)
+
+
+def _segsum(a):
+    """a: [..., Q] → lower-triangular pairwise cumulative sums
+    L[..., i, j] = sum(a[j+1..i]) for j < i (−inf above diagonal)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, -1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(cfg, xh, bmat, cmat, dt, A, init_state=None):
+    """SSD core (chunked scan).
+
+    xh:   [B, T, H, P]    (dt-premultiplied inputs)
+    bmat: [B, T, G, N], cmat: [B, T, G, N]
+    dt:   [B, T, H]  (softplus'd), A: [H] (negative)
+    Returns (y [B, T, H, P], final_state [B, H, P, N]).
+    """
+    b, t, h, p = xh.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    q = min(cfg.ssm_chunk, t)
+    nc = t // q
+    assert nc * q == t, (t, q)
+    rep = h // g
+
+    def cshape(a):
+        return a.reshape(a.shape[0], nc, q, *a.shape[2:])
+
+    xc, bc, cc = cshape(xh), cshape(bmat), cshape(cmat)
+    da = cshape(dt * A[None, None, :])                   # [B, nc, Q, H]
+
+    da_cum = jnp.cumsum(da, axis=2)                      # [B, nc, Q, H]
+    da_total = da_cum[:, :, -1]                          # [B, nc, H]
+
+    # intra-chunk (diagonal blocks)
+    lmat = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))    # [B, nc, H, Q, Q]
+    cb = jnp.einsum("bcqgn,bckgn->bcgqk", cc, bc)        # [B, nc, G, Q, Q]
+    cb = jnp.repeat(cb, rep, axis=2)                     # [B, nc, H, Q, Q]
+    y_diag = jnp.einsum("bchqk,bchqk,bckhp->bcqhp",
+                        cb, lmat.astype(cb.dtype), xc)
+
+    # chunk states: contribution of each chunk to its final state
+    decay_out = jnp.exp(da_total[:, :, None, :] - da_cum)     # [B, nc, Q, H]
+    states = jnp.einsum("bcqgn,bcqh,bcqhp->bchpn",
+                        bc, decay_out.astype(bc.dtype), xc
+                        ).astype(jnp.float32)                 # [B,nc,H,P,N]
+
+    # inter-chunk recurrence over nc (f32 carry for numerical stability)
+    def step(carry, inp):
+        s_prev = carry
+        s_c, da_tot = inp
+        s_new = s_prev * jnp.exp(da_tot)[..., None, None] + s_c
+        return s_new.astype(jnp.float32), s_prev
+
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, prev_states = jax.lax.scan(
+        step, s0,
+        (states.transpose(1, 0, 2, 3, 4), da_total.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # [B, nc, H, P, N]
+
+    # inter-chunk (off-diagonal) output
+    decay_in = jnp.exp(da_cum)                           # [B, nc, Q, H]
+    crep = jnp.repeat(cc, rep, axis=3) if rep > 1 else cc
+    y_off = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp",
+                       crep, decay_in.astype(cc.dtype),
+                       prev_states.astype(cc.dtype))
+    y = (y_diag + y_off.astype(y_diag.dtype)).reshape(b, t, h, p)
+    return y, final
+
+
+def _block(p, cfg, x, *, state=None, conv_state=None, decode=False):
+    """One Mamba-2 block.  Returns (y, new_state, new_conv_state)."""
+    di, h, g, n, conv_dim = _dims(cfg)
+    res = x
+    x = L.apply_norm(p["norm"], cfg, x)
+    zxbcdt = jnp.einsum("btd,dk->btk", x, p["in_proj"])
+    z, xin, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+
+    conv_in = jnp.concatenate([xin, bmat, cmat], -1)     # [B, T, conv_dim]
+    if decode:
+        # rotate the conv state buffer [B, K-1, conv_dim]
+        buf = jnp.concatenate([conv_state, conv_in], axis=1)
+        new_conv_state = buf[:, 1:]
+        k = p["conv_w"].shape[0]
+        out = sum(buf[:, i:i + 1] * p["conv_w"][i] for i in range(k))
+        conv_out = jax.nn.silu(
+            (out + p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+    else:
+        conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+        new_conv_state = conv_in[:, -(p["conv_w"].shape[0] - 1):]
+
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + g * n], axis=-1)
+    bsz, t = x.shape[0], x.shape[1]
+    xh = xin.reshape(bsz, t, h, di // h)
+    bmat = bmat.reshape(bsz, t, g, n)
+    cmat = cmat.reshape(bsz, t, g, n)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                             # [H] negative
+
+    xh = shard(xh, "batch", "seq", "heads", None)
+    if decode:
+        da = jnp.exp(dtf[:, 0, :] * A)                   # [B, H]
+        upd = jnp.einsum("bgn,bh,bhp->bhpn",
+                         bmat[:, 0].astype(jnp.float32),
+                         dtf[:, 0], xh[:, 0].astype(jnp.float32))
+        new_state = state * da[..., None, None] + upd
+        crep = jnp.repeat(cmat[:, 0], h // g, axis=1) if g != h \
+            else cmat[:, 0]
+        y = jnp.einsum("bhn,bhpn->bhp", crep.astype(jnp.float32), new_state)
+        y = (y[:, None]
+             + p["D"][None, None, :, None] * xh.astype(jnp.float32))
+        y = y.astype(x.dtype)
+    else:
+        xdt = xh * dtf[..., None].astype(xh.dtype)
+        y, new_state = ssd_chunked(cfg, xdt, bmat, cmat, dtf, A,
+                                   init_state=state)
+        y = y + p["D"][None, None, :, None].astype(y.dtype) * xh
+
+    y = y.reshape(bsz, t, di)
+    # gated RMSNorm (norm(y * silu(z)))
+    gated = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    gf = gated.astype(jnp.float32)
+    gf = gf * jax.lax.rsqrt((gf * gf).mean(-1, keepdims=True) + 1e-6)
+    gated = (gf * p["gate_norm"]).astype(y.dtype)
+    out = jnp.einsum("btk,kd->btd", gated, p["out_proj"])
+    return res + out, new_state, new_conv_state
+
+
+def forward(params, cfg, batch: Dict[str, jax.Array]) -> jax.Array:
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], cfg, tokens)
+
+    def body(h, lp):
+        out, _, _ = _block(lp, cfg, h)
+        return out, None
+
+    f = body
+    if cfg.remat:
+        f = jax.checkpoint(f, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(f, x, params["layers"])
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    return L.unembed(params["embed"], cfg, x)
+
+
+def cache_spec(cfg, batch_size: int, seq_len: int) -> Dict[str, Any]:
+    """Recurrent caches are O(1) in seq_len — the long_500k point."""
+    di, h, g, n, conv_dim = _dims(cfg)
+    nl, k = cfg.n_layers, cfg.conv_kernel
+    return {
+        "state": Spec((nl, batch_size, h, di // h, n),
+                      ("layers", "batch", "heads", None, "state"),
+                      init="zeros", dtype=jnp.float32),
+        "conv": Spec((nl, batch_size, k - 1, conv_dim),
+                     ("layers", "batch", "conv", "mlp"), init="zeros"),
+        "length": Spec((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+def decode_step(params, cfg, tokens: jax.Array, cache: Dict[str, Any]
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    x = L.embed(params["embed"], cfg, tokens)
+
+    def body(h, lp_cache):
+        lp, st, cv = lp_cache
+        out, ns, ncv = _block(lp, cfg, h, state=st, conv_state=cv,
+                              decode=True)
+        return out, (ns, ncv)
+
+    x, (ns, ncv) = jax.lax.scan(
+        body, x, (params["layers"], cache["state"], cache["conv"]))
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    logits = L.unembed(params["embed"], cfg, x)
+    return logits, dict(state=ns, conv=ncv,
+                        length=cache["length"] + tokens.shape[1])

@@ -1,0 +1,143 @@
+"""Unified model API over all assigned architecture families.
+
+``spec(cfg)`` → parameter Spec tree; ``forward`` → logits; ``cache_spec`` /
+``decode_step`` → serving path.  ``train_step``/``serve_step`` in
+``launch.steps`` build on these.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import mamba2, recurrentgemma, transformer, whisper
+from . import params as P
+
+_FAMILY = {
+    "dense": transformer,
+    "vlm": transformer,
+    "moe": transformer,
+    "audio": whisper,
+    "ssm": mamba2,
+    "hybrid": recurrentgemma,
+}
+
+
+def module_for(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def spec(cfg: ModelConfig):
+    return module_for(cfg).spec(cfg)
+
+
+def init(cfg: ModelConfig, key: jax.Array):
+    return P.init_tree(spec(cfg), key)
+
+
+def axes(cfg: ModelConfig):
+    return P.axes_tree(spec(cfg))
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    return module_for(cfg).forward(params, cfg, batch)
+
+
+def cache_spec(cfg: ModelConfig, batch_size: int, seq_len: int):
+    return module_for(cfg).cache_spec(cfg, batch_size, seq_len)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache):
+    return module_for(cfg).decode_step(params, cfg, tokens, cache)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def next_token_loss(logits: jax.Array, tokens: jax.Array,
+                    text_offset: int = 0) -> jax.Array:
+    """Mean cross-entropy of predicting tokens[:, 1:] from logits.
+
+    ``text_offset`` skips a non-text prefix (vision tokens) in the logits.
+    Implemented with a position mask instead of slicing so no [B, T−1, V]
+    logits copy is materialised, and with f32 confined to fused reductions
+    (logits arrive in bf16).
+    """
+    if text_offset:
+        logits = jax.lax.dynamic_slice_in_dim(
+            logits, text_offset, logits.shape[1] - text_offset, 1)
+    b, t, v = logits.shape
+    # shifted targets; final position masked out
+    tgt = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((b, 1), tokens.dtype)], axis=1)
+    mask = (jnp.arange(t) < t - 1).astype(jnp.float32)[None, :]
+    m = jax.lax.stop_gradient(
+        logits.astype(jnp.float32).max(-1, keepdims=True))
+    logz = (m[..., 0] + jnp.log(
+        jnp.exp(logits.astype(jnp.float32) - m).sum(-1)))
+    gold = jnp.take_along_axis(logits, tgt[..., None], -1)[..., 0]
+    nll = (logz - gold.astype(jnp.float32)) * mask
+    return nll.sum() / mask.sum() / b
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits = forward(params, cfg, batch)
+    offset = 0
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        offset = batch["vision_embeds"].shape[1]
+    loss = next_token_loss(logits, batch["tokens"], text_offset=offset)
+    aux = {"loss": loss}
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct) for the dry-run — no allocation.
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, *, seq_len: int, global_batch: int,
+                kind: str) -> Dict[str, Any]:
+    """Stand-ins for every model input of the given shape cell.
+
+    kind='train'   → {tokens, labels(-free: next-token), +frontend stubs}
+    kind='prefill' → same tensor shapes as train (loss not taken)
+    kind='decode'  → {tokens: [B, 1], cache: prefilled to seq_len}
+    """
+    f32, i32, bf16 = jnp.float32, jnp.int32, jnp.bfloat16
+    b, t = global_batch, seq_len
+
+    if kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((b, t), i32)}
+        if cfg.family == "vlm":
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_tokens, cfg.d_model), bf16)
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_audio_frames, cfg.d_model), bf16)
+        return specs
+
+    assert kind == "decode", kind
+    cache = P.abstract_tree(cache_spec(cfg, b, t))
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32), "cache": cache}
+
+
+def make_batch(cfg: ModelConfig, *, seq_len: int, global_batch: int,
+               key: jax.Array) -> Dict[str, jax.Array]:
+    """Concrete random batch matching ``input_specs`` (smoke tests/examples)."""
+    ks = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(
+        ks[0], (global_batch, seq_len), 0, cfg.vocab, jnp.int32)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            ks[1], (global_batch, cfg.vision_tokens, cfg.d_model),
+            jnp.float32).astype(jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            ks[2], (global_batch, cfg.n_audio_frames, cfg.d_model),
+            jnp.float32).astype(jnp.bfloat16)
+    return batch

@@ -1,0 +1,147 @@
+"""Mixture-of-experts FFN (qwen2-moe: shared + routed top-4; arctic:
+128-expert top-2 + dense residual MLP).
+
+Dispatch is gather-based with a fixed per-expert capacity, *grouped by batch
+row* so the slot-ranking cumsum stays local to each data shard: tokens are
+ranked into expert slots per group, gathered into [B, E, C, d] blocks,
+processed with stacked expert weights (einsum — real FLOPs only, no one-hot
+phantom matmuls that would poison the roofline's useful-FLOPs ratio) and
+combined back with the routing weights.  Overflowing tokens drop (standard
+capacity-factor semantics); the router is softmax-then-top-k with
+renormalised weights.
+
+The expert dim is a first-class logical axis ('experts' → 'model' by default
+= expert parallelism); the group dim stays on ('pod','data'), so GSPMD
+lowers the dispatch/combine boundary into the expected expert-parallel
+collectives, visible in the dry-run HLO.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.shardings import shard
+from .params import Spec
+
+
+def moe_spec(cfg) -> Dict[str, Any]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s: Dict[str, Any] = {
+        "router": Spec((d, e), ("embed_fsdp", "experts"), dtype=jnp.float32),
+        "wi_gate": Spec((e, d, f), ("experts", "expert_embed", "expert_mlp")),
+        "wi_up": Spec((e, d, f), ("experts", "expert_embed", "expert_mlp")),
+        "wo": Spec((e, f, d), ("experts", "expert_mlp", "expert_embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        s["shared"] = {
+            "wi_gate": Spec((d, fs), ("embed_fsdp", "mlp")),
+            "wi_up": Spec((d, fs), ("embed_fsdp", "mlp")),
+            "wo": Spec((fs, d), ("mlp", "embed_fsdp")),
+        }
+    if cfg.moe_dense_residual:
+        fr = cfg.dense_residual_ff
+        s["dense"] = {
+            "wi_gate": Spec((d, fr), ("embed_fsdp", "mlp")),
+            "wi_up": Spec((d, fr), ("embed_fsdp", "mlp")),
+            "wo": Spec((fr, d), ("mlp", "embed_fsdp")),
+        }
+    return s
+
+
+def _swiglu(x, w):
+    g = jnp.einsum("btd,df->btf", x, w["wi_gate"])
+    u = jnp.einsum("btd,df->btf", x, w["wi_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("btf,fd->btd", h, w["wo"])
+
+
+def route(p, cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, T, d] → (expert ids [B, T, K], weights [B, T, K])."""
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, cfg.top_k)
+    w = w / jnp.clip(w.sum(-1, keepdims=True), 1e-9)    # renormalise
+    return ids, w.astype(x.dtype)
+
+
+def capacity(cfg, tokens_per_group: int) -> int:
+    cap = int(math.ceil(tokens_per_group * cfg.top_k * cfg.capacity_factor
+                        / cfg.n_experts))
+    # MXU-aligned capacity avoids ragged tiles downstream
+    return max(8, -(-cap // 8) * 8)
+
+
+def dispatch_plan(cfg, ids: jax.Array, cap: int):
+    """Per-group slotting.  ids: [B, T, K] →
+    (tok4slot [B, E, C], keep [B, T, K], slot_of [B, T, K])."""
+    b, t, k = ids.shape
+    e = cfg.n_experts
+    flat = ids.reshape(b, t * k)
+    onehot = jax.nn.one_hot(flat, e, dtype=jnp.int32)        # [B, TK, E]
+    pos = jnp.cumsum(onehot, axis=1) - 1
+    rank = jnp.take_along_axis(pos, flat[..., None], 2)[..., 0]  # [B, TK]
+    keep = rank < cap
+    slot_key = jnp.where(keep, flat * cap + rank, e * cap)   # overflow bin
+    token_ids = (jnp.arange(t * k, dtype=jnp.int32) // k)[None, :]
+    tok4slot = jnp.zeros((b, e * cap + 1), jnp.int32).at[
+        jnp.arange(b)[:, None], slot_key].set(
+        jnp.broadcast_to(token_ids, (b, t * k)), mode="drop")
+    tok4slot = tok4slot[:, :-1].reshape(b, e, cap)
+    return (tok4slot, keep.reshape(b, t, k),
+            jnp.where(keep, rank, 0).reshape(b, t, k))
+
+
+def apply_moe(p, cfg, x: jax.Array) -> jax.Array:
+    """x: [B, T, d] → [B, T, d] (B = dispatch groups, data-sharded)."""
+    b, t, d = x.shape
+    e = cfg.n_experts
+    ids, w = route(p, cfg, x)
+    cap = capacity(cfg, t)
+    tok4slot, keep, slot_of = dispatch_plan(cfg, ids, cap)
+
+    # gather tokens into expert blocks (group-local)
+    bidx = jnp.arange(b)[:, None]
+    expert_in = x[bidx, tok4slot.reshape(b, e * cap)]        # [B, EC, d]
+    expert_in = expert_in.reshape(b, e, cap, d)
+    expert_in = shard(expert_in, "batch", "experts", "expert_cap", "embed")
+
+    g = jnp.einsum("becd,edf->becf", expert_in, p["wi_gate"])
+    u = jnp.einsum("becd,edf->becf", expert_in, p["wi_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = jnp.einsum("becf,efd->becd", h, p["wo"])
+    # Re-shard expert outputs to group-local BEFORE the combine gather: the
+    # gather's slot indices span every expert, so gathering from an
+    # E/model-sharded operand makes GSPMD replicate + all-reduce the full
+    # [B, T·K, d] result (measured 6.3 TB/chip/step on arctic-480b).  An
+    # explicit all-gather of h over the model axis is ~25× smaller and the
+    # combine becomes shard-local.
+    h = shard(h, "batch", None, "expert_cap", "embed")
+
+    # combine: read each (token, k)'s slot back, weight, and sum over k
+    flat_slots = (ids * cap + slot_of).reshape(b, t * cfg.top_k)
+    gathered = h.reshape(b, e * cap, d)[bidx, flat_slots]
+    gathered = gathered.reshape(b, t, cfg.top_k, d)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    out = jnp.einsum("btkd,btk->btd", gathered, w)
+
+    if cfg.n_shared_experts:
+        out = out + _swiglu(x, p["shared"])
+    if cfg.moe_dense_residual:
+        out = out + _swiglu(x, p["dense"])
+    return out
+
+
+def load_balance_loss(p, cfg, x: jax.Array) -> jax.Array:
+    """Auxiliary loss (Switch-style): E · Σ_e f_e · p̄_e."""
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    _, ids = jax.lax.top_k(probs, cfg.top_k)
+    f = jnp.mean(jax.nn.one_hot(ids, cfg.n_experts, dtype=jnp.float32),
+                 axis=(0, 1, 2))
+    pbar = probs.mean((0, 1))
+    return cfg.n_experts * jnp.sum(f * pbar)

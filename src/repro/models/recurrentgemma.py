@@ -1,0 +1,283 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU recurrent blocks and
+local (sliding-window) attention blocks in a (rec, rec, attn) pattern.
+
+Training runs the RG-LRU with ``jax.lax.associative_scan`` (log-depth linear
+recurrence — the TPU-native way to parallelise h_t = a_t·h_{t−1} + b_t);
+decode is the O(1) state update + a fixed 2048-token ring-buffer KV cache,
+which is why this family runs the 500k long-context shape.
+
+Layers scan over (rec, rec, attn) super-blocks; the pattern remainder
+(38 = 12·3 + 2) is unrolled.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.shardings import shard
+from . import layers as L
+from .params import Spec
+
+
+_C_RGLRU = 8.0     # Griffin's fixed recurrence-sharpness constant
+
+
+def _w(cfg):
+    return cfg.lru_width or cfg.d_model
+
+
+def rec_block_spec(cfg) -> Dict[str, Any]:
+    d, w = cfg.d_model, _w(cfg)
+    return {
+        "norm": L.norm_spec(cfg),
+        "in_x": Spec((d, w), ("embed_fsdp", "mlp")),
+        "in_gate": Spec((d, w), ("embed_fsdp", "mlp")),
+        "conv_w": Spec((4, w), ("conv", "mlp")),
+        "conv_b": Spec((w,), ("mlp",), init="zeros"),
+        "wa": Spec((w, w), ("mlp", None)),         # recurrence gate
+        "ba": Spec((w,), ("mlp",), init="zeros"),
+        "wi": Spec((w, w), ("mlp", None)),         # input gate
+        "bi": Spec((w,), ("mlp",), init="zeros"),
+        "a_param": Spec((w,), ("mlp",), init="lru_a", dtype=jnp.float32),
+        "out": Spec((w, d), ("mlp", "embed_fsdp")),
+    }
+
+
+def attn_block_spec(cfg) -> Dict[str, Any]:
+    return {"norm": L.norm_spec(cfg), "attn": L.attention_spec(cfg)}
+
+
+def mlp_block_spec(cfg) -> Dict[str, Any]:
+    return {"norm": L.norm_spec(cfg), "mlp": L.mlp_spec(cfg)}
+
+
+def superblock_spec(cfg) -> Dict[str, Any]:
+    """(rec, rec, attn), each followed by an MLP block."""
+    return {
+        "rec0": rec_block_spec(cfg), "mlp0": mlp_block_spec(cfg),
+        "rec1": rec_block_spec(cfg), "mlp1": mlp_block_spec(cfg),
+        "attn": attn_block_spec(cfg), "mlp2": mlp_block_spec(cfg),
+    }
+
+
+def layout(cfg) -> Tuple[int, int]:
+    """(#scanned super-blocks, #remainder rec layers)."""
+    n_super = cfg.n_layers // len(cfg.block_pattern)
+    rem = cfg.n_layers - n_super * len(cfg.block_pattern)
+    return n_super, rem
+
+
+def spec(cfg) -> Dict[str, Any]:
+    from .transformer import stack_specs
+    n_super, rem = layout(cfg)
+    s = {
+        "embed": L.embed_spec(cfg),
+        "super": stack_specs(superblock_spec(cfg), n_super),
+        "final_norm": L.norm_spec(cfg),
+    }
+    for i in range(rem):
+        s[f"tail{i}"] = {"rec": rec_block_spec(cfg),
+                         "mlp": mlp_block_spec(cfg)}
+    return s
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def _rg_lru_scan(a: jax.Array, b: jax.Array, h0=None) -> jax.Array:
+    """h_t = a_t · h_{t−1} + b_t over axis 1 via associative scan."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def apply_rec_block(p, cfg, x, *, state=None, conv_state=None,
+                    decode=False):
+    """Griffin recurrent block.  Returns (out, state, conv_state)."""
+    res = x
+    x = L.apply_norm(p["norm"], cfg, x)
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["in_gate"])
+                       .astype(jnp.float32)).astype(x.dtype)
+    xb = jnp.einsum("btd,dw->btw", x, p["in_x"])
+
+    # temporal conv (kernel 4, causal)
+    k = p["conv_w"].shape[0]
+    if decode:
+        buf = jnp.concatenate([conv_state, xb], axis=1)
+        new_conv_state = buf[:, 1:]
+        xc = sum(buf[:, i:i + 1] * p["conv_w"][i] for i in range(k))
+        xc = xc + p["conv_b"]
+    else:
+        pad = jnp.pad(xb, ((0, 0), (k - 1, 0), (0, 0)))
+        xc = sum(pad[:, i:i + xb.shape[1]] * p["conv_w"][i]
+                 for i in range(k)) + p["conv_b"]
+        new_conv_state = xb[:, -(k - 1):]
+
+    # RG-LRU gates
+    r = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", xc, p["wa"])
+                       .astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", xc, p["wi"])
+                       .astype(jnp.float32) + p["bi"])
+    log_a = -_C_RGLRU * r * jax.nn.softplus(p["a_param"])
+    a = jnp.exp(log_a)                                    # [B, T, W]
+    gated_in = (i * xc.astype(jnp.float32)) * jnp.sqrt(
+        jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+
+    if decode:
+        h = a[:, 0] * state + gated_in[:, 0]              # [B, W]
+        new_state = h
+        y = h[:, None]
+    else:
+        h = _rg_lru_scan(a, gated_in,
+                         h0=state if state is not None else None)
+        new_state = h[:, -1]
+        y = h
+    y = (y.astype(x.dtype) * gate)
+    out = jnp.einsum("btw,wd->btd", y, p["out"])
+    return res + out, new_state, new_conv_state
+
+
+def apply_attn_block(p, cfg, x, *, positions, cache=None):
+    res = x
+    h, new_cache = L.mha(p["attn"], cfg, L.apply_norm(p["norm"], cfg, x),
+                         positions=positions, window=cfg.attn_window,
+                         cache=cache)
+    return res + h, new_cache
+
+
+def apply_mlp_block(p, cfg, x):
+    return x + L.apply_mlp(p["mlp"], cfg,
+                           L.apply_norm(p["norm"], cfg, x))
+
+
+def _superblock(sp, cfg, x, *, positions, caches=None):
+    """caches: dict(rec0=(h, conv), rec1=(h, conv), attn=kv) or None."""
+    nc = {}
+    c = caches or {}
+    x, h0, cv0 = apply_rec_block(
+        sp["rec0"], cfg, x, decode=caches is not None,
+        state=c.get("rec0", (None, None))[0],
+        conv_state=c.get("rec0", (None, None))[1])
+    x = apply_mlp_block(sp["mlp0"], cfg, x)
+    x, h1, cv1 = apply_rec_block(
+        sp["rec1"], cfg, x, decode=caches is not None,
+        state=c.get("rec1", (None, None))[0],
+        conv_state=c.get("rec1", (None, None))[1])
+    x = apply_mlp_block(sp["mlp1"], cfg, x)
+    x, kv = apply_attn_block(sp["attn"], cfg, x, positions=positions,
+                             cache=c.get("attn"))
+    x = apply_mlp_block(sp["mlp2"], cfg, x)
+    x = shard(x, "batch", "seq", "embed")
+    nc = dict(rec0=(h0, cv0), rec1=(h1, cv1), attn=kv)
+    return x, nc
+
+
+def forward(params, cfg, batch: Dict[str, jax.Array]) -> jax.Array:
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], cfg, tokens)
+    t = tokens.shape[1]
+    positions = jnp.arange(t, dtype=jnp.int32)[None, :]
+
+    def body(h, sp):
+        out, _ = _superblock(sp, cfg, h, positions=positions)
+        return out, None
+
+    f = body
+    if cfg.remat:
+        f = jax.checkpoint(f, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(f, x, params["super"])
+    n_super, rem = layout(cfg)
+    for i in range(rem):
+        tp = params[f"tail{i}"]
+        x, _, _ = apply_rec_block(tp["rec"], cfg, x)
+        x = apply_mlp_block(tp["mlp"], cfg, x)
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    return L.unembed(params["embed"], cfg, x)
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(1) recurrent state + fixed-window ring KV
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg, batch_size: int, seq_len: int) -> Dict[str, Any]:
+    n_super, rem = layout(cfg)
+    w = _w(cfg)
+    win = min(cfg.attn_window, seq_len)
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    k = 4
+    s = {
+        "rec_h": Spec((n_super, 2, batch_size, w),
+                      ("layers", None, "batch", "mlp"), init="zeros",
+                      dtype=jnp.float32),
+        "rec_conv": Spec((n_super, 2, batch_size, k - 1, w),
+                         ("layers", None, "batch", "conv", "mlp"),
+                         init="zeros"),
+        "attn_k": Spec((n_super, batch_size, win, kvh, hd),
+                       ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                       init="zeros"),
+        "attn_v": Spec((n_super, batch_size, win, kvh, hd),
+                       ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                       init="zeros"),
+        "length": Spec((), (), init="zeros", dtype=jnp.int32),
+    }
+    for i in range(rem):
+        s[f"tail{i}_h"] = Spec((batch_size, w), ("batch", "mlp"),
+                               init="zeros", dtype=jnp.float32)
+        s[f"tail{i}_conv"] = Spec((batch_size, k - 1, w),
+                                  ("batch", "conv", "mlp"), init="zeros")
+    return s
+
+
+def decode_step(params, cfg, tokens: jax.Array, cache: Dict[str, Any]
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    x = L.embed(params["embed"], cfg, tokens)
+    length = cache["length"]
+    win = cache["attn_k"].shape[2]
+    # Window cache: exact while length < window; once full, the newest token
+    # overwrites the final slot (first-order approximation of a ring buffer —
+    # the window mask in L.mha keeps attention scoped either way).
+    positions = length[None, None] * jnp.ones((1, 1), jnp.int32)
+
+    def body(h, xs):
+        sp, rec_h, rec_conv, ak, av = xs
+        caches = dict(
+            rec0=(rec_h[0], rec_conv[0]),
+            rec1=(rec_h[1], rec_conv[1]),
+            attn=dict(k=ak, v=av, length=jnp.minimum(length, win - 1)))
+        out, nc = _superblock(sp, cfg, h, positions=positions,
+                              caches=caches)
+        new_rec_h = jnp.stack([nc["rec0"][0], nc["rec1"][0]])
+        new_rec_conv = jnp.stack([nc["rec0"][1], nc["rec1"][1]])
+        return out, (new_rec_h, new_rec_conv, nc["attn"]["k"],
+                     nc["attn"]["v"])
+
+    x, (nh, ncv, nk, nv) = jax.lax.scan(
+        body, x, (params["super"], cache["rec_h"], cache["rec_conv"],
+                  cache["attn_k"], cache["attn_v"]))
+
+    new_cache = dict(cache)
+    new_cache.update(rec_h=nh, rec_conv=ncv, attn_k=nk, attn_v=nv,
+                     length=length + tokens.shape[1])
+    n_super, rem = layout(cfg)
+    for i in range(rem):
+        tp = params[f"tail{i}"]
+        x, hs, cs = apply_rec_block(
+            tp["rec"], cfg, x, state=cache[f"tail{i}_h"],
+            conv_state=cache[f"tail{i}_conv"], decode=True)
+        x = apply_mlp_block(tp["mlp"], cfg, x)
+        new_cache[f"tail{i}_h"] = hs
+        new_cache[f"tail{i}_conv"] = cs
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    logits = L.unembed(params["embed"], cfg, x)
+    return logits, new_cache

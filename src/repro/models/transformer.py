@@ -1,0 +1,171 @@
+"""Decoder-only transformer family: dense (qwen2.5/stablelm/phi3/qwen2-0.5b),
+VLM backbone (qwen2-vl, M-RoPE + patch-embedding stub) and the MoE variants
+(qwen2-moe, arctic) via the pluggable FFN from ``moe.py``.
+
+Layers are stacked (leading 'layers' dim) and executed with ``jax.lax.scan``
+so HLO size and compile time stay flat in depth; the scan body is optionally
+rematerialised.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.shardings import shard
+from . import layers as L
+from . import moe as moe_mod
+from .params import Spec
+
+
+def stack_specs(tree, n: int):
+    """Add a leading stacked-layers dim to every Spec in the tree."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, ("layers",) + s.axes, init=s.init,
+                       scale=s.scale, dtype=s.dtype),
+        tree, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def block_spec(cfg) -> Dict[str, Any]:
+    s = {
+        "attn_norm": L.norm_spec(cfg),
+        "attn": L.attention_spec(cfg),
+        "mlp_norm": L.norm_spec(cfg),
+    }
+    if cfg.family == "moe":
+        s["ffn"] = moe_mod.moe_spec(cfg)
+    else:
+        s["ffn"] = L.mlp_spec(cfg)
+    return s
+
+
+def spec(cfg) -> Dict[str, Any]:
+    return {
+        "embed": L.embed_spec(cfg),
+        "layers": stack_specs(block_spec(cfg), cfg.n_layers),
+        "final_norm": L.norm_spec(cfg),
+    }
+
+
+def _ffn(p, cfg, x):
+    if cfg.family == "moe":
+        return moe_mod.apply_moe(p, cfg, x)
+    return L.apply_mlp(p, cfg, x)
+
+
+def _block(p, cfg, x, *, positions, cache=None, mrope_pos=None):
+    h, new_cache = L.mha(p["attn"], cfg, L.apply_norm(p["attn_norm"], cfg, x),
+                         positions=positions, cache=cache,
+                         mrope_pos=mrope_pos)
+    x = x + h
+    x = x + _ffn(p["ffn"], cfg, L.apply_norm(p["mlp_norm"], cfg, x))
+    x = shard(x, "batch", "seq", "embed")
+    return x, new_cache
+
+
+def _scan_layers(params, cfg, x, body):
+    """scan over the stacked layer params; body(x, layer_params) -> x."""
+    def f(carry, lp):
+        out = body(carry, lp)
+        return out, None
+
+    if cfg.remat:
+        f = jax.checkpoint(f, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(f, x, params["layers"])
+    return x
+
+
+def mrope_positions(cfg, b: int, v: int, t: int) -> jax.Array:
+    """[3, B, V+T] position ids: vision tokens on an h/w grid, text serial."""
+    side = max(int(v ** 0.5), 1)
+    vis_t = jnp.zeros((v,), jnp.int32)
+    vis_h = (jnp.arange(v) // side).astype(jnp.int32)
+    vis_w = (jnp.arange(v) % side).astype(jnp.int32)
+    start = (jnp.maximum(jnp.maximum(vis_h.max(initial=0),
+                                     vis_w.max(initial=0)), 0) + 1
+             if v else jnp.int32(0))
+    txt = jnp.arange(t, dtype=jnp.int32) + start
+    p3 = jnp.stack([jnp.concatenate([vis_t, txt]),
+                    jnp.concatenate([vis_h, txt]),
+                    jnp.concatenate([vis_w, txt])])       # [3, V+T]
+    return jnp.broadcast_to(p3[:, None, :], (3, b, v + t))
+
+
+def forward(params, cfg, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Train / prefill forward → logits [B, T(+V), vocab]."""
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    x = L.embed(params["embed"], cfg, tokens)
+
+    mrope_pos = None
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        vis = batch["vision_embeds"].astype(x.dtype)     # stub frontend
+        x = jnp.concatenate([vis, x], axis=1)
+        v = vis.shape[1]
+        mrope_pos = mrope_positions(cfg, b, v, t)
+    x = shard(x, "batch", "seq", "embed")
+
+    seq = x.shape[1]
+    positions = jnp.arange(seq, dtype=jnp.int32)[None, :]
+
+    def body(h, lp):
+        out, _ = _block(lp, cfg, h, positions=positions,
+                        mrope_pos=mrope_pos)
+        return out
+
+    x = _scan_layers(params, cfg, x, body)
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    return L.unembed(params["embed"], cfg, x)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a prefilled KV cache)
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg, batch_size: int, seq_len: int) -> Dict[str, Any]:
+    kvh, hd, nl = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    kv = Spec((nl, batch_size, seq_len, kvh, hd),
+              ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+              init="zeros")
+    return {"k": kv, "v": kv,
+            "length": Spec((), (), init="zeros", dtype=jnp.int32)}
+
+
+def decode_step(params, cfg, tokens: jax.Array, cache: Dict[str, Any]
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens: [B, 1] new token ids; cache: stacked per-layer KV.
+
+    Uses fori_loop with the full stacked cache in the carry (in-place
+    dynamic updates) instead of scan xs/ys — scan would double-buffer the
+    multi-GiB KV stack, fori carries alias to a single buffer."""
+    x = L.embed(params["embed"], cfg, tokens)
+    length = cache["length"]
+    positions = jnp.full((1, 1), length, jnp.int32)
+    mrope_pos = None
+    if cfg.family == "vlm":
+        mrope_pos = jnp.broadcast_to(
+            positions[None], (3, tokens.shape[0], 1)).astype(jnp.int32)
+
+    def body(l, carry):
+        h, ck, cv = carry
+        lp = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False),
+            params["layers"])
+        lk = jax.lax.dynamic_index_in_dim(ck, l, 0, keepdims=False)
+        lv = jax.lax.dynamic_index_in_dim(cv, l, 0, keepdims=False)
+        out, nc = _block(lp, cfg, h, positions=positions,
+                         cache=dict(k=lk, v=lv, length=length),
+                         mrope_pos=mrope_pos)
+        ck = jax.lax.dynamic_update_index_in_dim(ck, nc["k"], l, 0)
+        cv = jax.lax.dynamic_update_index_in_dim(cv, nc["v"], l, 0)
+        return (out, ck, cv)
+
+    x, nk, nv = jax.lax.fori_loop(
+        0, cfg.n_layers, body, (x, cache["k"], cache["v"]))
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    logits = L.unembed(params["embed"], cfg, x)
+    new_cache = dict(k=nk, v=nv, length=length + tokens.shape[1])
+    return logits, new_cache

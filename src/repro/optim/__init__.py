@@ -1,0 +1,11 @@
+from .adamw import adamw
+from .adafactor import adafactor
+from .schedule import cosine_schedule
+from .clip import clip_by_global_norm
+
+
+def make_optimizer(cfg, lr=3e-4, **kw):
+    """Optimizer factory keyed off the architecture config."""
+    if cfg.optimizer == "adafactor":
+        return adafactor(lr=lr, **kw)
+    return adamw(lr=lr, **kw)

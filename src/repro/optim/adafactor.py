@@ -1,0 +1,93 @@
+"""Adafactor (Shazeer & Stern): factored second moment, no first moment by
+default, no fp32 master copy — the HBM-fitting optimizer for the ≥70B
+architectures (arctic-480b, qwen2-vl-72b) on 16 GB/chip meshes.
+
+For a parameter of shape [..., R, C] the second moment is kept as row/col
+running means [..., R] and [..., C] (4·(R+C) bytes instead of 4·R·C);
+vectors/scalars keep a full vector moment.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from .adamw import Optimizer
+
+
+def adafactor(lr=1e-3, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              weight_decay=0.0, schedule=None, min_dim_factored=128
+              ) -> Optimizer:
+    def factored(p) -> bool:
+        return (p.ndim >= 2 and p.shape[-1] >= min_dim_factored
+                and p.shape[-2] >= min_dim_factored)
+
+    def init(params):
+        def per(p):
+            if factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"slots": jax.tree.map(per, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step_lr=None):
+        step = state["step"] + 1
+        cur_lr = (schedule(step) if schedule is not None
+                  else jnp.asarray(step_lr if step_lr is not None else lr,
+                                   jnp.float32))
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(g, slot, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "vr" in slot:
+                vr = beta * slot["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * slot["vc"] + (1 - beta) * g2.mean(-2)
+                denom = (vr[..., :, None] * vc[..., None, :]
+                         / jnp.maximum(
+                             vr.mean(-1)[..., None, None], eps))
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                new_slot = {"vr": vr, "vc": vc}
+            else:
+                v = beta * slot["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_slot = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            pf = p.astype(jnp.float32)
+            new_p = pf - cur_lr * (u + weight_decay * pf)
+            return new_p.astype(p.dtype), new_slot
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["slots"])
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_state = {"slots": treedef.unflatten([o[1] for o in outs]),
+                     "step": step}
+        return new_params, new_state
+
+    def state_shardings(param_shardings, params_abstract, mesh):
+        def per(sh, p):
+            # normalise the PartitionSpec to the param rank
+            spec = tuple(sh.spec) + (None,) * (p.ndim - len(sh.spec))
+            if factored(p):
+                return {
+                    "vr": NamedSharding(mesh, PartitionSpec(*spec[:-1])),
+                    "vc": NamedSharding(
+                        mesh, PartitionSpec(*(spec[:-2] + spec[-1:]))),
+                }
+            return {"v": NamedSharding(mesh, PartitionSpec(*spec))}
+
+        slots = jax.tree.map(per, param_shardings, params_abstract)
+        return {"slots": slots,
+                "step": NamedSharding(mesh, PartitionSpec())}
+
+    return Optimizer(init=init, update=update,
+                     state_shardings=state_shardings)

@@ -1,0 +1,87 @@
+"""AdamW with fp32 moments + fp32 master weights over bf16 params.
+
+State layout mirrors the param tree so optimizer state inherits the params'
+NamedShardings (ZeRO-style: state lives wherever its param shard lives).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, Any], Tuple[Any, Any]]
+    # (param_shardings, params_abstract, mesh) -> sharding tree matching init
+    state_shardings: Callable[[Any, Any, Any], Any]
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          schedule=None, keep_master=True) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        st = {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+        if keep_master:
+            # copy=True: f32 params would otherwise alias the master buffer
+            # and break double-donation in the jitted step
+            st["master"] = jax.tree.map(
+                lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+        return st
+
+    def update(grads, state, params, step_lr=None):
+        step = state["step"] + 1
+        cur_lr = (schedule(step) if schedule is not None
+                  else jnp.asarray(step_lr if step_lr is not None else lr,
+                                   jnp.float32))
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p, master):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            base = master if master is not None else p.astype(jnp.float32)
+            step_vec = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            new_master = base - cur_lr * (step_vec + weight_decay * base)
+            return new_master.astype(p.dtype), m, v, new_master
+
+        masters = state.get("master",
+                            jax.tree.map(lambda _: None, params))
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_ma = (treedef.flatten_up_to(state["master"])
+                   if keep_master else [None] * len(flat_p))
+        outs = [upd(g, m, v, p, ma) for g, m, v, p, ma
+                in zip(flat_g, flat_m, flat_v, flat_p, flat_ma)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_state = {
+            "m": treedef.unflatten([o[1] for o in outs]),
+            "v": treedef.unflatten([o[2] for o in outs]),
+            "step": step,
+        }
+        if keep_master:
+            new_state["master"] = treedef.unflatten([o[3] for o in outs])
+        return new_params, new_state
+
+    def state_shardings(param_shardings, params_abstract, mesh):
+        del params_abstract
+        st = {"m": param_shardings, "v": param_shardings,
+              "step": NamedSharding(mesh, PartitionSpec())}
+        if keep_master:
+            st["master"] = param_shardings
+        return st
+
+    return Optimizer(init=init, update=update,
+                     state_shardings=state_shardings)

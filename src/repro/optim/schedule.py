@@ -1,0 +1,26 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int = 100,
+                    total_steps: int = 10_000, min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        t = jnp.clip((step - warmup_steps)
+                     / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, base_lr * cos)
+
+    return lr
+
+
+def constant_schedule(base_lr: float):
+    def lr(step):
+        del step
+        return jnp.asarray(base_lr, jnp.float32)
+
+    return lr

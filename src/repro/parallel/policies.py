@@ -1,0 +1,70 @@
+"""Named sharding-policy overrides for the perf hillclimbs (§Perf).
+
+Each policy is a partial override of ``shardings.DEFAULT_RULES``; the
+dry-run accepts ``--policy <name>`` and records it per cell, so every
+hypothesis→change→measure iteration is reproducible from the CLI.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from .shardings import Rule
+
+POLICIES: Dict[str, Optional[Dict[str, Rule]]] = {
+    # the default rules (FSDP over data on embed dims; TP over model on
+    # mlp/heads/experts; kv_seq sequence-parallel for decode caches)
+    "baseline": None,
+
+    # MoE expert weights stationary: fully shard [E/model, d, f/data] so no
+    # per-layer parameter all-gather is needed — the (much smaller) expert
+    # activations reshard instead.  Hypothesis for the collective-bound
+    # arctic-480b train cell.
+    "expert_stationary": {
+        "expert_embed": None,
+        "expert_mlp": ("data",),
+    },
+
+    # Embedding table sharded on the feature dim instead of vocab: token
+    # gathers become shard-local (no involuntary SPMD rematerialisation);
+    # the unembedding projection keeps its own vocab-sharded weight.
+    # Hypothesis for recurrentgemma-9b (256k vocab).
+    "embed_dsharded": {
+        "vocab_in": None,
+        "embed_lookup": ("model",),
+    },
+
+    # Pure tensor-parallel params (no FSDP all-gathers; params live on the
+    # model axis only).  Trades parameter memory for zero gather traffic —
+    # viable for ≤35B-param models.
+    "tp_only": {
+        "embed_fsdp": None,
+        "expert_embed": None,
+    },
+
+    # Combination used by the optimized arctic cell.
+    "arctic_opt": {
+        "expert_embed": None,
+        "expert_mlp": ("data",),
+        "vocab": ("model",),
+    },
+
+    # FSDP-only (no tensor parallelism): weights shard over ('data','model')
+    # on their embed dims and are all-gathered per layer; removes the
+    # per-layer TP activation all-reduces (2× ring factor) in exchange for
+    # 1×-factor weight gathers.  Wins when weight bytes/layer < 2× the
+    # activation bytes — the ≤10B-param archs.
+    "fsdp_only": {
+        "mlp": None,
+        "heads": None,
+        "kv_heads": None,
+        "embed_fsdp": ("data", "model"),
+        "embed_lookup": ("data", "model"),
+    },
+}
+
+
+def get_policy(name: str) -> Optional[Dict[str, Rule]]:
+    if name not in POLICIES:
+        raise KeyError(f"unknown policy {name!r}; have {sorted(POLICIES)}")
+    return POLICIES[name]

@@ -1,0 +1,149 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Models annotate parameters and activations with *logical* axis names
+('embed', 'mlp', 'heads', 'experts', 'batch', ...).  A rule table maps each
+logical name to zero or more *mesh* axes.  ``spec_for`` resolves a logical
+axes tuple into a ``PartitionSpec``, dropping mesh axes that do not divide
+the dimension (GSPMD would pad — we prefer clean layouts and let the
+autoshard DSE decide when padding is worth it) and never using one mesh axis
+twice within a spec.
+
+The active (mesh, rules) pair is installed by the launcher / trainer via
+``sharding_context``; model code calls ``shard(x, 'batch', 'seq', 'embed')``
+which is a no-op outside a context, so pure-CPU smoke tests run unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Rule = Union[None, str, Tuple[str, ...]]
+
+# Baseline policy: batch data-parallel over (pod, data); big contraction dims
+# tensor-parallel over 'model'; embed FSDP-sharded over 'data' at rest.
+DEFAULT_RULES: Dict[str, Rule] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "embed_fsdp": ("data",),          # used for parameter dim-0 FSDP
+    "embed_lookup": ("data",),        # embedding-table feature dim
+    "vocab": ("model",),
+    "vocab_in": ("model",),           # embedding-table row dim (lookups)
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "experts": ("model",),
+    "expert_cap": None,
+    # expert weight dims get their own logical names so serving/perf
+    # policies can re-lay them out without touching dense layers.
+    # expert_mlp's 'model' only engages when the expert-count dim could not
+    # take it (e.g. qwen2-moe's 60 experts on a 16-way model axis).
+    "expert_embed": ("data",),
+    "expert_mlp": ("model",),
+    "layers": None,
+    "state": None,
+    "conv": None,
+    "frames": None,
+    # decode KV caches: kv_heads rarely divide the model axis (GQA kv=8 vs
+    # 16-way TP), so the cache length is the tensor-parallel dim instead —
+    # sequence-parallel KV, each shard scores its slice and GSPMD stitches
+    # the softmax reductions.
+    "kv_seq": ("model",),
+}
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[Dict[str, Rule]] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules: Optional[Dict[str, Rule]] = None):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def active_rules() -> Dict[str, Rule]:
+    return _CTX.rules or DEFAULT_RULES
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 0
+
+
+def spec_for(shape: Sequence[int],
+             axes: Sequence[Optional[str]],
+             mesh: Mesh,
+             rules: Optional[Dict[str, Rule]] = None) -> PartitionSpec:
+    """Resolve logical axes → PartitionSpec with divisibility fallback."""
+    rules = rules or active_rules()
+    used: set = set()
+    entries = []
+    for dim, logical in zip(shape, axes):
+        rule = rules.get(logical) if logical else None
+        if rule is None:
+            entries.append(None)
+            continue
+        names = (rule,) if isinstance(rule, str) else tuple(rule)
+        names = [n for n in names if n in mesh.shape and n not in used]
+        # longest prefix of the rule whose product divides the dim
+        chosen: Tuple[str, ...] = ()
+        prod = 1
+        for n in names:
+            if dim % (prod * mesh.shape[n]) == 0:
+                chosen = chosen + (n,)
+                prod *= mesh.shape[n]
+            else:
+                break
+        used.update(chosen)
+        if not chosen:
+            entries.append(None)
+        elif len(chosen) == 1:
+            entries.append(chosen[0])
+        else:
+            entries.append(chosen)
+    return PartitionSpec(*entries)
+
+
+def named_sharding(shape, axes, mesh=None, rules=None) -> NamedSharding:
+    mesh = mesh or _CTX.mesh
+    return NamedSharding(mesh, spec_for(shape, axes, mesh, rules))
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Activation sharding constraint; no-op outside a sharding context."""
+    if _CTX.mesh is None:
+        return x
+    s = named_sharding(x.shape, axes)
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def tree_shardings(spec_tree, axes_tree, mesh=None, rules=None):
+    """Spec/array tree + logical-axes tree → NamedSharding tree."""
+    mesh = mesh or _CTX.mesh
+
+    def mk(spec, axes):
+        shape = getattr(spec, "shape")
+        return NamedSharding(mesh, spec_for(shape, axes, mesh, rules))
+
+    return jax.tree.map(mk, spec_tree, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))

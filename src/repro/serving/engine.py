@@ -1,0 +1,112 @@
+"""Batched serving engine: prefill + decode with continuous batching (lite).
+
+The engine owns a fixed-capacity batch of sequence *slots*.  Requests queue
+up; free slots are filled by prefilling the prompt (one forward over the
+prompt, writing the KV cache region for that slot), then all active slots
+decode in lock-step single-token steps (the classic batched-decode loop —
+what ``serve_step`` lowers in the dry-run).  Finished sequences free their
+slot for the next queued request ("continuous batching" at slot
+granularity).
+
+For the recurrent families the cache is the O(1) state tree, and prefill is
+a scan over the prompt (state carried) — same engine API.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import model_zoo as Z
+from ..models import params as P
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # [T] int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
+                 max_seq: int = 256, eos_id: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.queue: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self.finished: List[Request] = []
+        self.cache = P.init_tree(
+            Z.cache_spec(cfg, batch_slots, max_seq), jax.random.key(0))
+        self._decode = jax.jit(
+            lambda p, t, c: Z.decode_step(p, cfg, t, c))
+
+    # -- admission ------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[slot] = req
+                self._prefill(slot, req)
+
+    def _prefill(self, slot: int, req: Request):
+        """Sequential prefill through decode_step (slot-isolated writes).
+
+        Lock-step engine: prompt tokens stream through the same decode path
+        that serving lowers; production prefill fuses this into one forward
+        (see launch.steps.build_prefill_step, exercised by the dry-run).
+        """
+        for tok in req.prompt:
+            t = jnp.zeros((self.slots, 1), jnp.int32).at[slot, 0].set(
+                int(tok))
+            logits, self.cache = self._decode(self.params, t, self.cache)
+
+    # -- decode loop ------------------------------------------------------------
+    def step(self) -> Dict[int, int]:
+        """One lock-step decode across all active slots → {rid: token}."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return {}
+        last = jnp.zeros((self.slots, 1), jnp.int32)
+        for s, req in enumerate(self.active):
+            if req is not None and req.out_tokens:
+                last = last.at[s, 0].set(req.out_tokens[-1])
+            elif req is not None and len(req.prompt):
+                last = last.at[s, 0].set(int(req.prompt[-1]))
+        logits, self.cache = self._decode(self.params, last, self.cache)
+        toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        emitted = {}
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(toks[s])
+            req.out_tokens.append(tok)
+            emitted[req.rid] = tok
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or (self.eos_id is not None and tok == self.eos_id)):
+                req.done = True
+                self.finished.append(req)
+                self.active[s] = None       # slot freed → continuous batching
+        return emitted
+
+    finished: List[Request]
+
+    def run_until_drained(self, max_steps: int = 1000) -> List[Request]:
+        for _ in range(max_steps):
+            self.step()
+            if not self.queue and all(a is None for a in self.active):
+                break
+        return self.finished

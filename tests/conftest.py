@@ -1,0 +1,5 @@
+import os
+
+# Smoke tests and benches must see the real (single-CPU) device set; only
+# launch/dryrun.py forces 512 host devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

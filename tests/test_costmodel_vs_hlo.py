@@ -1,0 +1,56 @@
+"""Cross-validation: the analytic TPU cost model vs the trip-count-aware
+HLO parse of the compiled dry-run cells (when available).
+
+The analytic model feeds the autoshard DSE and B&B pipeline staging; it
+should land within an order of magnitude of the compiled FLOPs (the HLO
+adds remat re-forward, attention, CPU f32 promotion) — this test pins that
+relationship so silent drift in either side gets caught.
+"""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.tpu_costmodel import ShardingPolicy, step_time
+
+CELLS = Path("experiments/dryrun")
+
+
+def _cell(arch, shape="train_4k"):
+    f = CELLS / f"{arch}__{shape}__single.json"
+    if not f.exists():
+        pytest.skip("dry-run cells not generated")
+    r = json.loads(f.read_text())
+    if r.get("status") != "ok":
+        pytest.skip(f"cell not ok: {r.get('status')}")
+    return r
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "qwen2-0.5b",
+                                  "phi3-mini-3.8b", "mamba2-2.7b"])
+def test_analytic_flops_within_order_of_magnitude(arch):
+    r = _cell(arch)
+    hlo_flops = r["roofline"]["flops"]          # per chip
+    pol = ShardingPolicy("baseline", dp=16, tp=16, fsdp=16)
+    st = step_time(get_config(arch), pol, seq_len=4096, global_batch=256)
+    analytic = st["flops"] / 1                  # per chip (dp×tp = 256)
+    ratio = hlo_flops / analytic
+    assert 0.1 < ratio < 30.0, (arch, ratio)
+
+
+def test_model_flops_lower_bounds_hlo():
+    """6·N·D can never exceed what the compiler actually scheduled."""
+    for arch in ("qwen2.5-32b", "phi3-mini-3.8b", "stablelm-1.6b"):
+        r = _cell(arch)
+        rl = r["roofline"]
+        assert rl["model_flops"] <= rl["flops"] * 1.05, arch
+        assert 0.0 < rl["useful_flops_ratio"] <= 1.05, arch
+
+
+def test_decode_cells_are_light_for_recurrent_archs():
+    """The long_500k O(1)-state claim, quantitatively."""
+    for arch in ("mamba2-2.7b", "recurrentgemma-9b"):
+        r = _cell(arch, "long_500k")
+        assert r["per_device_gib"] < 1.0, (arch, r["per_device_gib"])

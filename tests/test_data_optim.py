@@ -1,0 +1,86 @@
+"""Data pipeline determinism/sharding + optimizer behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import DataPipeline, SyntheticLM
+from repro.optim import adafactor, adamw
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim import compress
+
+
+def test_data_deterministic_replay():
+    src = SyntheticLM(1000, seed=3)
+    a = src.sample(step=5, index=2, seq_len=64)
+    b = src.sample(step=5, index=2, seq_len=64)
+    c = src.sample(step=6, index=2, seq_len=64)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_data_host_sharding_disjoint():
+    src = SyntheticLM(1000, seed=0)
+    p0 = DataPipeline(src, global_batch=8, seq_len=16, host_id=0,
+                      num_hosts=2)
+    p1 = DataPipeline(src, global_batch=8, seq_len=16, host_id=1,
+                      num_hosts=2)
+    b0 = p0._make_batch(0)["tokens"]
+    b1 = p1._make_batch(0)["tokens"]
+    p0.close(); p1.close()
+    assert b0.shape == (4, 16)
+    assert not np.array_equal(b0, b1)
+    # resumability: state round-trip
+    assert p0.state()["num_hosts"] == 2
+
+
+def test_data_prefetch_iterates():
+    src = SyntheticLM(100, seed=1)
+    p = DataPipeline(src, global_batch=4, seq_len=8)
+    batches = [next(p) for _ in range(3)]
+    p.close()
+    assert all(b["tokens"].shape == (4, 8) for b in batches)
+
+
+def _quadratic_descent(opt):
+    target = jnp.asarray([1.0, -2.0, 3.0] * 50, jnp.float32).reshape(10, 15)
+    params = {"w": jnp.zeros((10, 15), jnp.bfloat16)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.mean((p["w"].astype(jnp.float32) - target) ** 2)
+
+    l0 = loss(params)
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, step_lr=0.1)
+    return float(l0), float(loss(params))
+
+
+def test_adamw_descends():
+    l0, l1 = _quadratic_descent(adamw(keep_master=True))
+    assert l1 < 0.2 * l0
+
+
+def test_adafactor_descends():
+    l0, l1 = _quadratic_descent(adafactor(min_dim_factored=8))
+    assert l1 < 0.5 * l0
+
+
+def test_clip_bounds_norm():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(global_norm(clipped)) <= 1.0 + 1e-5
+    assert float(norm) > 100.0
+
+
+def test_ef_int8_roundtrip_error_feedback():
+    g = {"w": jnp.linspace(-1, 1, 256).reshape(16, 16)}
+    qs, ss, res = compress.ef_int8_compress(g, None)
+    deq = compress.ef_int8_decompress(qs, ss)
+    err = float(jnp.max(jnp.abs(deq["w"] - g["w"])))
+    assert err < 1.0 / 127 + 1e-6
+    # residual carries exactly the quantisation error
+    np.testing.assert_allclose(np.asarray(res["w"]),
+                               np.asarray(g["w"] - deq["w"]), atol=1e-6)

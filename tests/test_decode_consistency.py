@@ -1,0 +1,78 @@
+"""Decode-vs-forward consistency: token-by-token decoding from an empty
+cache must reproduce the training forward's logits (teacher forcing)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model_zoo as Z
+from repro.models import params as P
+
+KEY = jax.random.key(7)
+T = 12
+
+
+def _decode_all(cfg, params, tokens, cache):
+    outs = []
+    for i in range(tokens.shape[1]):
+        logits, cache = Z.decode_step(params, cfg, tokens[:, i:i + 1], cache)
+        outs.append(logits[:, 0])
+    return jnp.stack(outs, axis=1)
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "phi3-mini-3.8b",
+                                  "stablelm-1.6b", "qwen2-moe-a2.7b"])
+def test_transformer_decode_matches_forward(arch):
+    cfg = get_config(arch).smoke()
+    params = Z.init(cfg, KEY)
+    tokens = jax.random.randint(KEY, (2, T), 0, cfg.vocab, jnp.int32)
+    full = Z.forward(params, cfg, {"tokens": tokens})
+    cache = P.init_tree(Z.cache_spec(cfg, 2, T + 4), KEY)
+    dec = _decode_all(cfg, params, tokens, cache)
+    np.testing.assert_allclose(
+        np.asarray(full, np.float32), np.asarray(dec, np.float32),
+        rtol=0.12, atol=0.12)           # bf16 accumulation-order tolerance
+
+
+def test_mamba2_decode_matches_forward():
+    cfg = get_config("mamba2-2.7b").smoke()
+    params = Z.init(cfg, KEY)
+    tokens = jax.random.randint(KEY, (2, 8), 0, cfg.vocab, jnp.int32)
+    full = Z.forward(params, cfg, {"tokens": tokens})
+    cache = P.init_tree(Z.cache_spec(cfg, 2, 8), KEY)
+    dec = _decode_all(cfg, params, tokens, cache)
+    np.testing.assert_allclose(
+        np.asarray(full, np.float32), np.asarray(dec, np.float32),
+        rtol=0.15, atol=0.15)
+
+
+def test_recurrentgemma_decode_matches_forward():
+    cfg = get_config("recurrentgemma-9b").smoke()
+    params = Z.init(cfg, KEY)
+    t = min(8, cfg.attn_window - 1)      # exact while within the window
+    tokens = jax.random.randint(KEY, (2, t), 0, cfg.vocab, jnp.int32)
+    full = Z.forward(params, cfg, {"tokens": tokens})
+    cache = P.init_tree(Z.cache_spec(cfg, 2, cfg.attn_window), KEY)
+    dec = _decode_all(cfg, params, tokens, cache)
+    np.testing.assert_allclose(
+        np.asarray(full, np.float32), np.asarray(dec, np.float32),
+        rtol=0.15, atol=0.15)
+
+
+def test_whisper_decode_matches_forward():
+    cfg = get_config("whisper-base").smoke()
+    params = Z.init(cfg, KEY)
+    frames = jax.random.normal(
+        KEY, (2, cfg.n_audio_frames, cfg.d_model)).astype(jnp.bfloat16)
+    tokens = jax.random.randint(KEY, (2, 8), 0, cfg.vocab, jnp.int32)
+    full = Z.forward(params, cfg, {"tokens": tokens, "frames": frames})
+    from repro.models import whisper
+    cache = P.init_tree(Z.cache_spec(cfg, 2, 12), KEY)
+    ck, cv = whisper.init_cross_cache(params, cfg, frames)
+    cache = dict(cache, cross_k=ck, cross_v=cv)
+    dec = _decode_all(cfg, params, tokens, cache)
+    np.testing.assert_allclose(
+        np.asarray(full, np.float32), np.asarray(dec, np.float32),
+        rtol=0.15, atol=0.15)

@@ -1,0 +1,80 @@
+"""DSE (Tables 1–5) and the heterogeneous chip scheme (§IV.A)."""
+
+import numpy as np
+import pytest
+
+from repro.core import dse, hetero, topology
+
+
+@pytest.fixture(scope="module")
+def sweeps():
+    return {name: dse.sweep_network(topology.get_network(name), name)
+            for name in ("VGG16", "GoogleNet", "ResNet50", "MobileNet",
+                         "AlexNet", "Xception")}
+
+
+def test_sweep_shape_and_positivity(sweeps):
+    sw = sweeps["VGG16"]
+    assert sw.energy.shape == (6, 5, 5)
+    assert (sw.energy > 0).all() and (sw.latency > 0).all()
+
+
+def test_mu_delta_structure(sweeps):
+    """Table 1 vs Table 2: psum sweeps move energy at least as much as
+    ifmap sweeps for the large-psum-sensitivity nets."""
+    for net in ("VGG16", "GoogleNet"):
+        t1 = dse.mu_delta(sweeps[net], swept="ifmap")
+        t2 = dse.mu_delta(sweeps[net], swept="psum")
+        for arr in t1:
+            mu1, d1 = t1[arr]
+            mu2, d2 = t2[arr]
+            assert mu1 >= 0 and d1 >= mu1 - 1e-9
+            assert mu2 >= 0 and d2 >= mu2 - 1e-9
+        # at [16,16] the psum effect dominates (paper's headline contrast)
+        assert t2[(16, 16)][1] > t1[(16, 16)][1]
+
+
+def test_delta_whole_space_ge_line_sweeps(sweeps):
+    for net, sw in sweeps.items():
+        d3 = dse.delta_whole_space(sw)
+        t2 = dse.mu_delta(sw, swept="psum")
+        for arr in d3:
+            assert d3[arr] >= t2[arr][1] - 1e-9
+
+
+def test_edp_spread_positive(sweeps):
+    mean, mx = dse.edp_spread(sweeps["VGG16"])
+    assert 0 < mean < mx
+
+
+def test_boundary_configs_contains_min(sweeps):
+    for sw in sweeps.values():
+        cells = dse.boundary_configs(sw, bound=0.05)
+        assert sw.argmin_cell() == cells[0]
+        edp = sw.edp
+        mn = edp[cells[0]]
+        for c in cells:
+            assert edp[c] <= mn * 1.05 + 1e-9
+
+
+def test_chip_design_covers_everything(sweeps):
+    chip = hetero.design_chip(sweeps, bound=0.05, max_cores=3)
+    assert set(chip.assignment) == set(sweeps)
+    assert 1 <= len(chip.core_types) <= 3
+    sav = hetero.savings_summary(chip)
+    for name, s in sav.items():
+        assert s["energy_saved"] >= -1e-9
+        assert s["edp_saved"] >= -1e-9
+
+
+def test_cross_penalty_nonnegative_own_core(sweeps):
+    chip = hetero.design_chip(sweeps, bound=0.05, max_cores=2)
+    if len(chip.core_types) < 2:
+        pytest.skip("single common config covers all")
+    for name in chip.assignment:
+        own = chip.assignment[name]
+        other = 1 - own
+        pen = hetero.cross_penalty(chip, name, other)
+        # running on the other core can't beat the assigned one by much
+        # (assignment picks the near-optimal core)
+        assert pen["dEDP"] >= -5.0

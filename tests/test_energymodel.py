@@ -1,0 +1,108 @@
+"""The Tool (§II): invariants and the paper's Observations 1–4."""
+
+import numpy as np
+import pytest
+
+from repro.core import accelerator, energymodel, topology
+
+SIZES = (13, 27, 54, 108, 216)
+
+
+def _cfg(rows=16, cols=16, ps=54, ifm=54):
+    return accelerator.AcceleratorConfig(
+        array_rows=rows, array_cols=cols, gb_psum_kb=ps, gb_ifmap_kb=ifm)
+
+
+@pytest.fixture(scope="module")
+def vgg16():
+    return topology.get_network("VGG16")
+
+
+def test_energy_is_cumulative(vgg16):
+    rep = energymodel.simulate_network(_cfg(), vgg16)
+    assert rep.energy == pytest.approx(sum(l.energy for l in rep.layers))
+    assert rep.latency == pytest.approx(sum(l.latency for l in rep.layers))
+
+
+def test_all_networks_simulate_positive():
+    cfg = _cfg()
+    for name in topology.NETWORKS:
+        rep = energymodel.simulate_network(cfg, topology.get_network(name))
+        assert rep.energy > 0 and rep.latency > 0, name
+        assert all(l.energy >= 0 and l.latency > 0 for l in rep.layers)
+
+
+def test_mac_counts_match_known_values(vgg16):
+    gmacs = sum(l.macs for l in vgg16) / 1e9
+    assert 14.5 < gmacs < 16.5          # published VGG16 ≈ 15.5 GMACs
+    resnet = topology.get_network("ResNet50")
+    assert 3.0 < sum(l.macs for l in resnet) / 1e9 < 4.3
+
+
+def test_scalar_matches_vectorised(vgg16):
+    grid = list(accelerator.config_grid().values())[:10]
+    e_vec, t_vec = energymodel.simulate_grid(grid, vgg16)
+    for i in (0, 3, 7):
+        rep = energymodel.simulate_network(grid[i], vgg16)
+        assert rep.energy == pytest.approx(e_vec[i], rel=1e-12)
+        assert rep.latency == pytest.approx(t_vec[i], rel=1e-12)
+
+
+def test_jax_path_matches_numpy(vgg16):
+    grid = list(accelerator.config_grid().values())[:25]
+    e_np, t_np = energymodel.simulate_grid(grid, vgg16)
+    e_jx, t_jx = energymodel.simulate_grid(grid, vgg16, use_jax=True)
+    np.testing.assert_allclose(e_np, e_jx, rtol=1e-9)
+    np.testing.assert_allclose(t_np, t_jx, rtol=1e-9)
+
+
+def test_observation1_interior_minimum(vgg16):
+    """Obs 1: at fixed GB_ifmap, energy vs GB_psum has an interior or
+    boundary minimum away from the smallest size (spill cost dominates)."""
+    es = [energymodel.simulate_network(_cfg(ps=ps, ifm=216), vgg16).energy
+          for ps in SIZES]
+    assert np.argmin(es) > 0            # 13KB is never the best
+    assert max(es) / min(es) > 1.05     # and the spread is material
+
+
+def test_observation2_more_rounds_cost_energy(vgg16):
+    """Starving GB_ifmap must not reduce energy (rounds inflation)."""
+    e_small = energymodel.simulate_network(_cfg(ifm=13, ps=54,
+                                                rows=64, cols=64),
+                                           vgg16).energy
+    e_big = energymodel.simulate_network(_cfg(ifm=216, ps=54,
+                                              rows=64, cols=64),
+                                         vgg16).energy
+    assert e_small >= e_big * 0.99
+
+
+def test_observation3_psum_size_gates_latency(vgg16):
+    """Obs 3: larger array only pays off with commensurate GB_psum."""
+    t13 = energymodel.simulate_network(
+        _cfg(rows=32, cols=32, ps=13, ifm=216), vgg16).latency
+    t108 = energymodel.simulate_network(
+        _cfg(rows=32, cols=32, ps=108, ifm=216), vgg16).latency
+    assert t13 > t108
+
+
+def test_array_growth_reduces_compute_time(vgg16):
+    """Fig. 8: array compute time decreases (sub-linearly) with array."""
+    t = {}
+    for r in (16, 32, 64):
+        rep = energymodel.simulate_network(_cfg(rows=r, cols=r, ps=216,
+                                                ifm=216), vgg16)
+        t[r] = sum(l.array_time for l in rep.layers)
+    assert t[16] > t[32] > t[64]
+
+
+def test_psum_spill_tracking(vgg16):
+    rep13 = energymodel.simulate_network(_cfg(ps=13, ifm=216), vgg16)
+    rep216 = energymodel.simulate_network(_cfg(ps=216, ifm=216), vgg16)
+    assert sum(l.psum_spilled for l in rep13.layers) > \
+        sum(l.psum_spilled for l in rep216.layers)
+
+
+def test_utilization_bounded(vgg16):
+    rep = energymodel.simulate_network(_cfg(), vgg16)
+    for l in rep.layers:
+        assert 0.0 <= l.utilization <= 1.0 + 1e-9

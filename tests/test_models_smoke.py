@@ -1,0 +1,95 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family config,
+one forward + one train step on CPU, asserting shapes and finiteness."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.models import model_zoo as Z
+from repro.models import params as P
+
+KEY = jax.random.key(0)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).smoke()
+    params = Z.init(cfg, KEY)
+    batch = Z.make_batch(cfg, seq_len=32, global_batch=2, key=KEY)
+    logits = Z.forward(params, cfg, batch)
+    extra = cfg.vision_tokens if cfg.family == "vlm" else 0
+    assert logits.shape == (2, 32 + extra, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_one_train_step_no_nans(arch):
+    cfg = get_config(arch).smoke()
+    params = Z.init(cfg, KEY)
+    batch = Z.make_batch(cfg, seq_len=32, global_batch=2, key=KEY)
+
+    def loss_fn(p):
+        return Z.loss_fn(p, cfg, batch)[0]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    leaves = jax.tree.leaves(grads)
+    assert leaves, "no gradients produced"
+    for g in leaves:
+        assert bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_decode_step_shapes(arch):
+    cfg = get_config(arch).smoke()
+    params = Z.init(cfg, KEY)
+    cache = P.init_tree(Z.cache_spec(cfg, 2, 48), KEY)
+    if cfg.family == "audio":
+        from repro.models import whisper
+        frames = jax.random.normal(
+            KEY, (2, cfg.n_audio_frames, cfg.d_model)).astype(jnp.bfloat16)
+        ck, cv = whisper.init_cross_cache(params, cfg, frames)
+        cache = dict(cache, cross_k=ck, cross_v=cv)
+    toks = jnp.ones((2, 1), jnp.int32)
+    logits, cache = Z.decode_step(params, cfg, toks, cache)
+    logits, cache = Z.decode_step(params, cfg, toks, cache)
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert int(cache["length"]) == 2
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_param_counts_full_configs():
+    """Full (non-smoke) configs land near their nameplate sizes."""
+    expect = {
+        "qwen2-0.5b": (0.3e9, 0.8e9),
+        "stablelm-1.6b": (1.2e9, 2.2e9),
+        "mamba2-2.7b": (2.0e9, 3.4e9),
+        "phi3-mini-3.8b": (3.2e9, 4.4e9),
+        "recurrentgemma-9b": (7.5e9, 11e9),
+        "qwen2.5-32b": (28e9, 36e9),
+        "qwen2-vl-72b": (65e9, 80e9),
+        "arctic-480b": (420e9, 520e9),
+        "qwen2-moe-a2.7b": (12e9, 16e9),     # 14.3B total, 2.7B active
+        "whisper-base": (0.05e9, 0.12e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = P.count_params(Z.spec(get_config(arch)))
+        assert lo < n < hi, (arch, f"{n:,}")
+
+
+def test_active_params_moe():
+    cfg = get_config("qwen2-moe-a2.7b")
+    assert cfg.active_param_count() < 0.45 * cfg.param_count()
+    arctic = get_config("arctic-480b")
+    assert arctic.active_param_count() < 0.1 * arctic.param_count()
+
+
+def test_shape_applicability_rules():
+    runs, _ = shape_applicable("mamba2-2.7b", "long_500k")
+    assert runs
+    runs, reason = shape_applicable("qwen2.5-32b", "long_500k")
+    assert not runs and "attention" in reason
+    for arch in ARCHS:
+        for shape in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(arch, shape)[0]

@@ -1,0 +1,77 @@
+"""Algorithm II (branch-and-bound layer distribution): property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import accelerator, energymodel, partition, topology
+
+lat_lists = st.lists(st.floats(0.01, 100.0), min_size=2, max_size=14)
+cores = st.integers(2, 5)
+
+
+@given(lat_lists, cores)
+@settings(max_examples=200, deadline=None)
+def test_dp_matches_bruteforce(lat, k):
+    k = min(k, len(lat))
+    dp = partition.dp_partition(lat, k)
+    bf = partition.brute_force_partition(lat, k)
+    assert dp.pipeline_latency == pytest.approx(bf.pipeline_latency)
+
+
+@given(lat_lists, cores)
+@settings(max_examples=200, deadline=None)
+def test_bb_is_valid_and_near_optimal(lat, k):
+    k = min(k, len(lat))
+    bb = partition.bb_partition(lat, k)
+    dp = partition.dp_partition(lat, k)
+    # valid contiguous partition
+    assert bb.boundaries[0] == 0
+    assert list(bb.boundaries) == sorted(set(bb.boundaries))
+    assert len(bb.loads) <= k
+    assert sum(bb.loads) == pytest.approx(sum(lat))
+    # never better than optimal; near-optimal in the paper's sense
+    assert bb.pipeline_latency >= dp.pipeline_latency - 1e-9
+    assert bb.pipeline_latency <= dp.pipeline_latency * 1.5 + 1e-9
+
+
+@given(lat_lists, cores)
+@settings(max_examples=100, deadline=None)
+def test_speedup_bounds(lat, k):
+    k = min(k, len(lat))
+    p = partition.bb_partition(lat, k)
+    assert 1.0 - 1e-9 <= p.speedup <= k + 1e-9
+
+
+@given(lat_lists)
+@settings(max_examples=50, deadline=None)
+def test_single_core_identity(lat):
+    p = partition.bb_partition(lat, 1)
+    assert p.speedup == pytest.approx(1.0)
+    assert p.pipeline_latency == pytest.approx(sum(lat))
+
+
+def test_tables_7_8_scenario():
+    """Tables 7–8: near-ideal speedups on the paper's two core configs."""
+    cfg3 = accelerator.AcceleratorConfig(array_rows=32, array_cols=32,
+                                         gb_psum_kb=54, gb_ifmap_kb=54)
+    cfg4 = accelerator.AcceleratorConfig(array_rows=12, array_cols=14,
+                                         gb_psum_kb=216, gb_ifmap_kb=54)
+    for net, cfg, k, smin in [
+            ("ResNet50", cfg3, 3, 2.5), ("DenseNet121", cfg3, 3, 2.5),
+            ("GoogleNet", cfg4, 4, 3.0), ("MobileNetV2", cfg4, 4, 3.0)]:
+        rep = energymodel.simulate_network(cfg, topology.get_network(net))
+        p = partition.partition_network(rep, k)
+        assert p.speedup >= smin, (net, p.speedup)
+        rows = p.table_row()
+        assert rows[0][0] == 1                      # 1-indexed first layer
+        assert sum(r[1] for r in rows) == len(rep.layers)
+
+
+def test_bb_equals_dp_on_benchmarks():
+    cfg = accelerator.AcceleratorConfig()
+    for net in ("VGG16", "ResNet50", "MobileNet"):
+        rep = energymodel.simulate_network(cfg, topology.get_network(net))
+        bb = partition.partition_network(rep, 4)
+        dp = partition.partition_network(rep, 4, "dp")
+        assert bb.pipeline_latency <= dp.pipeline_latency * 1.05

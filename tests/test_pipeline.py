@@ -1,0 +1,99 @@
+"""B&B-staged GPipe pipeline: planning + numerical equivalence with the
+sequential execution on a CPU debug mesh."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.partition import dp_partition
+from repro.parallel import pipeline as PP
+
+
+def test_plan_stages_balances():
+    lat = [5.0, 1.0, 1.0, 1.0, 4.0, 4.0]
+    plan = PP.plan_stages(lat, 3)
+    assert plan.n_stages == 3
+    assert sum(plan.stage_sizes) == len(lat)
+    dp = dp_partition(lat, 3)
+    assert plan.partition.pipeline_latency <= dp.pipeline_latency * 1.5
+
+
+def test_bubble_fraction():
+    plan = PP.plan_stages([1.0] * 8, 4)
+    assert plan.bubble(4) == pytest.approx(3 / 7)
+    assert plan.bubble(16) < plan.bubble(4)
+
+
+def test_stage_params_padding():
+    stacked = {"w": jnp.arange(10.0).reshape(5, 2)}
+    plan = PP.plan_stages([1, 1, 1, 3, 3], 2)     # e.g. sizes (3, 2) or (4,1)
+    staged, mask = PP.stage_params(stacked, plan)
+    assert staged["w"].shape == (2, plan.max_depth, 2)
+    assert mask.shape == (2, plan.max_depth)
+    assert int(mask.sum()) == 5
+
+
+@pytest.mark.skipif(len(jax.devices()) > 1, reason="needs host re-init")
+def test_pipeline_matches_sequential():
+    # build a tiny 4-stage mesh out of forced host devices in a subprocess-
+    # free way: reuse the current single device only if forced count is set.
+    if len(jax.devices()) < 4:
+        pytest.skip("single-device session; covered by test_multidev below")
+
+
+def _mlp_layer(lp, x):
+    return jnp.tanh(x @ lp["w"] + lp["b"])
+
+
+def test_pipeline_multidev_subprocess():
+    """Run the equivalence check in a subprocess with 4 host devices."""
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.parallel import pipeline as PP
+
+        L, D, M, BM, T = 6, 16, 4, 2, 8
+        key = jax.random.key(0)
+        ks = jax.random.split(key, 3)
+        stacked = {
+            "w": jax.random.normal(ks[0], (L, D, D)) * 0.3,
+            "b": jax.random.normal(ks[1], (L, D)) * 0.1,
+        }
+        x = jax.random.normal(ks[2], (M, BM, T, D))
+
+        def layer_fn(lp, h):
+            return jnp.tanh(h @ lp["w"] + lp["b"])
+
+        # sequential reference
+        def seq(x):
+            h = x
+            for l in range(L):
+                lp = {k: v[l] for k, v in stacked.items()}
+                h = layer_fn(lp, h)
+            return h
+        ref = jax.vmap(seq)(x)
+
+        mesh = jax.make_mesh((4,), ("stage",))
+        lat = [1.0] * L
+        plan = PP.plan_stages(lat, 4)
+        staged, mask = PP.stage_params(stacked, plan)
+        out = PP.pipeline_forward(staged, mask, x, mesh=mesh,
+                                  stage_axis="stage", layer_fn=layer_fn)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        print("PIPELINE-OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=os.path.dirname(
+                           os.path.dirname(os.path.abspath(__file__))),
+                       env=env, timeout=300)
+    assert "PIPELINE-OK" in r.stdout, r.stdout + r.stderr

@@ -1,0 +1,80 @@
+"""Logical-axis rule resolution: divisibility fallback properties."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec
+
+from repro.launch.mesh import make_debug_mesh
+from repro.parallel import shardings as S
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_debug_mesh()
+
+
+def test_divisible_dims_get_sharded(mesh):
+    spec = S.spec_for((16, 32), ("batch", "mlp"), mesh)
+    # debug mesh on 1 device: axes exist but may be size 1 — still valid
+    assert isinstance(spec, PartitionSpec)
+
+
+def test_indivisible_dim_falls_back_to_none(mesh):
+    # 'model' axis size divides 32 but not 7
+    spec = S.spec_for((7,), ("mlp",), mesh)
+    model = mesh.shape["model"]
+    if model > 1:
+        assert spec[0] is None
+
+
+def test_axis_never_used_twice(mesh):
+    spec = S.spec_for((32, 32), ("mlp", "mlp"), mesh)
+    used = [e for e in spec if e is not None]
+    flat = []
+    for e in used:
+        flat.extend(e if isinstance(e, tuple) else [e])
+    assert len(flat) == len(set(flat))
+
+
+@given(st.integers(1, 512), st.integers(1, 512))
+@settings(max_examples=80, deadline=None)
+def test_spec_respects_divisibility(d0, d1):
+    mesh = make_debug_mesh()
+    spec = S.spec_for((d0, d1), ("mlp", "embed_fsdp"), mesh)
+    for dim, entry in zip((d0, d1), spec):
+        if entry is None:
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for n in names:
+            prod *= mesh.shape[n]
+        assert dim % prod == 0
+
+
+def test_shard_noop_outside_context():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert S.shard(x, "batch", None) is x
+
+
+def test_production_mesh_subprocess():
+    """make_production_mesh builds both meshes with 512 forced devices."""
+    code = (
+        'import os; '
+        'os.environ["XLA_FLAGS"]="--xla_force_host_platform_device_count=512"; '
+        'from repro.launch.mesh import make_production_mesh; '
+        'm1 = make_production_mesh(); m2 = make_production_mesh(multi_pod=True); '
+        'assert m1.devices.size == 256 and m1.axis_names == ("data", "model"); '
+        'assert m2.devices.size == 512 and m2.axis_names == ("pod", "data", "model"); '
+        'print("MESH-OK")')
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=120,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert "MESH-OK" in r.stdout, r.stdout + r.stderr
