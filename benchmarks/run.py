@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import argparse
 import csv
+import json
+import os
 import sys
 import time
 from pathlib import Path
@@ -16,11 +18,12 @@ from pathlib import Path
 import numpy as np
 
 from repro.core import (accelerator, dse, energymodel, hetero, partition,
-                        topology)
+                        rs_mapping, topology)
 from repro.core import autoshard
 from repro.core.tpu_costmodel import ShardingPolicy, step_time
 
 OUT = Path("experiments/tables")
+BENCH_DSE_JSON = Path("BENCH_dse.json")
 
 PAPER_NETS = list(topology.NETWORKS)
 QUICK_NETS = ["AlexNet", "VGG16", "GoogleNet", "ResNet50", "MobileNetV2",
@@ -46,7 +49,114 @@ def _write(name, header, rows):
 
 
 def _sweeps(nets):
-    return {n: dse.sweep_network(topology.get_network(n), n) for n in nets}
+    # one batched jit call: every network × the whole grid
+    return dse.sweep_networks({n: topology.get_network(n) for n in nets})
+
+
+# ---------------------------------------------------------------------------
+# DSE engine scaling: numpy-per-config (the seed implementation) vs the
+# batched jit engine, at 150 / 1,350 / 5,400 grid points.  Results land in
+# BENCH_dse.json (machine-readable) so future PRs can track the trajectory.
+# ---------------------------------------------------------------------------
+
+def _seed_numpy_sweep(layers, configs):
+    """The seed's design-space loop, verbatim: one AcceleratorConfig object
+    per grid point, per-config numpy struct rows, full [n_cfg, n_layer]
+    energy math summed at the end.  Kept here as the reference baseline the
+    batched engine is measured (and parity-checked) against."""
+    compute = [l for l in layers if l.kind != "input"]
+    lay = rs_mapping.layer_struct(np, compute)
+    lay = {k: np.asarray(v, dtype=np.float64)[None, :]
+           for k, v in lay.items()}
+    cfg_rows = [energymodel._cfg_struct(np, c) for c in configs]
+    cfgs = {k: np.stack([np.float64(c[k]) for c in cfg_rows])[:, None]
+            for k in cfg_rows[0]}
+    ct = energymodel._counts(np, cfgs, lay)
+    el = energymodel._energy_latency(np, cfgs, lay, ct)
+    return el["energy"].sum(-1), el["latency"].sum(-1)
+
+
+def _dse_scale_levels(quick: bool):
+    paper = dict(arrays=accelerator.ARRAY_SIZES,
+                 gb_psum_kb=accelerator.GB_SIZES_KB,
+                 gb_ifmap_kb=accelerator.GB_SIZES_KB)
+    levels = [("paper_150", accelerator.ConfigGrid.product(**paper))]
+    if not quick:        # quick: one smoke level, no extra cold compiles
+        levels += [
+            ("extended_1350", accelerator.ConfigGrid.product(
+                **paper, rf_psum_words=accelerator.RF_PSUM_SIZES,
+                noc_words_per_cycle=accelerator.NOC_WIDTHS)),
+            ("extended_5400", accelerator.extended_grid()),
+        ]
+    return levels
+
+
+def bench_dse_scale(quick: bool = False) -> None:
+    nets = {n: topology.get_network(n) for n in topology.NETWORKS}
+    use_jax = dse._use_jax_default()
+    results = []
+    for name, grid in _dse_scale_levels(quick):
+        # seed path: per-network numpy loop over per-point config objects.
+        # (Objects built once per level — the seed rebuilt them per network,
+        # so this baseline is conservative.)
+        configs = [grid.config_at(i) for i in range(grid.n)]
+        t0 = time.perf_counter()
+        e_np = np.empty((grid.n, len(nets)))
+        t_np = np.empty((grid.n, len(nets)))
+        for j, layers in enumerate(nets.values()):
+            e_np[:, j], t_np[:, j] = _seed_numpy_sweep(layers, configs)
+        numpy_s = time.perf_counter() - t0
+
+        # batched jit engine: one compiled call, cold then warm.  "cold" is
+        # the first call at this level; jit_precached records whether an
+        # earlier same-shape call (e.g. main()'s table sweep) had already
+        # compiled it, in which case cold_s is really a cache hit.
+        traces_before = energymodel.jit_cache_stats()["traces"]
+        t0 = time.perf_counter()
+        e_j, t_j = energymodel.evaluate_networks(grid, nets, use_jax=use_jax)
+        cold_s = time.perf_counter() - t0
+        precached = (use_jax and
+                     energymodel.jit_cache_stats()["traces"] == traces_before)
+        warm_s = min(_timed(
+            lambda: energymodel.evaluate_networks(grid, nets,
+                                                  use_jax=use_jax))[1] / 1e6
+            for _ in range(2))
+
+        err_e = float(np.max(np.abs(e_j - e_np) / e_np))
+        err_t = float(np.max(np.abs(t_j - t_np) / t_np))
+        _, inv = energymodel._dedup_count_rows(
+            energymodel._cfg_struct_from_grid(np, grid))
+        level = dict(
+            name=name, points=grid.n, networks=len(nets),
+            unique_count_rows=int(inv.max()) + 1,
+            numpy_per_config_s=round(numpy_s, 4),
+            jit_cold_s=round(cold_s, 4), jit_precached=precached,
+            jit_warm_s=round(warm_s, 4),
+            speedup_warm=round(numpy_s / warm_s, 2),
+            max_rel_err_energy=err_e, max_rel_err_latency=err_t)
+        results.append(level)
+        _emit(f"dse_scale_{name}", numpy_s * 1e6,
+              f"{grid.n} pts: numpy {numpy_s:.2f}s vs jit {warm_s:.2f}s "
+              f"warm → {numpy_s / warm_s:.1f}x, err<={max(err_e, err_t):.1e}")
+
+    if quick:
+        # quick runs omit the 5,400-point level — don't clobber the
+        # full-run trajectory record
+        _emit("bench_dse_json", 0.0,
+              f"quick mode: {BENCH_DSE_JSON} left untouched")
+        return
+    payload = dict(
+        schema="bench_dse/v1",
+        cpu_count=os.cpu_count(),
+        jit_cache=energymodel.jit_cache_stats(),
+        levels=results)
+    if use_jax:
+        import jax
+        payload["jax"] = jax.__version__
+    else:                                              # pragma: no cover
+        payload["jax"] = None                          # numpy-only fallback
+    BENCH_DSE_JSON.write_text(json.dumps(payload, indent=2) + "\n")
+    _emit("bench_dse_json", 0.0, f"wrote {BENCH_DSE_JSON}")
 
 
 def bench_table1_2(sweeps):
@@ -297,6 +407,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     sweeps, us = _timed(lambda: _sweeps(nets))
     _emit("dse_sweep_all", us, f"{len(nets)} networks x 150 configs")
+    bench_dse_scale(quick=args.quick)
     bench_table1_2(sweeps)
     bench_table3(sweeps)
     bench_table4(sweeps)

@@ -17,8 +17,9 @@ from repro.core import accelerator, topology
 
 def main():
     # --- paper: 18 CNNs, 150-point space, 5% boundary, greedy cover ------
-    sweeps = {n: dse.sweep_network(topology.get_network(n), n)
-              for n in topology.NETWORKS}
+    # one batched, jit-cached call evaluates all networks × the whole grid
+    sweeps = dse.sweep_networks(
+        {n: topology.get_network(n) for n in topology.NETWORKS})
     chip = hetero.design_chip(sweeps, bound=0.05, max_cores=3)
     groups = collections.defaultdict(list)
     for net, i in chip.assignment.items():

@@ -19,12 +19,24 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Tuple
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
 
 # The exact sweep values used throughout §III / §IV of the paper.
 GB_SIZES_KB: Tuple[int, ...] = (13, 27, 54, 108, 216)
 ARRAY_SIZES: Tuple[Tuple[int, int], ...] = (
     (12, 14), (16, 16), (32, 32), (64, 64), (128, 128), (256, 256))
+
+# Finer GB grid for the extended (≥5,000-point) design space: the paper's
+# five sizes plus geometric midpoints, so the engine can resolve the
+# Observation-1/2 breakpoints between the paper's coarse steps.
+EXTENDED_GB_SIZES_KB: Tuple[int, ...] = (
+    9, 13, 20, 27, 40, 54, 80, 108, 160, 216)
+# Extended per-PE psum scratch-pad sizes (Eyeriss uses 24) and NoC delivery
+# widths — the two non-GB knobs §II.B.1 lists as Tool inputs.
+RF_PSUM_SIZES: Tuple[int, ...] = (16, 24, 32)
+NOC_WIDTHS: Tuple[float, ...] = (2.0, 4.0, 8.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +111,146 @@ class AcceleratorConfig:
     def label(self) -> str:
         return (f"[{self.array_rows},{self.array_cols}]"
                 f" psum={self.gb_psum_kb:g}KB ifmap={self.gb_ifmap_kb:g}KB")
+
+
+# ---------------------------------------------------------------------------
+# Vectorised design spaces: the batched DSE engine consumes a struct-of-arrays
+# ConfigGrid, never per-point AcceleratorConfig objects.
+# ---------------------------------------------------------------------------
+
+#: Primitive per-config columns of a ConfigGrid, in canonical order.  Derived
+#: quantities (GB words, capacity-scaled GB energy/latency) are computed by
+#: the energy model from these.
+GRID_COLUMNS: Tuple[str, ...] = (
+    "rows", "cols", "gb_ifmap_kb", "gb_psum_kb", "gb_weight_kb",
+    "rf_ifmap_words", "rf_weight_words", "rf_psum_words", "bitwidth",
+    "noc_wpc", "dram_wpc", "cycle_ns",
+    "e_rf", "e_dram_r", "e_dram_w", "e_mac", "e_pe_idle", "e_noc_hop",
+    "gb_e_ref", "gb_t_ref", "gb_ref_kb", "mac_t")
+
+
+def _config_row(cfg: AcceleratorConfig) -> Tuple[float, ...]:
+    et = cfg.energy
+    return (cfg.array_rows, cfg.array_cols, cfg.gb_ifmap_kb, cfg.gb_psum_kb,
+            cfg.gb_weight_kb, cfg.rf_ifmap_words, cfg.rf_weight_words,
+            cfg.rf_psum_words, cfg.bitwidth, cfg.noc_words_per_cycle,
+            cfg.dram_words_per_cycle, cfg.cycle_ns,
+            et.rf_read, et.dram_read, et.dram_write, et.mac, et.pe_idle,
+            et.noc_hop, et.gb_read, et.gb_t, et.gb_ref_kb, et.mac_t)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigGrid:
+    """A design space as parallel float64 columns of length ``n``.
+
+    This is the input format of the batched DSE engine
+    (:func:`repro.core.energymodel.evaluate_networks`): the cross product is
+    built directly as arrays, so a 5,000+-point space costs a handful of
+    numpy ops instead of 5,000 dataclass constructions.
+    """
+
+    fields: Dict[str, np.ndarray]        # column name -> float64 [n]
+
+    def __post_init__(self):
+        n = {v.shape for v in self.fields.values()}
+        if len(n) != 1:
+            raise ValueError(f"ragged ConfigGrid columns: {n}")
+        missing = set(GRID_COLUMNS) - set(self.fields)
+        if missing:
+            raise ValueError(f"ConfigGrid missing columns: {sorted(missing)}")
+
+    @property
+    def n(self) -> int:
+        return int(next(iter(self.fields.values())).shape[0])
+
+    def __len__(self) -> int:
+        return self.n
+
+    def config_at(self, i: int, base: AcceleratorConfig | None = None
+                  ) -> AcceleratorConfig:
+        """Materialise one grid point as a config object (reports/labels).
+
+        All model-relevant energy-table columns round-trip too, so
+        ``simulate_network(grid.config_at(i))`` agrees with the batched
+        engine even for non-default energy tables."""
+        base = base or AcceleratorConfig()
+        f = self.fields
+        et = dataclasses.replace(
+            base.energy,
+            rf_read=float(f["e_rf"][i]),
+            dram_read=float(f["e_dram_r"][i]),
+            dram_write=float(f["e_dram_w"][i]),
+            mac=float(f["e_mac"][i]), pe_idle=float(f["e_pe_idle"][i]),
+            noc_hop=float(f["e_noc_hop"][i]),
+            gb_read=float(f["gb_e_ref"][i]), gb_t=float(f["gb_t_ref"][i]),
+            gb_ref_kb=float(f["gb_ref_kb"][i]), mac_t=float(f["mac_t"][i]))
+        return base.replace(
+            energy=et,
+            array_rows=int(f["rows"][i]), array_cols=int(f["cols"][i]),
+            gb_ifmap_kb=float(f["gb_ifmap_kb"][i]),
+            gb_psum_kb=float(f["gb_psum_kb"][i]),
+            gb_weight_kb=float(f["gb_weight_kb"][i]),
+            rf_ifmap_words=int(f["rf_ifmap_words"][i]),
+            rf_weight_words=int(f["rf_weight_words"][i]),
+            rf_psum_words=int(f["rf_psum_words"][i]),
+            bitwidth=int(f["bitwidth"][i]),
+            noc_words_per_cycle=float(f["noc_wpc"][i]),
+            dram_words_per_cycle=float(f["dram_wpc"][i]),
+            cycle_ns=float(f["cycle_ns"][i]))
+
+    @classmethod
+    def from_configs(cls, configs: Sequence[AcceleratorConfig]
+                     ) -> "ConfigGrid":
+        rows = np.asarray([_config_row(c) for c in configs], dtype=np.float64)
+        return cls(dict(zip(GRID_COLUMNS, rows.T.copy())))
+
+    @classmethod
+    def product(cls,
+                arrays: Sequence[Tuple[int, int]] = ARRAY_SIZES,
+                gb_psum_kb: Sequence[float] = GB_SIZES_KB,
+                gb_ifmap_kb: Sequence[float] = GB_SIZES_KB,
+                rf_psum_words: Sequence[int] | None = None,
+                noc_words_per_cycle: Sequence[float] | None = None,
+                base: AcceleratorConfig | None = None) -> "ConfigGrid":
+        """Cross product over (array × psum × ifmap [× rf_psum × noc]).
+
+        Axis order (outer→inner) matches the classic ``sweep_network`` loop
+        so results reshape onto the paper's [array, psum, ifmap] cube.  With
+        the defaults this is the 150-point space of §IV; passing
+        ``EXTENDED_GB_SIZES_KB`` / ``RF_PSUM_SIZES`` / ``NOC_WIDTHS`` grows
+        it to 5,400 points.
+        """
+        base = base or AcceleratorConfig()
+        rf_psum = ((base.rf_psum_words,) if rf_psum_words is None
+                   else tuple(rf_psum_words))
+        noc = ((base.noc_words_per_cycle,) if noc_words_per_cycle is None
+               else tuple(noc_words_per_cycle))
+        arr = np.asarray(arrays, dtype=np.float64)          # [nA, 2]
+        axes = (np.arange(len(arr)), np.asarray(gb_psum_kb, np.float64),
+                np.asarray(gb_ifmap_kb, np.float64),
+                np.asarray(rf_psum, np.float64), np.asarray(noc, np.float64))
+        ai, ps, ifm, rf, nw = [g.ravel() for g in
+                               np.meshgrid(*axes, indexing="ij")]
+        n = ai.size
+        fields = dict(zip(GRID_COLUMNS,
+                          np.tile(np.asarray(_config_row(base),
+                                             np.float64)[:, None], (1, n))))
+        fields["rows"] = arr[ai.astype(np.intp), 0]
+        fields["cols"] = arr[ai.astype(np.intp), 1]
+        fields["gb_psum_kb"] = ps
+        fields["gb_ifmap_kb"] = ifm
+        fields["rf_psum_words"] = rf
+        fields["noc_wpc"] = nw
+        return cls(fields)
+
+
+def extended_grid(base: AcceleratorConfig | None = None) -> ConfigGrid:
+    """The 5,400-point extended space: 6 arrays × 10² GB sizes × 3 RF_psum
+    × 3 NoC widths (§II.B.1's knobs beyond the paper's 150 points)."""
+    return ConfigGrid.product(
+        arrays=ARRAY_SIZES, gb_psum_kb=EXTENDED_GB_SIZES_KB,
+        gb_ifmap_kb=EXTENDED_GB_SIZES_KB, rf_psum_words=RF_PSUM_SIZES,
+        noc_words_per_cycle=NOC_WIDTHS, base=base)
 
 
 def config_grid(

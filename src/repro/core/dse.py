@@ -1,21 +1,30 @@
 """Design-space exploration (§III–§IV): sweeps, and the statistics of
 Tables 1–4 (equations (2)–(5)).
 
-The search space is the paper's: GB_psum × GB_ifmap ∈ {13, 27, 54, 108,
-216}KB² and six array sizes — 150 points per network.  The whole space is
-evaluated in one vectorised call to the Tool.
+The search space is the paper's by default: GB_psum × GB_ifmap ∈ {13, 27,
+54, 108, 216}KB² and six array sizes — 150 points per network — but the
+engine is built for much larger spaces (finer GB grids, RF sizes, NoC
+widths; see :func:`repro.core.accelerator.extended_grid`).  Grids are
+constructed directly as arrays (:class:`ConfigGrid`), never as per-point
+config objects, and :func:`sweep_networks` evaluates every network against
+the full grid in ONE batched, jit-cached call to the Tool.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Mapping, Sequence, Tuple
 
 import numpy as np
 
-from .accelerator import (ARRAY_SIZES, GB_SIZES_KB, AcceleratorConfig)
+from .accelerator import (ARRAY_SIZES, GB_SIZES_KB, AcceleratorConfig,
+                          ConfigGrid)
 from . import energymodel
 from .topology import Layer
+
+
+def _use_jax_default() -> bool:
+    return energymodel.jax_available()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,8 +42,11 @@ class SweepResult:
     def edp(self) -> np.ndarray:
         return self.energy * self.latency
 
+    def metric(self, name: str = "edp") -> np.ndarray:
+        return self.edp if name == "edp" else getattr(self, name)
+
     def argmin_cell(self, metric: str = "edp") -> Tuple[int, int, int]:
-        arr = getattr(self, metric) if metric != "edp" else self.edp
+        arr = self.metric(metric)
         return tuple(np.unravel_index(int(np.argmin(arr)), arr.shape))
 
     def cell_label(self, cell: Tuple[int, int, int]) -> str:
@@ -43,30 +55,54 @@ class SweepResult:
                 f"[{self.arrays[a][0]},{self.arrays[a][1]}])")
 
 
+def _paper_grid(arrays, psum_kb, ifmap_kb,
+                base: AcceleratorConfig | None) -> ConfigGrid:
+    return ConfigGrid.product(arrays=arrays, gb_psum_kb=psum_kb,
+                              gb_ifmap_kb=ifmap_kb, base=base)
+
+
+def sweep_networks(networks: Mapping[str, Sequence[Layer]],
+                   arrays: Sequence[Tuple[int, int]] = ARRAY_SIZES,
+                   psum_kb: Sequence[int] = GB_SIZES_KB,
+                   ifmap_kb: Sequence[int] = GB_SIZES_KB,
+                   base: AcceleratorConfig | None = None,
+                   use_jax: bool | None = None) -> Dict[str, SweepResult]:
+    """Sweep EVERY network over the whole grid in one compiled call.
+
+    This is the batched entry point: the config cross product is built as
+    arrays, all networks' layers share one padded trace, and the jitted
+    kernel is cached at module level — repeated sweeps never retrace.
+    """
+    use_jax = _use_jax_default() if use_jax is None else use_jax
+    grid = _paper_grid(arrays, psum_kb, ifmap_kb, base)
+    e, t = energymodel.evaluate_networks(grid, networks, use_jax=use_jax)
+    shape = (len(arrays), len(psum_kb), len(ifmap_kb))
+    out = {}
+    for j, name in enumerate(networks):
+        out[name] = SweepResult(
+            network=name, arrays=tuple(arrays), psum_kb=tuple(psum_kb),
+            ifmap_kb=tuple(ifmap_kb), energy=e[:, j].reshape(shape),
+            latency=t[:, j].reshape(shape))
+    return out
+
+
 def sweep_network(layers: Sequence[Layer], network: str = "net",
                   arrays: Sequence[Tuple[int, int]] = ARRAY_SIZES,
                   psum_kb: Sequence[int] = GB_SIZES_KB,
                   ifmap_kb: Sequence[int] = GB_SIZES_KB,
                   base: AcceleratorConfig | None = None,
-                  use_jax: bool = False) -> SweepResult:
-    base = base or AcceleratorConfig()
-    cfgs: List[AcceleratorConfig] = []
-    for (r, c) in arrays:
-        for p in psum_kb:
-            for i in ifmap_kb:
-                cfgs.append(base.replace(array_rows=r, array_cols=c,
-                                         gb_psum_kb=float(p),
-                                         gb_ifmap_kb=float(i)))
-    e, t = energymodel.simulate_grid(cfgs, layers, use_jax=use_jax)
-    shape = (len(arrays), len(psum_kb), len(ifmap_kb))
-    return SweepResult(network=network, arrays=tuple(arrays),
-                       psum_kb=tuple(psum_kb), ifmap_kb=tuple(ifmap_kb),
-                       energy=e.reshape(shape), latency=t.reshape(shape))
+                  use_jax: bool | None = None) -> SweepResult:
+    """Single-network sweep (thin wrapper over :func:`sweep_networks`)."""
+    return sweep_networks({network: layers}, arrays=arrays, psum_kb=psum_kb,
+                          ifmap_kb=ifmap_kb, base=base,
+                          use_jax=use_jax)[network]
 
 
 # ---------------------------------------------------------------------------
 # Tables 1–2: sweep one GB partition with the other held at the 25-point
-# minimum's value (equations (2) and (3)).
+# minimum's value (equations (2) and (3)).  All statistics below are
+# vectorised over the array axis — no per-cell Python loops — so they stay
+# cheap when the grid grows to thousands of points.
 # ---------------------------------------------------------------------------
 
 def mu_delta(sweep: SweepResult, swept: str = "ifmap"
@@ -76,30 +112,30 @@ def mu_delta(sweep: SweepResult, swept: str = "ifmap"
     ``swept='ifmap'`` reproduces Table 1 (GB_psum held at the value of the
     per-array minimum); ``swept='psum'`` reproduces Table 2.
     """
-    out = {}
-    for a, arr in enumerate(sweep.arrays):
-        plane = sweep.energy[a]               # [psum, ifmap]
-        pi_min = np.unravel_index(int(np.argmin(plane)), plane.shape)
-        if swept == "ifmap":
-            line = plane[pi_min[0], :]
-        else:
-            line = plane[:, pi_min[1]]
-        e_min = float(line.min())
-        others = line[line != line.min()] if line.size > 1 else line
-        n = line.size
-        mu = float(((line - e_min) / e_min * 100.0).sum() / (n - 1))
-        delta = float((line.max() - e_min) / e_min * 100.0)
-        out[arr] = (mu, delta)
-    return out
+    e = sweep.energy                              # [nA, nP, nI]
+    n_a, n_p, n_i = e.shape
+    flat = e.reshape(n_a, -1)
+    p_min, i_min = np.unravel_index(np.argmin(flat, axis=1), (n_p, n_i))
+    ar = np.arange(n_a)
+    if swept == "ifmap":
+        lines = e[ar, p_min, :]                   # [nA, nI]
+    else:
+        lines = e[ar, :, i_min]                   # [nA, nP]
+    e_min = lines.min(axis=1, keepdims=True)
+    n = lines.shape[1]
+    mu = ((lines - e_min) / e_min * 100.0).sum(axis=1) / (n - 1)
+    delta = ((lines.max(axis=1, keepdims=True) - e_min)
+             / e_min * 100.0)[:, 0]
+    return {arr: (float(mu[a]), float(delta[a]))
+            for a, arr in enumerate(sweep.arrays)}
 
 
 def delta_whole_space(sweep: SweepResult) -> Dict[Tuple[int, int], float]:
-    """Table 3: Δ^max_min over the 25 (psum × ifmap) points per array."""
-    out = {}
-    for a, arr in enumerate(sweep.arrays):
-        plane = sweep.energy[a]
-        out[arr] = float((plane.max() - plane.min()) / plane.min() * 100.0)
-    return out
+    """Table 3: Δ^max_min over the (psum × ifmap) points per array."""
+    flat = sweep.energy.reshape(len(sweep.arrays), -1)
+    mn, mx = flat.min(axis=1), flat.max(axis=1)
+    d = (mx - mn) / mn * 100.0
+    return {arr: float(d[a]) for a, arr in enumerate(sweep.arrays)}
 
 
 def edp_spread(sweep: SweepResult) -> Tuple[float, float]:
@@ -113,9 +149,9 @@ def edp_spread(sweep: SweepResult) -> Tuple[float, float]:
 def boundary_configs(sweep: SweepResult, bound: float = 0.05,
                      metric: str = "edp") -> List[Tuple[int, int, int]]:
     """Table 5: all cells within ``bound`` of the minimum (min cell first)."""
-    arr = sweep.edp if metric == "edp" else getattr(sweep, metric)
+    arr = sweep.metric(metric)
     mn = float(arr.min())
-    cells = [tuple(map(int, c))
-             for c in np.argwhere(arr <= mn * (1.0 + bound))]
-    cells.sort(key=lambda c: float(arr[c]))
-    return cells
+    cells = np.argwhere(arr <= mn * (1.0 + bound))
+    vals = arr[tuple(cells.T)]
+    order = np.argsort(vals, kind="stable")
+    return [tuple(int(x) for x in cells[k]) for k in order]

@@ -41,47 +41,55 @@ class HeteroChip:
 
 def design_chip(sweeps: Dict[str, SweepResult], bound: float = 0.05,
                 metric: str = "edp", max_cores: int = 4) -> HeteroChip:
-    """Greedy common-configuration cover → heterogeneous core types."""
-    candidates = {name: boundary_configs(sw, bound, metric)
-                  for name, sw in sweeps.items()}
-    uncovered = set(candidates)
-    core_types: List[Cell] = []
+    """Greedy common-configuration cover → heterogeneous core types.
+
+    Fully vectorised: the per-network metric cubes are flattened into a
+    [n_net, n_points] matrix once, and each greedy round is a handful of
+    masked reductions — no per-cell Python loops — so the cover stays
+    interactive on multi-thousand-point grids.
+    """
+    names = list(sweeps)
+    candidates = {name: boundary_configs(sweeps[name], bound, metric)
+                  for name in names}
+
+    mats = np.stack([sweeps[n].metric(metric).ravel() for n in names])
+    shape = next(iter(sweeps.values())).metric(metric).shape
+    mins = mats.min(axis=1, keepdims=True)
+    cand = mats <= mins * (1.0 + bound)           # [n_net, n_pts] bool
+    rel = mats / mins                             # metric / per-net minimum
+
+    uncovered = np.ones(len(names), dtype=bool)
+    core_flat: List[int] = []
     assignment: Dict[str, int] = {}
 
-    while uncovered and len(core_types) < max_cores:
+    while uncovered.any() and len(core_flat) < max_cores:
         # cell covering the most uncovered networks; ties → lower total
         # relative metric across covered networks.
-        counts: Dict[Cell, List[str]] = {}
-        for name in uncovered:
-            for cell in candidates[name]:
-                counts.setdefault(cell, []).append(name)
-        if not counts:
+        counts = cand[uncovered].sum(axis=0)
+        best_count = counts.max()
+        if best_count == 0:
             break
+        rel_sum = np.where(cand[uncovered], rel[uncovered], 0.0).sum(axis=0)
+        tied = np.flatnonzero(counts == best_count)
+        cell_flat = int(tied[np.argmin(rel_sum[tied])])
 
-        def score(item):
-            cell, names = item
-            rel = 0.0
-            for n in names:
-                arr = sweeps[n].edp if metric == "edp" else getattr(
-                    sweeps[n], metric)
-                rel += float(arr[cell] / arr.min())
-            return (-len(names), rel)
+        idx = len(core_flat)
+        core_flat.append(cell_flat)
+        covered_now = cand[:, cell_flat] & uncovered
+        for i in np.flatnonzero(covered_now):
+            assignment[names[i]] = idx
+        uncovered &= ~covered_now
 
-        cell, names = min(counts.items(), key=score)
-        idx = len(core_types)
-        core_types.append(cell)
-        for n in names:
-            assignment[n] = idx
-        uncovered -= set(names)
+    core_types: List[Cell] = [
+        tuple(int(x) for x in np.unravel_index(c, shape)) for c in core_flat]
 
     # Networks not covered within the boundary: assign to the least-penalty
     # existing core type.
-    for name in sorted(uncovered):
-        arr = sweeps[name].edp if metric == "edp" else getattr(
-            sweeps[name], metric)
-        best = min(range(len(core_types)),
-                   key=lambda i: float(arr[core_types[i]]))
-        assignment[name] = best
+    if uncovered.any() and core_flat:
+        vals = mats[:, core_flat]                 # [n_net, n_cores]
+        best = np.argmin(vals, axis=1)
+        for i in np.flatnonzero(uncovered):
+            assignment[names[i]] = int(best[i])
 
     return HeteroChip(core_types=core_types, assignment=assignment,
                       candidate_sets=candidates, sweeps=sweeps)

@@ -17,6 +17,16 @@ All formulas are written against an array-API module ``xp`` (numpy or
 jax.numpy) and broadcast over arbitrary leading axes, so the same code path
 serves the scalar per-layer report and the fully vectorised design-space
 sweep (configs × layers in one shot).
+
+jit-safety audit (the batched DSE engine traces this module):
+
+* no data-dependent Python control flow — the only ``if`` is on
+  ``gb_ifmap_words is None``, which is static at trace time;
+* every op is an ``xp`` ufunc (``where`` / ``minimum`` / ``floor_divide``),
+  so numpy and the jitted jax path produce bit-identical graphs;
+* all quantities are exact in float64: the largest intermediate (layer MACs,
+  ~1e10) is far below 2^53, so ``floor_divide`` on floats is exact and the
+  numpy↔jax parity holds to machine epsilon.
 """
 
 from __future__ import annotations

@@ -128,6 +128,9 @@ class Supervisor:
                 events.append(f"failure@{step}:{e}")
                 if retries > self.max_retries_per_step:
                     raise
+                # join in-flight async saves: a checkpoint written moments
+                # before the failure must be visible to the restore
+                self.ckpt.wait()
                 restore_step = self.ckpt.latest_step()
                 if restore_step is not None:
                     state, _ = self.ckpt.restore(state)

@@ -41,21 +41,45 @@ _ALGO_FACTOR = {
 
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
-# first word(  after the result type is the op; types never contain "word("
-_OP_RE = re.compile(r"([\w\-]+)\((?=%|\)|[0-9\"'\-])")
+_OP_HEAD_RE = re.compile(r"([\w\-]+)\(")
 
 
 def _parse_instr(line: str):
-    """→ (name, result_type, op, rest) or None."""
+    """→ (name, result_type, op, rest) or None.
+
+    Instructions are ``%name = TYPE op(operands...), attrs`` where TYPE is
+    either ``dtype[dims]{layout}`` or a parenthesised tuple type.  The type
+    is consumed structurally (balanced parens for tuples) rather than by
+    guessing where the op token starts, so tuple-typed results/operands —
+    ``while((s32[], f32[2,2]) %tuple)`` — and operand-typed dialects parse.
+    """
     m = _NAME_RE.match(line)
     if not m:
         return None
     tail = line[m.end():]
-    om = _OP_RE.search(tail)
+    if tail.startswith("("):                   # tuple result type
+        depth = 0
+        end = -1
+        for i, ch in enumerate(tail):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        result_type, rest = tail[:end + 1], tail[end + 1:].lstrip()
+    else:                                      # plain dtype[dims]{layout}
+        sp = tail.find(" ")
+        if sp < 0:
+            return None
+        result_type, rest = tail[:sp], tail[sp + 1:].lstrip()
+    om = _OP_HEAD_RE.match(rest)
     if not om:
         return None
-    return (m.group(1), tail[:om.start()].strip(), om.group(1),
-            tail[om.end():])
+    return m.group(1), result_type, om.group(1), rest[om.end():]
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\([^)]*\)\s*->")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _CALL_RE = re.compile(r"(?:body|calls|to_apply)=%?([\w.\-]+)")

@@ -10,6 +10,8 @@ from repro.configs import get_config
 from repro.models import model_zoo as Z
 from repro.models import params as P
 
+pytestmark = pytest.mark.slow      # full-model end-to-end runs
+
 KEY = jax.random.key(7)
 T = 12
 

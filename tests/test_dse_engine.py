@@ -1,0 +1,117 @@
+"""The batched, jit-cached DSE engine: compile-cache behaviour, padding
+invisibility, and batched-vs-per-network equivalence."""
+
+import numpy as np
+import pytest
+
+from repro.core import accelerator, dse, energymodel, topology
+
+NETS = ("AlexNet", "VGG16", "MobileNet")
+
+
+@pytest.fixture(scope="module")
+def networks():
+    return {n: topology.get_network(n) for n in NETS}
+
+
+def test_jit_cache_hit_on_same_shape(networks):
+    """A second same-shape sweep must reuse the compiled kernel."""
+    grid = accelerator.ConfigGrid.product()
+    energymodel.evaluate_networks(grid, networks)          # warm (or trace)
+    before = energymodel.jit_cache_stats()
+    e1, t1 = energymodel.evaluate_networks(grid, networks)
+    e2, t2 = energymodel.evaluate_networks(grid, networks)
+    after = energymodel.jit_cache_stats()
+    assert after["traces"] == before["traces"]             # no retrace
+    assert after["calls"] == before["calls"] + 2
+    np.testing.assert_array_equal(e1, e2)
+    np.testing.assert_array_equal(t1, t2)
+
+
+def test_networks_share_one_trace(networks):
+    """Different networks bucket to the same padded layer count AND the
+    same static segment key, so single-network sweeps share one compiled
+    program per grid size — sweeping a new network must not retrace."""
+    dse.sweep_network(networks["AlexNet"], "AlexNet", use_jax=True)
+    before = energymodel.jit_cache_stats()
+    for name in ("VGG16", "MobileNet"):        # 21 / 29 layers vs 11
+        dse.sweep_network(networks[name], name, use_jax=True)
+    dse.sweep_network(topology.get_network("ResNet50"), "ResNet50",
+                      use_jax=True)            # 52 layers, never swept yet
+    assert energymodel.jit_cache_stats()["traces"] == before["traces"]
+
+
+def test_padding_contributes_zero(networks):
+    """The benign pad layer yields exactly zero energy and latency, and the
+    padded evaluation matches the unpadded scalar reference."""
+    lay = {k: np.asarray([v], dtype=np.float64)
+           for k, v in energymodel._PAD_LAYER_ROW.items()}
+    grid = accelerator.ConfigGrid.product()
+    cfgs = energymodel._cfg_struct_from_grid(np, grid)
+    cfgs = {k: v[:, None] for k, v in cfgs.items()}
+    ct = energymodel._counts(np, cfgs, {k: v[None, :] for k, v in lay.items()})
+    el = energymodel._energy_latency(
+        np, cfgs, {k: v[None, :] for k, v in lay.items()}, ct)
+    assert np.all(el["energy"] == 0.0)
+    assert np.all(el["latency"] == 0.0)
+
+    # and bucketed padding is invisible end-to-end: the padded batched
+    # result equals the per-config scalar simulation
+    vgg = networks["VGG16"]
+    small = accelerator.ConfigGrid.product(
+        arrays=((16, 16), (32, 32)), gb_psum_kb=(54,), gb_ifmap_kb=(54,))
+    e, t = energymodel.evaluate_networks(small, {"VGG16": vgg}, use_jax=False)
+    for i in range(small.n):
+        rep = energymodel.simulate_network(small.config_at(i), vgg)
+        assert rep.energy == pytest.approx(e[i, 0], rel=1e-12)
+        assert rep.latency == pytest.approx(t[i, 0], rel=1e-12)
+
+
+def test_sweep_networks_matches_per_network(networks):
+    batched = dse.sweep_networks(networks)
+    for name, layers in networks.items():
+        single = dse.sweep_network(layers, name)
+        np.testing.assert_allclose(batched[name].energy, single.energy,
+                                   rtol=1e-12)
+        np.testing.assert_allclose(batched[name].latency, single.latency,
+                                   rtol=1e-12)
+        assert batched[name].network == name
+
+
+def test_jax_numpy_parity_extended_space(networks):
+    """The jit engine matches the numpy reference on the extended grid
+    (RF/NoC axes exercised) to ≤1e-6 relative error."""
+    grid = accelerator.ConfigGrid.product(
+        arrays=((16, 16), (64, 64)), gb_psum_kb=(13, 54),
+        gb_ifmap_kb=(27, 216), rf_psum_words=(16, 32),
+        noc_words_per_cycle=(2.0, 8.0))
+    e_j, t_j = energymodel.evaluate_networks(grid, networks, use_jax=True)
+    e_n, t_n = energymodel.evaluate_networks(grid, networks, use_jax=False)
+    np.testing.assert_allclose(e_j, e_n, rtol=1e-6)
+    np.testing.assert_allclose(t_j, t_n, rtol=1e-6)
+
+
+def test_config_grid_product_matches_objects():
+    """Array-built cross product ≡ the per-point object construction."""
+    grid = accelerator.ConfigGrid.product()
+    objs = list(accelerator.config_grid().values())
+    assert grid.n == len(objs) == 150
+    # config_grid iterates (psum, ifmap, array); product iterates
+    # (array, psum, ifmap) — compare as sets of parameter tuples
+    got = {(grid.fields["rows"][i], grid.fields["cols"][i],
+            grid.fields["gb_psum_kb"][i], grid.fields["gb_ifmap_kb"][i])
+           for i in range(grid.n)}
+    want = {(c.array_rows, c.array_cols, c.gb_psum_kb, c.gb_ifmap_kb)
+            for c in objs}
+    assert got == want
+
+
+def test_dedup_count_rows_roundtrip():
+    grid = accelerator.extended_grid()
+    cfgs = energymodel._cfg_struct_from_grid(np, grid)
+    cfg_u, inv = energymodel._dedup_count_rows(cfgs)
+    # NoC width doesn't influence counts → 3x dedup on the extended space
+    assert len(inv) == 5400
+    assert inv.max() + 1 == 1800
+    for k in energymodel._COUNT_COLUMNS:
+        np.testing.assert_array_equal(cfg_u[k][inv], cfgs[k])

@@ -9,6 +9,8 @@ from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
 from repro.models import model_zoo as Z
 from repro.models import params as P
 
+pytestmark = pytest.mark.slow      # full-model end-to-end runs
+
 KEY = jax.random.key(0)
 
 

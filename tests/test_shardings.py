@@ -6,6 +6,10 @@ import sys
 
 import jax
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec
 

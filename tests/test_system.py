@@ -6,6 +6,8 @@ import pytest
 
 from repro.launch import train as T
 
+pytestmark = pytest.mark.slow      # full-model end-to-end runs
+
 
 def test_training_loss_decreases(tmp_path):
     losses = T.main(["--arch", "qwen2-0.5b", "--smoke", "--steps", "30",
