@@ -38,6 +38,15 @@ EXTENDED_GB_SIZES_KB: Tuple[int, ...] = (
 RF_PSUM_SIZES: Tuple[int, ...] = (16, 24, 32)
 NOC_WIDTHS: Tuple[float, ...] = (2.0, 4.0, 8.0)
 
+# The mega space (~49k points) for the sharded/chunked streaming engine:
+# the full EXTENDED_GB_SIZES_KB cross continued past 216KB (the Fig. 5/6
+# right-hand tails), intermediate/larger arrays, and wider RF/NoC ranges.
+MEGA_GB_SIZES_KB: Tuple[int, ...] = EXTENDED_GB_SIZES_KB + (320, 432, 648, 864)
+MEGA_ARRAY_SIZES: Tuple[Tuple[int, int], ...] = ARRAY_SIZES + (
+    (24, 24), (48, 48), (96, 96), (192, 192))
+MEGA_RF_PSUM_SIZES: Tuple[int, ...] = (8, 16, 24, 32, 48)
+MEGA_NOC_WIDTHS: Tuple[float, ...] = (1.0, 2.0, 4.0, 8.0, 16.0)
+
 
 @dataclasses.dataclass(frozen=True)
 class EnergyTable:
@@ -198,6 +207,17 @@ class ConfigGrid:
             dram_words_per_cycle=float(f["dram_wpc"][i]),
             cycle_ns=float(f["cycle_ns"][i]))
 
+    def take(self, idx) -> "ConfigGrid":
+        """Subset grid at the given flat indices (order preserved) — the
+        streaming engine's chunking and the boundary-set consumers pull
+        slices of a design space through this."""
+        idx = np.asarray(idx)
+        return ConfigGrid({k: v[idx] for k, v in self.fields.items()})
+
+    def slice_rows(self, start: int, stop: int) -> "ConfigGrid":
+        """Contiguous [start:stop) slice (no copy of untouched columns)."""
+        return ConfigGrid({k: v[start:stop] for k, v in self.fields.items()})
+
     @classmethod
     def from_configs(cls, configs: Sequence[AcceleratorConfig]
                      ) -> "ConfigGrid":
@@ -251,6 +271,17 @@ def extended_grid(base: AcceleratorConfig | None = None) -> ConfigGrid:
         arrays=ARRAY_SIZES, gb_psum_kb=EXTENDED_GB_SIZES_KB,
         gb_ifmap_kb=EXTENDED_GB_SIZES_KB, rf_psum_words=RF_PSUM_SIZES,
         noc_words_per_cycle=NOC_WIDTHS, base=base)
+
+
+def mega_grid(base: AcceleratorConfig | None = None) -> ConfigGrid:
+    """The 49,000-point mega space: 10 arrays × 14² GB sizes × 5 RF_psum
+    × 5 NoC widths.  Built for the chunked/sharded streaming engine —
+    evaluating it in one unchunked call would materialise multi-GB
+    (unique-row × layer) intermediates."""
+    return ConfigGrid.product(
+        arrays=MEGA_ARRAY_SIZES, gb_psum_kb=MEGA_GB_SIZES_KB,
+        gb_ifmap_kb=MEGA_GB_SIZES_KB, rf_psum_words=MEGA_RF_PSUM_SIZES,
+        noc_words_per_cycle=MEGA_NOC_WIDTHS, base=base)
 
 
 def config_grid(

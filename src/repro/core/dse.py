@@ -66,16 +66,23 @@ def sweep_networks(networks: Mapping[str, Sequence[Layer]],
                    psum_kb: Sequence[int] = GB_SIZES_KB,
                    ifmap_kb: Sequence[int] = GB_SIZES_KB,
                    base: AcceleratorConfig | None = None,
-                   use_jax: bool | None = None) -> Dict[str, SweepResult]:
+                   use_jax: bool | None = None,
+                   shard: bool = False,
+                   chunk_size: int | None = None) -> Dict[str, SweepResult]:
     """Sweep EVERY network over the whole grid in one compiled call.
 
     This is the batched entry point: the config cross product is built as
     arrays, all networks' layers share one padded trace, and the jitted
     kernel is cached at module level — repeated sweeps never retrace.
+    ``shard=True`` spreads the config axis over all host devices (see
+    :func:`energymodel.request_host_devices`); ``chunk_size`` bounds the
+    engine's per-dispatch intermediates on large grids.
     """
     use_jax = _use_jax_default() if use_jax is None else use_jax
     grid = _paper_grid(arrays, psum_kb, ifmap_kb, base)
-    e, t = energymodel.evaluate_networks(grid, networks, use_jax=use_jax)
+    e, t = energymodel.evaluate_networks(grid, networks, use_jax=use_jax,
+                                         shard=shard,
+                                         chunk_size=chunk_size)
     shape = (len(arrays), len(psum_kb), len(ifmap_kb))
     out = {}
     for j, name in enumerate(networks):
@@ -84,6 +91,19 @@ def sweep_networks(networks: Mapping[str, Sequence[Layer]],
             ifmap_kb=tuple(ifmap_kb), energy=e[:, j].reshape(shape),
             latency=t[:, j].reshape(shape))
     return out
+
+
+def stream_grid(networks: Mapping[str, Sequence[Layer]],
+                grid: ConfigGrid,
+                **kwargs) -> "energymodel.StreamResult":
+    """Streaming sweep of an arbitrary ConfigGrid: chunked evaluation with
+    on-device running reductions (per-network minima, top-k cells, and the
+    ≤bound boundary sets that :func:`repro.core.hetero.design_chip_streaming`
+    consumes) — the full [n_cfg, n_net] matrices are never materialised.
+    Keyword arguments forward to :func:`energymodel.stream_networks`
+    (``chunk_size``, ``shard``, ``bound``, ``metric``, ``topk``,
+    ``use_jax``)."""
+    return energymodel.stream_networks(grid, networks, **kwargs)
 
 
 def sweep_network(layers: Sequence[Layer], network: str = "net",

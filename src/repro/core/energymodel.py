@@ -328,10 +328,12 @@ def jit_cache_stats() -> Dict[str, int]:
     return dict(_JIT_STATS)
 
 
-def _cfg_struct_from_grid(xp, grid: ConfigGrid) -> Dict[str, Any]:
+def _cfg_struct_from_grid(xp, grid) -> Dict[str, Any]:
     """Vectorised twin of :func:`_cfg_struct`: derives the per-access model
-    columns for every grid point at once (float64, shape [n])."""
-    f = {k: np.asarray(v, dtype=np.float64) for k, v in grid.fields.items()}
+    columns for every grid point at once (float64, shape [n]).  Accepts a
+    ConfigGrid or a bare column dict (the chunked paths slice columns)."""
+    fields = grid.fields if isinstance(grid, ConfigGrid) else grid
+    f = {k: np.asarray(v, dtype=np.float64) for k, v in fields.items()}
     bpw = f["bitwidth"] / 8.0
     ref = f["gb_ref_kb"]
 
@@ -470,21 +472,6 @@ def _count_terms(xp, cfg_u: Dict[str, Any], lay: Dict[str, Any],
     )
 
 
-def _reduced_sums(xp, terms, segments, inv):
-    """Per-network segment sums of each term, gathered to the full config
-    axis: tuple of [n_cfg, n_net] arrays."""
-    n_cfg = inv.shape[0]
-    out = []
-    for t in terms:
-        s = xp.stack([t[..., a:b].sum(-1) for a, b in segments], axis=-1)
-        if s.shape[0] == 1:                  # config-independent term
-            s = xp.broadcast_to(s, (n_cfg, s.shape[1]))
-        else:
-            s = s[inv]
-        out.append(s)
-    return tuple(out)
-
-
 def _combine_reduced(xp, S, coefs: Dict[str, Any]):
     """14 × [n_cfg, n_net] reduced sums × per-config coefficients →
     (energy, latency), both [n_cfg, n_net].  Mirrors `_energy_latency`."""
@@ -517,14 +504,37 @@ def _coef_struct(cfgs: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
     return out
 
 
-def _grid_kernel_body(xp, segments, cfg_m, cfg_u, lay, inv_m, inv, coefs):
-    """Shared numpy/jax kernel: mapping on the mapping-unique rows, counts
-    on the count-unique rows, segment-reduce, then coefficient combine."""
+def _term_sums_body(xp, segments, cfg_m, cfg_u, lay, inv_m):
+    """Mapping on the mapping-unique rows, counts on the count-unique rows,
+    per-network segment sums: tuple of [n_u, n_net] (or [1, n_net] for the
+    two config-independent terms).  This is the heavy stage — and the one
+    the sharded kernel splits along the unique-config axis."""
     mp_m = _mapping(xp, cfg_m, lay)
     mp = {k: mp_m[k][inv_m] for k in _MAPPING_KEYS}
     terms = _count_terms(xp, cfg_u, lay, mp)
-    return _combine_reduced(xp, _reduced_sums(xp, terms, segments, inv),
-                            coefs)
+    return tuple(
+        xp.stack([t[..., a:b].sum(-1) for a, b in segments], axis=-1)
+        for t in terms)
+
+
+def _gather_combine_body(xp, S, inv, coefs):
+    """Gather the reduced sums back to the full config axis and apply the
+    per-config coefficients — the cheap [n_cfg, n_net] stage."""
+    gathered = []
+    for s in S:
+        if s.shape[0] == 1:                  # config-independent term
+            g = xp.broadcast_to(s, (inv.shape[0], s.shape[1]))
+        else:
+            g = s[inv]
+        gathered.append(g)
+    return _combine_reduced(xp, tuple(gathered), coefs)
+
+
+def _grid_kernel_body(xp, segments, cfg_m, cfg_u, lay, inv_m, inv, coefs):
+    """Shared numpy/jax kernel: mapping on the mapping-unique rows, counts
+    on the count-unique rows, segment-reduce, then coefficient combine."""
+    S = _term_sums_body(xp, segments, cfg_m, cfg_u, lay, inv_m)
+    return _gather_combine_body(xp, S, inv, coefs)
 
 
 def _np_grid_kernel(segments, cfg_m, cfg_u, lay, inv_m, inv, coefs):
@@ -550,6 +560,65 @@ def _jax_grid_kernel():
     return _jitted_grid_kernel
 
 
+#: Indices in the `_count_terms` tuple that do not depend on the config
+#: (shape [1, L]): pure-MAC and pooling op counts.
+_CFG_INDEP_TERMS = (6, 7)
+
+_jitted_sharded_kernel = None
+_sharded_kernel_ndev = 0
+
+
+def _jax_sharded_kernel():
+    """Sharded twin of :func:`_jax_grid_kernel`, built on ``shard_map``:
+    the count-unique config rows are split along a 1-D device mesh, each
+    device runs the heavy (rows × layers) stage on its slice, and the tiny
+    [n_u, n_net] partial sums are all-gathered before the replicated
+    gather/combine.  Explicit specs — GSPMD's auto-partitioning of the
+    same program chooses badly on CPU meshes."""
+    global _jitted_sharded_kernel, _sharded_kernel_ndev
+    import jax
+
+    mesh = _cfg_mesh()
+    if (_jitted_sharded_kernel is not None
+            and _sharded_kernel_ndev == mesh.devices.size):
+        return _jitted_sharded_kernel
+
+    def kernel(segments, cfg_m, cfg_u, lay, inv_m, inv, coefs):
+        _JIT_STATS["traces"] += 1        # runs only while tracing
+        return _sharded_grid_body(segments, cfg_m, cfg_u, lay, inv_m,
+                                  inv, coefs)
+
+    _jitted_sharded_kernel = jax.jit(kernel, static_argnums=0)
+    _sharded_kernel_ndev = mesh.devices.size
+    return _jitted_sharded_kernel
+
+
+def _sharded_grid_body(segments, cfg_m, cfg_u, lay, inv_m, inv, coefs):
+    """Traced body of the sharded kernel (shared with the stream step)."""
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    mesh = _cfg_mesh()
+    row2, row1, rep = P("cfg", None), P("cfg"), P()
+
+    def local(cfg_m_, cfg_u_, lay_, inv_m_):
+        S = _term_sums_body(jnp, segments, cfg_m_, cfg_u_, lay_, inv_m_)
+        return tuple(
+            s if i in _CFG_INDEP_TERMS
+            else lax.all_gather(s, "cfg", axis=0, tiled=True)
+            for i, s in enumerate(S))
+
+    S = shard_map(
+        local, mesh=mesh,
+        in_specs=({k: rep for k in cfg_m}, {k: row2 for k in cfg_u},
+                  {k: rep for k in lay}, row1),
+        out_specs=tuple(rep for _ in range(14)),
+        check_rep=False)(cfg_m, cfg_u, lay, inv_m)
+    return _gather_combine_body(jnp, S, inv, coefs)
+
+
 def jax_available() -> bool:
     try:
         import jax                                     # noqa: F401
@@ -558,38 +627,450 @@ def jax_available() -> bool:
         return False
 
 
-def evaluate_networks(grid: ConfigGrid,
-                      networks: Mapping[str, Sequence[Layer]],
-                      use_jax: bool | None = None,
-                      ) -> Tuple[np.ndarray, np.ndarray]:
-    """Evaluate every network against every grid point in one call.
+# ---------------------------------------------------------------------------
+# Device sharding: the deduped config axis is the embarrassingly-parallel
+# axis of the engine — the heavy (unique-rows × layers) math partitions
+# cleanly across host devices, and only the tiny [unique, networks] reduced
+# sums cross device boundaries (one all-gather before the coefficient
+# combine).  Multiple host devices come from XLA's
+# ``--xla_force_host_platform_device_count`` flag, which MUST be set in
+# XLA_FLAGS before jax first initialises its backend (see launch/dryrun.py
+# and benchmarks/run.py for the pattern).
+# ---------------------------------------------------------------------------
 
-    Returns ``(energy, latency)`` float64 arrays of shape
-    ``[grid.n, len(networks)]``, columns ordered like ``networks``.
-    ``use_jax=None`` auto-selects: the jitted kernel when jax imports,
-    the numpy reference otherwise.
-    """
-    use_jax = jax_available() if use_jax is None else use_jax
-    lay, segments = _stack_networks(networks)
-    cfgs = _cfg_struct_from_grid(np, grid)
+#: Bucket sizes for the unique axes under chunked evaluation: padding the
+#: deduped rows (duplicates of row 0 — valid math, never gathered back) to
+#: these multiples keeps jit input shapes stable across chunks, so a whole
+#: chunked sweep shares a handful of traces.
+_UNIQUE_BUCKET = 256
+_MAPPING_BUCKET = 64
+
+
+def host_device_count() -> int:
+    """Number of (possibly XLA-forced) host devices; 1 without jax."""
+    if not jax_available():
+        return 1
+    import jax
+    return len(jax.devices())
+
+
+def request_host_devices(n: int) -> bool:
+    """Append ``--xla_force_host_platform_device_count=n`` to XLA_FLAGS.
+
+    Must run before anything imports jax (the backend locks the device
+    count on first init); returns False — and changes nothing — if jax is
+    already imported."""
+    import os
+    import sys
+    if "jax" in sys.modules:
+        return False
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={int(n)}")
+    return True
+
+
+_MESH = None
+
+
+def _cfg_mesh():
+    global _MESH
+    import jax
+    devs = np.array(jax.devices())
+    if _MESH is None or _MESH.devices.size != devs.size:
+        from jax.sharding import Mesh
+        _MESH = Mesh(devs, ("cfg",))
+    return _MESH
+
+
+def _device_put_sharded(cfg_m, cfg_u, lay, inv_m, inv, coefs):
+    """Place kernel inputs: unique-config rows split along the mesh, the
+    small mapping rows / layer axis / coefficients replicated."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+    mesh = _cfg_mesh()
+    row = NamedSharding(mesh, PartitionSpec("cfg"))
+    rep = NamedSharding(mesh, PartitionSpec())
+    put = jax.device_put
+    return ({k: put(v, rep) for k, v in cfg_m.items()},
+            {k: put(v, row) for k, v in cfg_u.items()},
+            {k: put(v, rep) for k, v in lay.items()},
+            put(inv_m, row), put(inv, rep),
+            {k: put(v, rep) for k, v in coefs.items()})
+
+
+def _pad_rows(arr: np.ndarray, n_to: int) -> np.ndarray:
+    """Pad axis 0 to ``n_to`` by repeating row 0 (benign duplicate)."""
+    if arr.shape[0] >= n_to:
+        return arr
+    reps = np.broadcast_to(arr[:1], (n_to - arr.shape[0],) + arr.shape[1:])
+    return np.concatenate([arr, reps], axis=0)
+
+
+def _prepare_fields(fields: Dict[str, np.ndarray],
+                    u_bucket: int | None = None,
+                    m_bucket: int | None = None,
+                    n_dev: int = 1):
+    """Grid columns → two-level-deduped kernel inputs, with the unique
+    axes optionally padded to bucket multiples (and to a device-count
+    multiple so the shard along the mesh is even)."""
+    cfgs = _cfg_struct_from_grid(np, fields)
     coefs = _coef_struct(cfgs)
     cfg_u, inv = _dedup_count_rows(cfgs)            # counts level
     cfg_m, inv_m = _dedup_rows(cfg_u, _MAPPING_COLUMNS)   # mapping level
+    n_u = inv_m.shape[0]
+    if u_bucket is not None or n_dev > 1:
+        tgt = _bucketed(n_u, u_bucket) if u_bucket else n_u
+        tgt = -(-tgt // n_dev) * n_dev
+        if tgt > n_u:
+            cfg_u = {k: _pad_rows(v, tgt) for k, v in cfg_u.items()}
+            inv_m = np.concatenate(
+                [inv_m, np.zeros(tgt - n_u, inv_m.dtype)])
+    if m_bucket is not None:
+        n_m = next(iter(cfg_m.values())).shape[0]
+        cfg_m = {k: _pad_rows(v, _bucketed(n_m, m_bucket))
+                 for k, v in cfg_m.items()}
     cfg_u = {k: v[:, None] for k, v in cfg_u.items()}
     cfg_m = {k: v[:, None] for k, v in cfg_m.items()}
-    lay = {k: v[None, :] for k, v in lay.items()}
+    return cfg_m, cfg_u, inv_m, inv, coefs
 
+
+def _eval_fields(fields, lay, segments, use_jax: bool, shard: bool,
+                 u_bucket: int | None = None,
+                 m_bucket: int | None = None):
+    """Evaluate one batch of grid columns → ([n, n_net], [n, n_net])."""
+    n_dev = host_device_count() if (shard and use_jax) else 1
+    cfg_m, cfg_u, inv_m, inv, coefs = _prepare_fields(
+        fields, u_bucket, m_bucket, n_dev)
     if not use_jax:
         e, t = _np_grid_kernel(segments, cfg_m, cfg_u, lay, inv_m, inv,
                                coefs)
         return np.asarray(e), np.asarray(t)
-
     from jax.experimental import enable_x64
     with enable_x64():
+        args = (cfg_m, cfg_u, lay, inv_m, inv, coefs)
+        if n_dev > 1:
+            args = _device_put_sharded(*args)
+            kern = _jax_sharded_kernel()
+        else:
+            kern = _jax_grid_kernel()
         _JIT_STATS["calls"] += 1
-        e, t = _jax_grid_kernel()(segments, cfg_m, cfg_u, lay, inv_m, inv,
-                                  coefs)
+        e, t = kern(segments, *args)
         return np.asarray(e), np.asarray(t)
+
+
+def _dispatch_chunk(fc, lay, segments, device=None):
+    """Async-dispatch one padded chunk on ``device`` (jax path): returns
+    uncollected device arrays so the host can prepare the next chunk — and
+    other devices can compute — while this one runs."""
+    import jax
+    cfg_m, cfg_u, inv_m, inv, coefs = _prepare_fields(
+        fc, _UNIQUE_BUCKET, _MAPPING_BUCKET)
+    args = (cfg_m, cfg_u, lay, inv_m, inv, coefs)
+    if device is not None:
+        args = jax.device_put(args, device)
+    _JIT_STATS["calls"] += 1
+    return _jax_grid_kernel()(segments, *args)
+
+
+def _eval_chunked(fields, lay, segments, use_jax: bool, shard: bool,
+                  chunk_size: int, n: int, n_net: int):
+    """Chunked evaluation of the full grid → dense [n, n_net] outputs.
+
+    With ``shard=True`` and several host devices, whole chunks round-robin
+    across the devices: each device runs the complete two-level-dedup
+    kernel on its chunks (no duplicated mapping work, no collectives), and
+    asynchronous dispatch keeps every device busy while the host dedups
+    the next chunk.  In-flight chunks are bounded to 2 per device."""
+    e = np.empty((n, n_net))
+    t = np.empty((n, n_net))
+
+    def chunks():
+        for ci, start in enumerate(range(0, n, chunk_size)):
+            stop = min(start + chunk_size, n)
+            fc = {k: _pad_rows(v[start:stop], chunk_size)
+                  for k, v in fields.items()}
+            yield ci, start, stop, fc
+
+    if not use_jax:
+        for _, start, stop, fc in chunks():
+            ec, tc = _eval_fields(fc, lay, segments, False, False,
+                                  _UNIQUE_BUCKET, _MAPPING_BUCKET)
+            e[start:stop] = ec[:stop - start]
+            t[start:stop] = tc[:stop - start]
+        return e, t
+
+    import jax
+    from jax.experimental import enable_x64
+    devs = jax.devices()
+    n_dev = len(devs) if shard else 1
+    pending: list = []
+
+    def drain(item):
+        start, stop, ec, tc = item
+        e[start:stop] = np.asarray(ec)[:stop - start]
+        t[start:stop] = np.asarray(tc)[:stop - start]
+
+    with enable_x64():
+        for ci, start, stop, fc in chunks():
+            dev = devs[ci % n_dev] if n_dev > 1 else None
+            ec, tc = _dispatch_chunk(fc, lay, segments, dev)
+            pending.append((start, stop, ec, tc))
+            if len(pending) > 2 * n_dev:
+                drain(pending.pop(0))
+        for item in pending:
+            drain(item)
+    return e, t
+
+
+def evaluate_networks(grid: ConfigGrid,
+                      networks: Mapping[str, Sequence[Layer]],
+                      use_jax: bool | None = None,
+                      *,
+                      shard: bool = False,
+                      chunk_size: int | None = None,
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Evaluate every network against every grid point.
+
+    Returns ``(energy, latency)`` float64 arrays of shape
+    ``[grid.n, len(networks)]``, columns ordered like ``networks``.
+    ``use_jax=None`` auto-selects: the jitted kernel when jax imports,
+    the numpy reference otherwise.  ``shard=True`` splits the deduped
+    config axis across all host devices (see :func:`request_host_devices`);
+    ``chunk_size`` evaluates the grid in fixed-shape chunks so the heavy
+    (unique-rows × layers) intermediates stay bounded — mega-scale spaces
+    would otherwise materialise multi-GB tiles.
+    """
+    use_jax = jax_available() if use_jax is None else use_jax
+    lay, segments = _stack_networks(networks)
+    lay = {k: v[None, :] for k, v in lay.items()}
+    fields = grid.fields if isinstance(grid, ConfigGrid) else dict(grid)
+    n = int(next(iter(fields.values())).shape[0])
+
+    if chunk_size is not None and n > chunk_size:
+        return _eval_chunked(fields, lay, segments, use_jax, shard,
+                             chunk_size, n, len(networks))
+
+    return _eval_fields(fields, lay, segments, use_jax, shard)
+
+
+# ---------------------------------------------------------------------------
+# Streaming evaluation: chunked sweep with on-device running reductions.
+#
+# A mega-scale sweep does not need the full [n_cfg, n_net] energy/latency
+# matrices — the paper's §III/§IV consumers want per-network minima
+# (Tables 1–4), the ≤bound boundary sets (Table 5 / chip design), and a
+# handful of near-optimal cells.  ``stream_networks`` evaluates the grid
+# chunk by chunk and folds each chunk into a running reduction ON DEVICE
+# (min / argmin / top-k via one jitted step that fuses the grid kernel
+# with the reducer); only per-chunk boundary candidates cross to the host,
+# pruned against the running minimum (monotone ⇒ no false negatives).
+# ---------------------------------------------------------------------------
+
+
+def _metric_of(metric: str, e, t):
+    if metric == "edp":
+        return e * t
+    return e if metric == "energy" else t
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamResult:
+    """Running reductions of a streamed sweep (flat grid indices)."""
+
+    networks: Tuple[str, ...]
+    n_cfg: int
+    metric: str
+    bound: float
+    min_energy: np.ndarray          # [n_net]
+    min_latency: np.ndarray         # [n_net]
+    min_metric: np.ndarray          # [n_net]
+    argmin: np.ndarray              # [n_net] flat grid index of metric min
+    topk_idx: np.ndarray            # [k, n_net] flat indices, best first
+    topk_metric: np.ndarray         # [k, n_net]
+    boundary_idx: Dict[str, np.ndarray]      # per net, sorted by metric
+    boundary_energy: Dict[str, np.ndarray]
+    boundary_latency: Dict[str, np.ndarray]
+
+    def boundary_metric(self, name: str) -> np.ndarray:
+        return _metric_of(self.metric, self.boundary_energy[name],
+                          self.boundary_latency[name])
+
+
+def _stream_reduce_body(xp, metric, topk, e, t, base, m_valid, bound,
+                        state):
+    """Fold one [chunk, n_net] evaluation into the running state.
+
+    Padded chunk rows (row index ≥ m_valid) are masked to +inf so they
+    never win a reduction; the returned boundary mask compares against the
+    *updated* running minimum, a superset of the final boundary set."""
+    min_e, min_t, min_m, argm, top_v, top_i = state
+    rows = xp.arange(e.shape[0])
+    invalid = (rows >= m_valid)[:, None]
+    e_m = xp.where(invalid, np.inf, e)
+    t_m = xp.where(invalid, np.inf, t)
+    v = _metric_of(metric, e_m, t_m)
+    min_e = xp.minimum(min_e, e_m.min(axis=0))
+    min_t = xp.minimum(min_t, t_m.min(axis=0))
+    cmin = v.min(axis=0)
+    better = cmin < min_m
+    min_m = xp.where(better, cmin, min_m)
+    argm = xp.where(better, base + xp.argmin(v, axis=0), argm)
+    idx = xp.broadcast_to((base + rows)[:, None], v.shape)
+    all_v = xp.concatenate([top_v, v], axis=0)
+    all_i = xp.concatenate([top_i, idx], axis=0)
+    if xp is np:
+        order = np.argsort(all_v, axis=0, kind="stable")[:topk]
+    else:                      # jax sorts are stable by construction
+        order = xp.argsort(all_v, axis=0)[:topk]
+    top_v = xp.take_along_axis(all_v, order, axis=0)
+    top_i = xp.take_along_axis(all_i, order, axis=0)
+    mask = v <= min_m[None, :] * (1.0 + bound)
+    return (min_e, min_t, min_m, argm, top_v, top_i), mask
+
+
+_jitted_reduce_step = None
+
+
+def _jax_reduce_step():
+    """Jitted running reduction: a chunk's [chunk, n_net] energies are
+    folded into the state on device — only the small state, the boundary
+    mask, and the masked candidate rows ever leave it."""
+    global _jitted_reduce_step
+    if _jitted_reduce_step is None:
+        import jax
+        import jax.numpy as jnp
+
+        def red(metric, topk, e, t, state, base, m_valid, bound):
+            _JIT_STATS["traces"] += 1        # runs only while tracing
+            return _stream_reduce_body(jnp, metric, topk, e, t, base,
+                                       m_valid, bound, state)
+
+        _jitted_reduce_step = jax.jit(red, static_argnums=(0, 1))
+    return _jitted_reduce_step
+
+
+def stream_networks(grid: ConfigGrid,
+                    networks: Mapping[str, Sequence[Layer]],
+                    *,
+                    chunk_size: int = 4096,
+                    use_jax: bool | None = None,
+                    shard: bool = False,
+                    bound: float = 0.05,
+                    metric: str = "edp",
+                    topk: int = 16) -> StreamResult:
+    """Chunked streaming sweep with on-device running reductions.
+
+    Never materialises the full ``[n_cfg, n_net]`` matrices: each chunk is
+    evaluated (optionally sharded across host devices) and folded into
+    per-network running minima, top-k cells, and ≤``bound`` boundary
+    candidate sets.  Equivalent to reducing :func:`evaluate_networks`'s
+    output, at bounded memory.
+    """
+    use_jax = jax_available() if use_jax is None else use_jax
+    names = tuple(networks)
+    n_net = len(names)
+    lay, segments = _stack_networks(networks)
+    lay = {k: v[None, :] for k, v in lay.items()}
+    fields = grid.fields if isinstance(grid, ConfigGrid) else dict(grid)
+    n = int(next(iter(fields.values())).shape[0])
+    chunk = max(1, min(chunk_size, n))
+    n_dev = host_device_count() if (shard and use_jax) else 1
+
+    state = (np.full(n_net, np.inf), np.full(n_net, np.inf),
+             np.full(n_net, np.inf), np.full(n_net, -1, np.int64),
+             np.full((topk, n_net), np.inf),
+             np.full((topk, n_net), -1, np.int64))
+    cand: Dict[str, list] = {nm: [] for nm in names}
+
+    def collect(mask, e, t, start):
+        rows_i, cols_i = np.nonzero(mask)
+        for j in range(n_net):
+            sel = rows_i[cols_i == j]
+            if sel.size:
+                cand[names[j]].append((start + sel, e[sel, j], t[sel, j]))
+
+    def chunks():
+        for ci, start in enumerate(range(0, n, chunk)):
+            stop = min(start + chunk, n)
+            fc = {k: _pad_rows(v[start:stop], chunk)
+                  for k, v in fields.items()}
+            yield ci, start, stop, fc
+
+    if not use_jax:
+        for _, start, stop, fc in chunks():
+            cfg_m, cfg_u, inv_m, inv, coefs = _prepare_fields(
+                fc, _UNIQUE_BUCKET, _MAPPING_BUCKET)
+            e, t = _np_grid_kernel(segments, cfg_m, cfg_u, lay, inv_m,
+                                   inv, coefs)
+            state, mask = _stream_reduce_body(
+                np, metric, topk, e, t, start, stop - start, bound, state)
+            collect(mask, e, t, start)
+    else:
+        # Round-robin the chunk kernels across devices (async dispatch);
+        # the cheap stateful reduction runs in chunk order on device 0.
+        import jax
+        from jax.experimental import enable_x64
+        devs = jax.devices()
+        pending: list = []
+
+        with enable_x64():
+            def reduce_one(item):
+                nonlocal state
+                start, stop, e_d, t_d = item
+                if n_dev > 1:
+                    e_d = jax.device_put(e_d, devs[0])
+                    t_d = jax.device_put(t_d, devs[0])
+                _JIT_STATS["calls"] += 1
+                state, mask = _jax_reduce_step()(
+                    metric, topk, e_d, t_d, state, np.int64(start),
+                    np.int64(stop - start), float(bound))
+                # only the boundary mask and the hit rows cross to the
+                # host — the [chunk, n_net] matrices stay on device
+                rows_i, cols_i = np.nonzero(np.asarray(mask))
+                if rows_i.size:
+                    urows = np.unique(rows_i)
+                    e_h = np.asarray(e_d[urows, :])
+                    t_h = np.asarray(t_d[urows, :])
+                    pos = np.searchsorted(urows, rows_i)
+                    for j in range(n_net):
+                        m = cols_i == j
+                        if m.any():
+                            cand[names[j]].append(
+                                (start + rows_i[m], e_h[pos[m], j],
+                                 t_h[pos[m], j]))
+
+            for ci, start, stop, fc in chunks():
+                dev = devs[ci % n_dev] if n_dev > 1 else None
+                e_d, t_d = _dispatch_chunk(fc, lay, segments, dev)
+                pending.append((start, stop, e_d, t_d))
+                if len(pending) > 2 * n_dev:
+                    reduce_one(pending.pop(0))
+            for item in pending:
+                reduce_one(item)
+
+    min_e, min_t, min_m, argm, top_v, top_i = (
+        np.asarray(s) for s in state)
+
+    b_idx, b_e, b_t = {}, {}, {}
+    for j, nm in enumerate(names):
+        if cand[nm]:
+            idx = np.concatenate([c[0] for c in cand[nm]])
+            ee = np.concatenate([c[1] for c in cand[nm]])
+            tt = np.concatenate([c[2] for c in cand[nm]])
+        else:                                          # pragma: no cover
+            idx, ee, tt = (np.zeros(0, np.int64),) + (np.zeros(0),) * 2
+        v = _metric_of(metric, ee, tt)
+        keep = v <= min_m[j] * (1.0 + bound)   # prune to the final min
+        idx, ee, tt, v = idx[keep], ee[keep], tt[keep], v[keep]
+        order = np.argsort(v, kind="stable")
+        b_idx[nm], b_e[nm], b_t[nm] = idx[order], ee[order], tt[order]
+
+    return StreamResult(
+        networks=names, n_cfg=n, metric=metric, bound=bound,
+        min_energy=min_e, min_latency=min_t, min_metric=min_m,
+        argmin=argm, topk_idx=top_i, topk_metric=top_v,
+        boundary_idx=b_idx, boundary_energy=b_e, boundary_latency=b_t)
 
 
 def simulate_grid(configs: Sequence[AcceleratorConfig] | ConfigGrid,

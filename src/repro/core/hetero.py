@@ -18,11 +18,14 @@ when a network runs on a non-corresponding core type.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Mapping, Sequence, Tuple
 
 import numpy as np
 
+from . import energymodel
+from .accelerator import ConfigGrid
 from .dse import SweepResult, boundary_configs
+from .topology import Layer
 
 Cell = Tuple[int, int, int]     # (array_idx, psum_idx, ifmap_idx)
 
@@ -37,6 +40,34 @@ class HeteroChip:
     def core_label(self, idx: int) -> str:
         any_sweep = next(iter(self.sweeps.values()))
         return any_sweep.cell_label(self.core_types[idx])
+
+
+def _greedy_cover(cand: np.ndarray, rel: np.ndarray, max_cores: int):
+    """Shared greedy set-cover core of both design_chip paths.
+
+    ``cand``/``rel`` are [n_net, n_pts]; each round picks the point
+    covering the most uncovered networks (ties → lower total relative
+    metric across covered networks, then lower point index).  Returns
+    (selected point columns, {net row → core index}, uncovered mask)."""
+    uncovered = np.ones(cand.shape[0], dtype=bool)
+    cols: List[int] = []
+    assign: Dict[int, int] = {}
+    while uncovered.any() and len(cols) < max_cores:
+        counts = cand[uncovered].sum(axis=0)
+        best_count = counts.max() if counts.size else 0
+        if best_count == 0:
+            break
+        rel_sum = np.where(cand[uncovered], rel[uncovered], 0.0).sum(axis=0)
+        tied = np.flatnonzero(counts == best_count)
+        col = int(tied[np.argmin(rel_sum[tied])])
+
+        idx = len(cols)
+        cols.append(col)
+        covered_now = cand[:, col] & uncovered
+        for i in np.flatnonzero(covered_now):
+            assign[int(i)] = idx
+        uncovered &= ~covered_now
+    return cols, assign, uncovered
 
 
 def design_chip(sweeps: Dict[str, SweepResult], bound: float = 0.05,
@@ -58,27 +89,8 @@ def design_chip(sweeps: Dict[str, SweepResult], bound: float = 0.05,
     cand = mats <= mins * (1.0 + bound)           # [n_net, n_pts] bool
     rel = mats / mins                             # metric / per-net minimum
 
-    uncovered = np.ones(len(names), dtype=bool)
-    core_flat: List[int] = []
-    assignment: Dict[str, int] = {}
-
-    while uncovered.any() and len(core_flat) < max_cores:
-        # cell covering the most uncovered networks; ties → lower total
-        # relative metric across covered networks.
-        counts = cand[uncovered].sum(axis=0)
-        best_count = counts.max()
-        if best_count == 0:
-            break
-        rel_sum = np.where(cand[uncovered], rel[uncovered], 0.0).sum(axis=0)
-        tied = np.flatnonzero(counts == best_count)
-        cell_flat = int(tied[np.argmin(rel_sum[tied])])
-
-        idx = len(core_flat)
-        core_flat.append(cell_flat)
-        covered_now = cand[:, cell_flat] & uncovered
-        for i in np.flatnonzero(covered_now):
-            assignment[names[i]] = idx
-        uncovered &= ~covered_now
+    core_flat, assign, uncovered = _greedy_cover(cand, rel, max_cores)
+    assignment = {names[i]: idx for i, idx in assign.items()}
 
     core_types: List[Cell] = [
         tuple(int(x) for x in np.unravel_index(c, shape)) for c in core_flat]
@@ -93,6 +105,68 @@ def design_chip(sweeps: Dict[str, SweepResult], bound: float = 0.05,
 
     return HeteroChip(core_types=core_types, assignment=assignment,
                       candidate_sets=candidates, sweeps=sweeps)
+
+
+@dataclasses.dataclass
+class StreamChip:
+    """Heterogeneous chip designed from a streamed sweep: core types are
+    FLAT grid indices (mega grids are not 3-D cubes)."""
+
+    core_types: List[int]
+    assignment: Dict[str, int]                # network -> core-type index
+    candidate_sets: Dict[str, List[int]]      # flat indices, best first
+    stream: "energymodel.StreamResult"
+
+    def core_label(self, idx: int, grid: ConfigGrid) -> str:
+        return grid.config_at(self.core_types[idx]).label()
+
+    def core_cells(self, shape: Tuple[int, ...]) -> List[Cell]:
+        """Unravel the flat core indices onto a sweep cube shape."""
+        return [tuple(int(x) for x in np.unravel_index(c, shape))
+                for c in self.core_types]
+
+
+def design_chip_streaming(stream: "energymodel.StreamResult",
+                          grid: ConfigGrid,
+                          networks: Mapping[str, Sequence[Layer]],
+                          max_cores: int = 4,
+                          use_jax: bool | None = None) -> StreamChip:
+    """Greedy cover over a StreamResult's boundary sets — no full cubes.
+
+    Exactly reproduces :func:`design_chip`'s choices: any point that can
+    cover a network lies in that network's boundary set, so the greedy
+    only ever needs the union of the streamed candidate sets.  Networks
+    left uncovered are assigned by evaluating just the chosen core cells
+    (a ≤max_cores-point grid) exactly.
+    """
+    names = list(stream.networks)
+    union = np.unique(np.concatenate(
+        [stream.boundary_idx[nm] for nm in names]))
+    cand = np.zeros((len(names), union.size), dtype=bool)
+    rel = np.zeros((len(names), union.size))
+    for i, nm in enumerate(names):
+        pos = np.searchsorted(union, stream.boundary_idx[nm])
+        cand[i, pos] = True
+        rel[i, pos] = stream.boundary_metric(nm) / stream.min_metric[i]
+
+    cols, assign, uncovered = _greedy_cover(cand, rel, max_cores)
+    core_flat = [int(union[c]) for c in cols]
+    assignment = {names[i]: idx for i, idx in assign.items()}
+
+    if uncovered.any() and core_flat:
+        # exact evaluation of the few chosen cells for every network
+        e, t = energymodel.evaluate_networks(
+            grid.take(core_flat), {nm: networks[nm] for nm in names},
+            use_jax=use_jax)
+        vals = energymodel._metric_of(stream.metric, e, t).T
+        best = np.argmin(vals, axis=1)
+        for i in np.flatnonzero(uncovered):
+            assignment[names[i]] = int(best[i])
+
+    candidate_sets = {nm: [int(c) for c in stream.boundary_idx[nm]]
+                      for nm in names}
+    return StreamChip(core_types=core_flat, assignment=assignment,
+                      candidate_sets=candidate_sets, stream=stream)
 
 
 def cross_penalty(chip: HeteroChip, network: str, other_core: int
@@ -111,14 +185,23 @@ def cross_penalty(chip: HeteroChip, network: str, other_core: int
 def savings_summary(chip: HeteroChip) -> Dict[str, Dict[str, float]]:
     """Per-network savings of the heterogeneous assignment vs. the worst
     single-core-type choice (the paper's headline: up to 36% energy / 67%
-    EDP saved by running on the near-optimal core)."""
-    out = {}
-    for name in chip.assignment:
-        sw = chip.sweeps[name]
-        own = chip.core_types[chip.assignment[name]]
-        worst_e = max(float(sw.energy[c]) for c in chip.core_types)
-        worst_edp = max(float(sw.edp[c]) for c in chip.core_types)
-        out[name] = dict(
-            energy_saved=(worst_e - float(sw.energy[own])) / worst_e * 100.0,
-            edp_saved=(worst_edp - float(sw.edp[own])) / worst_edp * 100.0)
-    return out
+    EDP saved by running on the near-optimal core).
+
+    One gather per metric: the core cells are flattened to indices once
+    and every (network × core) value is pulled with array indexing — no
+    per-network/per-core Python loops."""
+    names = list(chip.assignment)
+    shape = next(iter(chip.sweeps.values())).energy.shape
+    core_flat = np.ravel_multi_index(
+        np.asarray(chip.core_types, dtype=np.intp).T, shape)
+    energy = np.stack([chip.sweeps[n].energy.ravel()[core_flat]
+                       for n in names])            # [n_net, n_cores]
+    edp = np.stack([chip.sweeps[n].edp.ravel()[core_flat] for n in names])
+    own = np.asarray([chip.assignment[n] for n in names], dtype=np.intp)
+    rows = np.arange(len(names))
+    worst_e, worst_edp = energy.max(axis=1), edp.max(axis=1)
+    e_saved = (worst_e - energy[rows, own]) / worst_e * 100.0
+    edp_saved = (worst_edp - edp[rows, own]) / worst_edp * 100.0
+    return {n: dict(energy_saved=float(e_saved[i]),
+                    edp_saved=float(edp_saved[i]))
+            for i, n in enumerate(names)}

@@ -15,15 +15,24 @@ core latency already exceeds the best pipeline latency found so far.
 ``brute_force_partition`` enumerates all splits — both used by the tests to
 verify the B&B lands on (near-)optimal pipelines, and by the TPU adaptation
 (`parallel/pipeline.py`) to place transformer layers on pipeline stages.
+
+``batch_partition`` is the production hot path: a vectorized parametric
+search that solves ALL (network × core-count) splits in one call — binary
+search on the bottleneck latency T, with a ``searchsorted``-style greedy
+feasibility check over prefix sums, batched over every (network, k) pair.
+Segment sums are evaluated as prefix differences, the same arithmetic
+``dp_partition`` uses, so the two agree exactly.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import List, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
+
+from .energymodel import _bucketed, jax_available
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,18 +57,18 @@ class Partition:
 
 
 def _mk_partition(lat: Sequence[float], bounds: Sequence[int]) -> Partition:
-    lat = list(lat)
-    total = float(sum(lat))
-    bounds = list(bounds)
-    loads = []
-    for i, start in enumerate(bounds):
-        end = bounds[i + 1] if i + 1 < len(bounds) else len(lat)
-        loads.append(float(sum(lat[start:end])))
-    pipe = max(loads)
-    return Partition(boundaries=tuple(bounds), loads=tuple(loads),
+    lat = np.asarray(lat, dtype=np.float64)
+    prefix = np.concatenate([[0.0], np.cumsum(lat)])
+    starts = np.asarray(bounds, dtype=np.intp)
+    ends = np.concatenate([starts[1:], [lat.size]])
+    loads = prefix[ends] - prefix[starts]        # O(k), not O(k·n)
+    total = float(prefix[-1])
+    pipe = float(loads.max())
+    return Partition(boundaries=tuple(int(b) for b in starts),
+                     loads=tuple(float(x) for x in loads),
                      pipeline_latency=pipe,
                      speedup=total / pipe if pipe > 0 else float("inf"),
-                     n_layers=len(lat))
+                     n_layers=int(lat.size))
 
 
 def bb_partition(latencies: Sequence[float], n_cores: int) -> Partition:
@@ -116,20 +125,22 @@ def dp_partition(latencies: Sequence[float], n_cores: int) -> Partition:
     k = min(n_cores, n) if n else 1
     prefix = np.concatenate([[0.0], np.cumsum(lat)])
 
-    # dp[c][i] = minimal pipeline latency splitting lat[:i] into c cores
+    # dp[c][i] = minimal pipeline latency splitting lat[:i] into c cores.
+    # The inner minimisation over the cut point j is vectorised with numpy
+    # over prefix sums (argmin keeps the first minimum, matching the
+    # original scalar loop's strict-improvement tie-breaking).
     NEG = float("inf")
     dp = np.full((k + 1, n + 1), NEG)
     cut = np.zeros((k + 1, n + 1), dtype=int)
     dp[0][0] = 0.0
     for c in range(1, k + 1):
+        prev = dp[c - 1]
         for i in range(c, n + 1):
-            bestv, bestj = NEG, c - 1
-            for j in range(c - 1, i):
-                v = max(dp[c - 1][j], prefix[i] - prefix[j])
-                if v < bestv:
-                    bestv, bestj = v, j
-            dp[c][i] = bestv
-            cut[c][i] = bestj
+            j0 = c - 1
+            cand = np.maximum(prev[j0:i], prefix[i] - prefix[j0:i])
+            bj = int(np.argmin(cand))
+            dp[c][i] = cand[bj]
+            cut[c][i] = j0 + bj
     bounds: List[int] = []
     i = n
     for c in range(k, 0, -1):
@@ -153,6 +164,247 @@ def brute_force_partition(latencies: Sequence[float], n_cores: int
         if best is None or p.pipeline_latency < best.pipeline_latency:
             best = p
     return best if best is not None else _mk_partition(lat, [0])
+
+
+# ---------------------------------------------------------------------------
+# Batched parametric search: all (network × k) splits in one vectorized call.
+#
+# Feasibility of a bottleneck T is monotone (feasible ⟺ T ≥ T*), so a
+# bisection on T converges to the optimum; every bisection step runs ONE
+# greedy maximal-jump segmentation for ALL (network, k) pairs at once, each
+# jump a vectorized binary search over the per-network prefix-sum rows.
+# _BISECT_ITERS halvings shrink the bracket below one ulp of T* (see the
+# constant's note), and segment sums are prefix DIFFERENCES throughout
+# (never ``prefix + T`` sums), so the final bottleneck is bit-identical to
+# ``dp_partition``'s.
+# ---------------------------------------------------------------------------
+
+#: Bisection steps: the initial bracket is at most ~one bottleneck wide
+#: (see the lb/hi seeding in batch_partition), so 56 halvings push the
+#: bracket below one ulp of the optimum — the greedy segmentation at the
+#: upper end then lands on it exactly.
+_BISECT_ITERS = 56
+
+#: Static-shape buckets for the jitted solver: padding the prefix axis and
+#: the (network × k) row axis to these multiples keeps the module-level
+#: compile cache warm across calls with nearby problem sizes.
+_N_BUCKET = 64
+_ROW_BUCKET = 32
+_K_MAX = 8
+
+
+def _row_searchsorted(P: np.ndarray, net: np.ndarray, pos: np.ndarray,
+                      thr: np.ndarray) -> np.ndarray:
+    """Per-row maximal jump: largest j with P[net, j] − P[net, pos] ≤ thr.
+
+    ``P`` rows are non-decreasing (prefix sums padded with +inf), so the
+    predicate is monotone in j and a batched binary search finds the last
+    true position.  Comparisons subtract prefixes — the exact arithmetic of
+    the DP oracle — rather than pre-adding ``thr`` to the base (which would
+    round and admit off-by-one-ulp jumps)."""
+    base = P[net, pos]
+    lo = pos.copy()                       # predicate holds at pos (0 ≤ thr)
+    hi = np.full_like(pos, P.shape[1] - 1)
+    steps = int(np.ceil(np.log2(P.shape[1]))) + 1
+    for _ in range(steps):
+        mid = (lo + hi + 1) >> 1
+        ok = P[net, mid] - base <= thr
+        lo = np.where(ok, mid, lo)
+        hi = np.where(ok, hi, mid - 1)
+    return lo
+
+
+def _batch_greedy(P: np.ndarray, net: np.ndarray, n_arr: np.ndarray,
+                  thr: np.ndarray, kk: np.ndarray, k_max: int,
+                  exact: bool):
+    """Greedy maximal-jump segmentation at threshold ``thr`` for every row.
+
+    ``exact=False``: feasibility — True where ≤ kk segments cover all
+    layers with every segment sum ≤ thr.  ``exact=True``: returns the
+    [rows, k_max] start indices of an exactly-kk segmentation (each of the
+    remaining segments is guaranteed ≥ 1 layer), valid when thr ≥ T*.
+    """
+    rows = net.shape[0]
+    pos = np.zeros(rows, dtype=np.intp)
+    viol = np.zeros(rows, dtype=bool)
+    starts = np.full((rows, k_max), 0, dtype=np.intp) if exact else None
+    for s in range(k_max):
+        active = (s < kk) & (pos < n_arr)
+        j = _row_searchsorted(P, net, pos, thr)
+        if exact:
+            rem = kk - s                      # segments still to open
+            j = np.minimum(j, n_arr - np.maximum(rem - 1, 0))
+        j = np.maximum(j, pos + 1)            # force progress …
+        j = np.minimum(j, n_arr)              # … but stay in bounds
+        viol |= active & (P[net, j] - P[net, pos] > thr)
+        if exact:
+            starts[:, s] = np.where(s < kk, np.minimum(pos, n_arr), n_arr)
+        pos = np.where(active, j, pos)
+    if exact:
+        return starts
+    return (pos >= n_arr) & ~viol
+
+
+_jitted_solver = None          # built lazily on first jax dispatch
+
+
+def _jax_solver():
+    """One fused XLA program for the whole parametric search: the bisection
+    on the bottleneck latency (each step one greedy maximal-jump
+    feasibility over all (network, k) rows) plus the final exact-k
+    segmentation.  The inner binary search and the greedy segment loop are
+    UNROLLED (static bs_steps / _K_MAX) so each bisection step is one
+    straight-line fused body; only the bisection itself is a sequential
+    device loop.  Jitted at module level, so the all-pairs solve is ONE
+    device dispatch instead of thousands of tiny numpy ops."""
+    global _jitted_solver
+    if _jitted_solver is None:
+        import jax
+        import jax.numpy as jnp
+        from jax import lax
+
+        def solve(P, net, n_arr, kk, lo, hi, k_max, bs_steps):
+            def rowsearch(pos, thr):
+                base = P[net, pos]
+                blo = pos
+                bhi = jnp.full_like(pos, P.shape[1] - 1)
+                for _ in range(bs_steps):
+                    mid = (blo + bhi + 1) >> 1
+                    ok = P[net, mid] - base <= thr
+                    blo = jnp.where(ok, mid, blo)
+                    bhi = jnp.where(ok, bhi, mid - 1)
+                return blo
+
+            def feasible(thr):
+                pos = jnp.zeros_like(net)
+                viol = jnp.zeros(net.shape, bool)
+                for s in range(k_max):
+                    active = (s < kk) & (pos < n_arr)
+                    j = rowsearch(pos, thr)
+                    j = jnp.minimum(jnp.maximum(j, pos + 1), n_arr)
+                    viol = viol | (active & (P[net, j] - P[net, pos] > thr))
+                    pos = jnp.where(active, j, pos)
+                return (pos >= n_arr) & ~viol
+
+            def bisect(_, lh):
+                blo, bhi = lh
+                mid = 0.5 * (blo + bhi)
+                feas = feasible(mid)
+                return (jnp.where(feas, blo, mid),
+                        jnp.where(feas, mid, bhi))
+            lo_f, hi_f = lax.fori_loop(0, _BISECT_ITERS, bisect, (lo, hi))
+
+            starts = []
+            pos = jnp.zeros_like(net)
+            for s in range(_K_MAX):           # static unroll; kk masks
+                starts.append(jnp.where(s < kk,
+                                        jnp.minimum(pos, n_arr), n_arr))
+                j = rowsearch(pos, hi_f)
+                j = jnp.minimum(j, n_arr - jnp.maximum(kk - s - 1, 0))
+                j = jnp.minimum(jnp.maximum(j, pos + 1), n_arr)
+                pos = jnp.where((s < kk) & (pos < n_arr), j, pos)
+            return jnp.stack(starts, axis=1)
+
+        _jitted_solver = jax.jit(solve, static_argnums=(6, 7))
+    return _jitted_solver
+
+
+def batch_partition(latencies: Sequence[Sequence[float]],
+                    n_cores: Sequence[int] | int,
+                    use_jax: bool | None = None,
+                    ) -> List[Dict[int, Partition]]:
+    """Solve every (network, k) minimal-bottleneck split in one call.
+
+    ``latencies`` is a sequence of per-network layer-latency sequences and
+    ``n_cores`` an int or sequence of core counts; returns one
+    ``{k: Partition}`` dict per network.  Pipeline latencies are exactly
+    ``dp_partition``'s (same prefix-difference arithmetic): the
+    ``_BISECT_ITERS``-step bisection shrinks the bracket below one ulp of
+    the optimum, so the greedy segmentation at the upper bracket lands on
+    it exactly.  With
+    jax available the whole search is one jitted dispatch; the numpy body
+    is the reference fallback.
+    """
+    lats = [np.asarray(l, dtype=np.float64) for l in latencies]
+    ks = ((int(n_cores),) if isinstance(n_cores, (int, np.integer))
+          else tuple(int(k) for k in n_cores))
+    if not lats or not ks:
+        return [dict() for _ in lats]
+    if max(ks) > _K_MAX and use_jax is not False:
+        use_jax = False                    # solver unrolls _K_MAX segments
+    use_jax = (jax_available() if use_jax is None else use_jax)
+    n_lens = np.array([l.size for l in lats], dtype=np.int64)
+    n_max = int(n_lens.max())
+    n_net = len(lats)
+
+    n_pad = _bucketed(n_max, _N_BUCKET) if use_jax else n_max
+    P = np.full((n_net, n_pad + 1), np.inf)
+    mx = np.zeros(n_net)
+    for i, l in enumerate(lats):
+        P[i, 0] = 0.0
+        P[i, 1:l.size + 1] = np.cumsum(l)
+        mx[i] = l.max() if l.size else 0.0
+
+    # one row per (network, requested k), clamped like dp_partition
+    net = np.repeat(np.arange(n_net, dtype=np.int64), len(ks))
+    k_req = np.tile(np.asarray(ks, dtype=np.int64), n_net)
+    kk = np.minimum(np.maximum(k_req, 1), np.maximum(n_lens[net], 1))
+    k_max = int(kk.max())
+    n_arr = n_lens[net]
+    n_rows = net.size
+
+    total = P[net, n_arr]
+    # Tight initial bracket: any bottleneck is ≥ max(max layer, total/k),
+    # and the greedy bound gives T* ≤ total/k + max layer.  The tiny
+    # relative slack absorbs the rounding of the bound itself; the
+    # bisection count then only has to cover the ~2^53 floats inside.
+    lb = np.maximum(mx[net], total / np.maximum(kk, 1))
+    lo = np.nextafter(lb, -np.inf)
+    hi = np.minimum(total, (total / np.maximum(kk, 1) + mx[net])
+                    * (1.0 + 1e-12))
+
+    if use_jax:
+        r_pad = _bucketed(n_rows, _ROW_BUCKET)
+        pad = r_pad - n_rows
+        netp = np.concatenate([net, np.zeros(pad, np.int64)])
+        n_ap = np.concatenate([n_arr, np.full(pad, n_lens[0], np.int64)])
+        kkp = np.concatenate([kk, np.ones(pad, np.int64)])
+        lop = np.concatenate([lo, np.full(pad, lo[0] if n_rows else 0.0)])
+        hip = np.concatenate([hi, np.full(pad, hi[0] if n_rows else 1.0)])
+        from jax.experimental import enable_x64
+        with enable_x64():
+            bs_steps = int(np.ceil(np.log2(n_pad + 1))) + 1
+            starts = np.asarray(_jax_solver()(
+                P, netp, n_ap, kkp, lop, hip, _K_MAX, bs_steps))[:n_rows]
+    else:
+        for _ in range(_BISECT_ITERS):
+            mid = 0.5 * (lo + hi)
+            feas = _batch_greedy(P, net, n_arr, mid, kk, k_max,
+                                 exact=False)
+            hi = np.where(feas, mid, hi)
+            lo = np.where(feas, lo, mid)
+        starts = _batch_greedy(P, net, n_arr, hi, kk, k_max, exact=True)
+
+    # Vectorised load extraction, then plain-Python object construction
+    # (no per-row numpy calls — they would dominate at 126 rows).
+    ends = np.concatenate([starts[:, 1:],
+                           np.full((n_rows, 1), 0, np.int64)], axis=1)
+    ends[:, -1] = n_arr
+    ends = np.minimum(np.maximum(ends, starts), n_arr[:, None])
+    loads_all = (P[net[:, None], ends] - P[net[:, None], starts]).tolist()
+    starts_l = starts.tolist()
+    totals = total.tolist()
+    out: List[Dict[int, Partition]] = [dict() for _ in lats]
+    for r in range(n_rows):
+        i, k, kr = int(net[r]), int(k_req[r]), int(kk[r])
+        loads = loads_all[r][:kr]
+        pipe = max(loads)
+        out[i][k] = Partition(
+            boundaries=tuple(starts_l[r][:kr]), loads=tuple(loads),
+            pipeline_latency=pipe,
+            speedup=totals[r] / pipe if pipe > 0 else float("inf"),
+            n_layers=int(n_lens[i]))
+    return out
 
 
 def partition_network(report, n_cores: int, method: str = "bb") -> Partition:

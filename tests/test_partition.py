@@ -79,3 +79,21 @@ def test_bb_equals_dp_on_benchmarks():
         bb = partition.partition_network(rep, 4)
         dp = partition.partition_network(rep, 4, "dp")
         assert bb.pipeline_latency <= dp.pipeline_latency * 1.05
+
+
+@given(st.lists(lat_lists, min_size=1, max_size=4), st.sets(cores,
+                                                            min_size=1))
+@settings(max_examples=150, deadline=None)
+def test_batch_partition_matches_dp(lat_groups, ks):
+    """The vectorized parametric search is EXACT: identical pipeline
+    latencies to the dp oracle for every (network, k) pair at once.
+    (numpy backend here — the jit backend is covered on the model zoo in
+    test_stream_engine.py without per-example dispatch overhead.)"""
+    ks = sorted(ks)
+    res = partition.batch_partition(lat_groups, ks, use_jax=False)
+    for i, lat in enumerate(lat_groups):
+        for k in ks:
+            dp = partition.dp_partition(lat, k)
+            assert res[i][k].pipeline_latency == dp.pipeline_latency
+            assert res[i][k].boundaries[0] == 0
+            assert sum(res[i][k].loads) == pytest.approx(sum(lat))
