@@ -20,6 +20,10 @@ def main():
     # one batched, jit-cached call evaluates all networks × the whole grid
     sweeps = dse.sweep_networks(
         {n: topology.get_network(n) for n in topology.NETWORKS})
+    # self-describing output: what the engine actually executed on
+    print(f"engine backend: {energymodel.last_backend()} "
+          f"({energymodel.host_device_count()} host device(s); "
+          f"pallas available: {energymodel.pallas_available()})")
     chip = hetero.design_chip(sweeps, bound=0.05, max_cores=3)
     groups = collections.defaultdict(list)
     for net, i in chip.assignment.items():

@@ -67,6 +67,7 @@ def sweep_networks(networks: Mapping[str, Sequence[Layer]],
                    ifmap_kb: Sequence[int] = GB_SIZES_KB,
                    base: AcceleratorConfig | None = None,
                    use_jax: bool | None = None,
+                   backend: str | None = None,
                    shard: bool = False,
                    chunk_size: int | None = None) -> Dict[str, SweepResult]:
     """Sweep EVERY network over the whole grid in one compiled call.
@@ -74,14 +75,15 @@ def sweep_networks(networks: Mapping[str, Sequence[Layer]],
     This is the batched entry point: the config cross product is built as
     arrays, all networks' layers share one padded trace, and the jitted
     kernel is cached at module level — repeated sweeps never retrace.
+    ``backend`` picks the heavy-stage kernel (``"pallas"`` routes through
+    the fused count-terms kernel, with auto-fallback to jax/numpy);
     ``shard=True`` spreads the config axis over all host devices (see
     :func:`energymodel.request_host_devices`); ``chunk_size`` bounds the
     engine's per-dispatch intermediates on large grids.
     """
-    use_jax = _use_jax_default() if use_jax is None else use_jax
     grid = _paper_grid(arrays, psum_kb, ifmap_kb, base)
     e, t = energymodel.evaluate_networks(grid, networks, use_jax=use_jax,
-                                         shard=shard,
+                                         backend=backend, shard=shard,
                                          chunk_size=chunk_size)
     shape = (len(arrays), len(psum_kb), len(ifmap_kb))
     out = {}
@@ -102,7 +104,7 @@ def stream_grid(networks: Mapping[str, Sequence[Layer]],
     consumes) — the full [n_cfg, n_net] matrices are never materialised.
     Keyword arguments forward to :func:`energymodel.stream_networks`
     (``chunk_size``, ``shard``, ``bound``, ``metric``, ``topk``,
-    ``use_jax``)."""
+    ``use_jax``, ``backend``)."""
     return energymodel.stream_networks(grid, networks, **kwargs)
 
 
@@ -111,11 +113,12 @@ def sweep_network(layers: Sequence[Layer], network: str = "net",
                   psum_kb: Sequence[int] = GB_SIZES_KB,
                   ifmap_kb: Sequence[int] = GB_SIZES_KB,
                   base: AcceleratorConfig | None = None,
-                  use_jax: bool | None = None) -> SweepResult:
+                  use_jax: bool | None = None,
+                  backend: str | None = None) -> SweepResult:
     """Single-network sweep (thin wrapper over :func:`sweep_networks`)."""
     return sweep_networks({network: layers}, arrays=arrays, psum_kb=psum_kb,
                           ifmap_kb=ifmap_kb, base=base,
-                          use_jax=use_jax)[network]
+                          use_jax=use_jax, backend=backend)[network]
 
 
 # ---------------------------------------------------------------------------

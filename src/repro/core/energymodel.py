@@ -22,6 +22,31 @@ The two mechanisms behind the paper's Observations are modelled explicitly:
 Global-buffer access energy/latency scales with the configured partition
 capacity (CACTI-like √capacity), so oversizing a buffer costs energy — the
 right-hand tails of Fig. 5/6.
+
+Array-shape conventions of the batched engine (see also
+``docs/architecture.md``):
+
+* Struct-of-arrays everywhere: a "config" is a dict of equal-length float64
+  columns (:class:`repro.core.accelerator.ConfigGrid.fields`), a "layer
+  struct" a dict of per-layer columns (``rs_mapping.layer_struct``).
+* The heavy stage broadcasts ``[n_unique, 1]`` config columns against
+  ``[1, n_layers]`` layer columns → ``[n_unique, n_layers]`` tiles, where
+  ``n_unique`` is the **two-level dedup** of the grid: the RS mapping runs
+  on the mapping-unique rows (``_MAPPING_COLUMNS``), access counts on the
+  count-unique rows (``_COUNT_COLUMNS``), and ``inv`` / ``inv_m`` int32
+  indices gather back out (grid point → count row → mapping row).
+* All networks share ONE concatenated, bucket-padded layer axis;
+  ``segments`` is the static tuple of per-network (start, stop) slices on
+  it (the segment ids of the per-network reduction), so energy/latency —
+  linear in the 14 count terms of :func:`_count_terms` (eq. (1) unrolled)
+  — reduce to ``[n_unique, n_networks]`` partial sums before any
+  per-config coefficient is applied.
+
+Three interchangeable backends evaluate the heavy stage (selected by
+``backend=`` on the public entry points, auto-fallback order
+pallas → jax → numpy): the jitted jax kernel, the fused Pallas
+count-terms kernel (:mod:`repro.kernels.count_terms`), and the numpy
+reference.
 """
 
 from __future__ import annotations
@@ -530,10 +555,25 @@ def _gather_combine_body(xp, S, inv, coefs):
     return _combine_reduced(xp, tuple(gathered), coefs)
 
 
-def _grid_kernel_body(xp, segments, cfg_m, cfg_u, lay, inv_m, inv, coefs):
-    """Shared numpy/jax kernel: mapping on the mapping-unique rows, counts
-    on the count-unique rows, segment-reduce, then coefficient combine."""
-    S = _term_sums_body(xp, segments, cfg_m, cfg_u, lay, inv_m)
+def _pallas_term_sums(segments, cfg_u, lay):
+    """Fused Pallas twin of :func:`_term_sums_body`: mapping + 14 terms +
+    segment reduction in one pass over the [unique × layers] tiles (see
+    ``repro/kernels/count_terms``).  Runs on the count-unique rows only —
+    the mapping-level dedup is folded into the tile program."""
+    from repro.kernels.count_terms import count_term_sums
+    return count_term_sums(cfg_u, lay, segments)
+
+
+def _grid_kernel_body(xp, segments, cfg_m, cfg_u, lay, inv_m, inv, coefs,
+                      backend: str = "jax"):
+    """Shared numpy/jax/pallas kernel: mapping on the mapping-unique rows,
+    counts on the count-unique rows, segment-reduce, then coefficient
+    combine.  ``backend="pallas"`` swaps the heavy stage for the fused
+    count-terms kernel (same operands, same [n_u, n_net] partial sums)."""
+    if backend == "pallas":
+        S = _pallas_term_sums(segments, cfg_u, lay)
+    else:
+        S = _term_sums_body(xp, segments, cfg_m, cfg_u, lay, inv_m)
     return _gather_combine_body(xp, S, inv, coefs)
 
 
@@ -542,58 +582,57 @@ def _np_grid_kernel(segments, cfg_m, cfg_u, lay, inv_m, inv, coefs):
                              coefs)
 
 
-_jitted_grid_kernel = None          # built lazily on first jax dispatch
+_jitted_grid_kernels: Dict[str, Any] = {}   # built lazily per backend
 
 
-def _jax_grid_kernel():
-    global _jitted_grid_kernel
-    if _jitted_grid_kernel is None:
+def _jax_grid_kernel(backend: str = "jax"):
+    if backend not in _jitted_grid_kernels:
         import jax
         import jax.numpy as jnp
 
         def kernel(segments, cfg_m, cfg_u, lay, inv_m, inv, coefs):
             _JIT_STATS["traces"] += 1        # runs only while tracing
             return _grid_kernel_body(jnp, segments, cfg_m, cfg_u, lay,
-                                     inv_m, inv, coefs)
+                                     inv_m, inv, coefs, backend=backend)
 
-        _jitted_grid_kernel = jax.jit(kernel, static_argnums=0)
-    return _jitted_grid_kernel
+        _jitted_grid_kernels[backend] = jax.jit(kernel, static_argnums=0)
+    return _jitted_grid_kernels[backend]
 
 
 #: Indices in the `_count_terms` tuple that do not depend on the config
 #: (shape [1, L]): pure-MAC and pooling op counts.
 _CFG_INDEP_TERMS = (6, 7)
 
-_jitted_sharded_kernel = None
+_jitted_sharded_kernels: Dict[str, Any] = {}
 _sharded_kernel_ndev = 0
 
 
-def _jax_sharded_kernel():
+def _jax_sharded_kernel(backend: str = "jax"):
     """Sharded twin of :func:`_jax_grid_kernel`, built on ``shard_map``:
     the count-unique config rows are split along a 1-D device mesh, each
     device runs the heavy (rows × layers) stage on its slice, and the tiny
     [n_u, n_net] partial sums are all-gathered before the replicated
     gather/combine.  Explicit specs — GSPMD's auto-partitioning of the
     same program chooses badly on CPU meshes."""
-    global _jitted_sharded_kernel, _sharded_kernel_ndev
+    global _jitted_sharded_kernels, _sharded_kernel_ndev
     import jax
 
     mesh = _cfg_mesh()
-    if (_jitted_sharded_kernel is not None
-            and _sharded_kernel_ndev == mesh.devices.size):
-        return _jitted_sharded_kernel
+    if _sharded_kernel_ndev != mesh.devices.size:
+        _jitted_sharded_kernels = {}         # device count changed: rebuild
+        _sharded_kernel_ndev = mesh.devices.size
+    if backend not in _jitted_sharded_kernels:
+        def kernel(segments, cfg_m, cfg_u, lay, inv_m, inv, coefs):
+            _JIT_STATS["traces"] += 1        # runs only while tracing
+            return _sharded_grid_body(segments, cfg_m, cfg_u, lay, inv_m,
+                                      inv, coefs, backend=backend)
 
-    def kernel(segments, cfg_m, cfg_u, lay, inv_m, inv, coefs):
-        _JIT_STATS["traces"] += 1        # runs only while tracing
-        return _sharded_grid_body(segments, cfg_m, cfg_u, lay, inv_m,
-                                  inv, coefs)
-
-    _jitted_sharded_kernel = jax.jit(kernel, static_argnums=0)
-    _sharded_kernel_ndev = mesh.devices.size
-    return _jitted_sharded_kernel
+        _jitted_sharded_kernels[backend] = jax.jit(kernel, static_argnums=0)
+    return _jitted_sharded_kernels[backend]
 
 
-def _sharded_grid_body(segments, cfg_m, cfg_u, lay, inv_m, inv, coefs):
+def _sharded_grid_body(segments, cfg_m, cfg_u, lay, inv_m, inv, coefs,
+                       backend: str = "jax"):
     """Traced body of the sharded kernel (shared with the stream step)."""
     import jax.numpy as jnp
     from jax import lax
@@ -604,6 +643,12 @@ def _sharded_grid_body(segments, cfg_m, cfg_u, lay, inv_m, inv, coefs):
     row2, row1, rep = P("cfg", None), P("cfg"), P()
 
     def local(cfg_m_, cfg_u_, lay_, inv_m_):
+        if backend == "pallas":
+            # the fused kernel emits every term per count-unique row (the
+            # config-independent ones broadcast), so all 14 gather
+            S = _pallas_term_sums(segments, cfg_u_, lay_)
+            return tuple(lax.all_gather(s, "cfg", axis=0, tiled=True)
+                         for s in S)
         S = _term_sums_body(jnp, segments, cfg_m_, cfg_u_, lay_, inv_m_)
         return tuple(
             s if i in _CFG_INDEP_TERMS
@@ -625,6 +670,55 @@ def jax_available() -> bool:
         return True
     except Exception:                                  # pragma: no cover
         return False
+
+
+def pallas_available() -> bool:
+    """Whether the fused count-terms Pallas kernel can run (interpret
+    mode, which works on any jax backend — a native TPU/GPU lowering is
+    opt-in, see ``repro.kernels.count_terms.count_term_sums``)."""
+    if not jax_available():
+        return False                                   # pragma: no cover
+    try:
+        from jax.experimental import pallas            # noqa: F401
+        return True
+    except Exception:                                  # pragma: no cover
+        return False
+
+
+#: Selectable heavy-stage backends, in auto-fallback order.
+BACKENDS = ("pallas", "jax", "numpy")
+
+_LAST_BACKEND: str | None = None
+
+
+def last_backend() -> str | None:
+    """Backend the most recent engine dispatch actually ran on
+    (``"pallas" | "jax" | "numpy"``), after auto-fallback — ``None``
+    before the first call.  Lets callers report truthfully what executed
+    (see ``examples/dse_hetero.py``)."""
+    return _LAST_BACKEND
+
+
+def resolve_backend(backend: str | None = None,
+                    use_jax: bool | None = None) -> str:
+    """Resolve the requested backend with auto-fallback.
+
+    Explicit ``backend`` wins over the legacy ``use_jax`` tri-state; an
+    unavailable choice degrades (pallas → jax → numpy) instead of
+    raising, so ``backend="pallas"`` is safe on hosts without Pallas."""
+    if backend is None:
+        if use_jax is None:
+            backend = "jax" if jax_available() else "numpy"
+        else:
+            backend = "jax" if use_jax else "numpy"
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, "
+                         f"got {backend!r}")
+    if backend == "pallas" and not pallas_available():
+        backend = "jax"
+    if backend == "jax" and not jax_available():
+        backend = "numpy"
+    return backend
 
 
 # ---------------------------------------------------------------------------
@@ -710,14 +804,22 @@ def _pad_rows(arr: np.ndarray, n_to: int) -> np.ndarray:
 def _prepare_fields(fields: Dict[str, np.ndarray],
                     u_bucket: int | None = None,
                     m_bucket: int | None = None,
-                    n_dev: int = 1):
+                    n_dev: int = 1,
+                    backend: str = "jax"):
     """Grid columns → two-level-deduped kernel inputs, with the unique
     axes optionally padded to bucket multiples (and to a device-count
-    multiple so the shard along the mesh is even)."""
+    multiple so the shard along the mesh is even).  The fused Pallas
+    backend recomputes the mapping per count-unique row inside the tile
+    program, so its mapping-level operands are never read — feed
+    stable-shape placeholders instead of running the dedup."""
     cfgs = _cfg_struct_from_grid(np, fields)
     coefs = _coef_struct(cfgs)
     cfg_u, inv = _dedup_count_rows(cfgs)            # counts level
-    cfg_m, inv_m = _dedup_rows(cfg_u, _MAPPING_COLUMNS)   # mapping level
+    if backend == "pallas":
+        cfg_m = {k: cfg_u[k][:1].copy() for k in _MAPPING_COLUMNS}
+        inv_m = np.zeros(next(iter(cfg_u.values())).shape[0], np.int32)
+    else:
+        cfg_m, inv_m = _dedup_rows(cfg_u, _MAPPING_COLUMNS)  # mapping lvl
     n_u = inv_m.shape[0]
     if u_bucket is not None or n_dev > 1:
         tgt = _bucketed(n_u, u_bucket) if u_bucket else n_u
@@ -735,13 +837,14 @@ def _prepare_fields(fields: Dict[str, np.ndarray],
     return cfg_m, cfg_u, inv_m, inv, coefs
 
 
-def _eval_fields(fields, lay, segments, use_jax: bool, shard: bool,
+def _eval_fields(fields, lay, segments, backend: str, shard: bool,
                  u_bucket: int | None = None,
                  m_bucket: int | None = None):
     """Evaluate one batch of grid columns → ([n, n_net], [n, n_net])."""
+    use_jax = backend != "numpy"
     n_dev = host_device_count() if (shard and use_jax) else 1
     cfg_m, cfg_u, inv_m, inv, coefs = _prepare_fields(
-        fields, u_bucket, m_bucket, n_dev)
+        fields, u_bucket, m_bucket, n_dev, backend)
     if not use_jax:
         e, t = _np_grid_kernel(segments, cfg_m, cfg_u, lay, inv_m, inv,
                                coefs)
@@ -751,29 +854,29 @@ def _eval_fields(fields, lay, segments, use_jax: bool, shard: bool,
         args = (cfg_m, cfg_u, lay, inv_m, inv, coefs)
         if n_dev > 1:
             args = _device_put_sharded(*args)
-            kern = _jax_sharded_kernel()
+            kern = _jax_sharded_kernel(backend)
         else:
-            kern = _jax_grid_kernel()
+            kern = _jax_grid_kernel(backend)
         _JIT_STATS["calls"] += 1
         e, t = kern(segments, *args)
         return np.asarray(e), np.asarray(t)
 
 
-def _dispatch_chunk(fc, lay, segments, device=None):
+def _dispatch_chunk(fc, lay, segments, device=None, backend: str = "jax"):
     """Async-dispatch one padded chunk on ``device`` (jax path): returns
     uncollected device arrays so the host can prepare the next chunk — and
     other devices can compute — while this one runs."""
     import jax
     cfg_m, cfg_u, inv_m, inv, coefs = _prepare_fields(
-        fc, _UNIQUE_BUCKET, _MAPPING_BUCKET)
+        fc, _UNIQUE_BUCKET, _MAPPING_BUCKET, backend=backend)
     args = (cfg_m, cfg_u, lay, inv_m, inv, coefs)
     if device is not None:
         args = jax.device_put(args, device)
     _JIT_STATS["calls"] += 1
-    return _jax_grid_kernel()(segments, *args)
+    return _jax_grid_kernel(backend)(segments, *args)
 
 
-def _eval_chunked(fields, lay, segments, use_jax: bool, shard: bool,
+def _eval_chunked(fields, lay, segments, backend: str, shard: bool,
                   chunk_size: int, n: int, n_net: int):
     """Chunked evaluation of the full grid → dense [n, n_net] outputs.
 
@@ -792,9 +895,9 @@ def _eval_chunked(fields, lay, segments, use_jax: bool, shard: bool,
                   for k, v in fields.items()}
             yield ci, start, stop, fc
 
-    if not use_jax:
+    if backend == "numpy":
         for _, start, stop, fc in chunks():
-            ec, tc = _eval_fields(fc, lay, segments, False, False,
+            ec, tc = _eval_fields(fc, lay, segments, "numpy", False,
                                   _UNIQUE_BUCKET, _MAPPING_BUCKET)
             e[start:stop] = ec[:stop - start]
             t[start:stop] = tc[:stop - start]
@@ -814,7 +917,7 @@ def _eval_chunked(fields, lay, segments, use_jax: bool, shard: bool,
     with enable_x64():
         for ci, start, stop, fc in chunks():
             dev = devs[ci % n_dev] if n_dev > 1 else None
-            ec, tc = _dispatch_chunk(fc, lay, segments, dev)
+            ec, tc = _dispatch_chunk(fc, lay, segments, dev, backend)
             pending.append((start, stop, ec, tc))
             if len(pending) > 2 * n_dev:
                 drain(pending.pop(0))
@@ -827,6 +930,7 @@ def evaluate_networks(grid: ConfigGrid,
                       networks: Mapping[str, Sequence[Layer]],
                       use_jax: bool | None = None,
                       *,
+                      backend: str | None = None,
                       shard: bool = False,
                       chunk_size: int | None = None,
                       ) -> Tuple[np.ndarray, np.ndarray]:
@@ -834,24 +938,29 @@ def evaluate_networks(grid: ConfigGrid,
 
     Returns ``(energy, latency)`` float64 arrays of shape
     ``[grid.n, len(networks)]``, columns ordered like ``networks``.
-    ``use_jax=None`` auto-selects: the jitted kernel when jax imports,
-    the numpy reference otherwise.  ``shard=True`` splits the deduped
-    config axis across all host devices (see :func:`request_host_devices`);
-    ``chunk_size`` evaluates the grid in fixed-shape chunks so the heavy
-    (unique-rows × layers) intermediates stay bounded — mega-scale spaces
-    would otherwise materialise multi-GB tiles.
+    ``backend`` selects the heavy-stage kernel — ``"pallas"`` (fused
+    count-terms kernel), ``"jax"`` (jitted term chains), ``"numpy"``
+    (reference) — with auto-fallback when the choice is unavailable; the
+    legacy ``use_jax`` tri-state maps onto it (None auto-selects).
+    ``shard=True`` splits the deduped config axis across all host devices
+    (see :func:`request_host_devices`); ``chunk_size`` evaluates the grid
+    in fixed-shape chunks so the heavy (unique-rows × layers)
+    intermediates stay bounded — mega-scale spaces would otherwise
+    materialise multi-GB tiles.
     """
-    use_jax = jax_available() if use_jax is None else use_jax
+    global _LAST_BACKEND
+    backend = resolve_backend(backend, use_jax)
+    _LAST_BACKEND = backend
     lay, segments = _stack_networks(networks)
     lay = {k: v[None, :] for k, v in lay.items()}
     fields = grid.fields if isinstance(grid, ConfigGrid) else dict(grid)
     n = int(next(iter(fields.values())).shape[0])
 
     if chunk_size is not None and n > chunk_size:
-        return _eval_chunked(fields, lay, segments, use_jax, shard,
+        return _eval_chunked(fields, lay, segments, backend, shard,
                              chunk_size, n, len(networks))
 
-    return _eval_fields(fields, lay, segments, use_jax, shard)
+    return _eval_fields(fields, lay, segments, backend, shard)
 
 
 # ---------------------------------------------------------------------------
@@ -955,6 +1064,7 @@ def stream_networks(grid: ConfigGrid,
                     *,
                     chunk_size: int = 4096,
                     use_jax: bool | None = None,
+                    backend: str | None = None,
                     shard: bool = False,
                     bound: float = 0.05,
                     metric: str = "edp",
@@ -965,9 +1075,13 @@ def stream_networks(grid: ConfigGrid,
     evaluated (optionally sharded across host devices) and folded into
     per-network running minima, top-k cells, and ≤``bound`` boundary
     candidate sets.  Equivalent to reducing :func:`evaluate_networks`'s
-    output, at bounded memory.
+    output, at bounded memory.  ``backend`` routes the per-chunk kernel
+    like :func:`evaluate_networks` (pallas / jax / numpy, auto-fallback).
     """
-    use_jax = jax_available() if use_jax is None else use_jax
+    global _LAST_BACKEND
+    backend = resolve_backend(backend, use_jax)
+    _LAST_BACKEND = backend
+    use_jax = backend != "numpy"
     names = tuple(networks)
     n_net = len(names)
     lay, segments = _stack_networks(networks)
@@ -1042,7 +1156,7 @@ def stream_networks(grid: ConfigGrid,
 
             for ci, start, stop, fc in chunks():
                 dev = devs[ci % n_dev] if n_dev > 1 else None
-                e_d, t_d = _dispatch_chunk(fc, lay, segments, dev)
+                e_d, t_d = _dispatch_chunk(fc, lay, segments, dev, backend)
                 pending.append((start, stop, e_d, t_d))
                 if len(pending) > 2 * n_dev:
                     reduce_one(pending.pop(0))
@@ -1074,14 +1188,17 @@ def stream_networks(grid: ConfigGrid,
 
 
 def simulate_grid(configs: Sequence[AcceleratorConfig] | ConfigGrid,
-                  layers: Sequence[Layer], use_jax: bool = False):
+                  layers: Sequence[Layer], use_jax: bool = False,
+                  backend: str | None = None):
     """Vectorised sweep: returns (energy, latency) arrays of shape [n_cfg].
 
     ``use_jax=True`` evaluates the whole design space inside the batched,
     module-level jit-cached engine under 64-bit mode (counts exceed
     float32's integer range); repeated same-shape sweeps reuse the compile.
+    ``backend`` overrides the kernel choice (pallas / jax / numpy).
     """
     grid = (configs if isinstance(configs, ConfigGrid)
             else ConfigGrid.from_configs(configs))
-    e, t = evaluate_networks(grid, {"net": layers}, use_jax=use_jax)
+    e, t = evaluate_networks(grid, {"net": layers}, use_jax=use_jax,
+                             backend=backend)
     return e[:, 0], t[:, 0]

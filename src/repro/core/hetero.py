@@ -13,6 +13,16 @@ Procedure, as the paper describes it:
 
 ``cross_penalty`` reproduces Table 6: the increase in energy, delay, and EDP
 when a network runs on a non-corresponding core type.
+
+Array-shape conventions: dense chip design (``design_chip``) works on the
+``[n_array, n_psum, n_ifmap]`` metric cubes of :class:`SweepResult`, with
+candidate sets as ``(array_idx, psum_idx, ifmap_idx)`` cells; the
+streaming variant (``design_chip_streaming``) works on FLAT grid indices
+into a :class:`repro.core.accelerator.ConfigGrid` (the boundary sets a
+``StreamResult`` carries — the full ``[n_cfg, n_net]`` matrices are never
+materialised), and ``StreamChip.core_cells`` converts back to cells.
+Both share ``_greedy_cover`` over per-network candidate-index sets, so
+they provably pick identical core types.
 """
 
 from __future__ import annotations

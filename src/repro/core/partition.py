@@ -22,6 +22,17 @@ search on the bottleneck latency T, with a ``searchsorted``-style greedy
 feasibility check over prefix sums, batched over every (network, k) pair.
 Segment sums are evaluated as prefix differences, the same arithmetic
 ``dp_partition`` uses, so the two agree exactly.
+
+Array-shape conventions: per-network layer latencies arrive as 1-D
+``[n_layers]`` vectors (``NetworkReport.layer_latencies`` from
+:mod:`repro.core.energymodel`, in ns); the batch solver pads them to one
+``[n_networks, n_pad]`` matrix (bucketed like the DSE engine's layer
+axis, so repeated zoo-sized calls share one trace) with a validity mask,
+and broadcasts the bisection over a ``[n_networks, n_k]`` problem grid.
+A :class:`Partition` stores ``boundaries`` as the k+1 split indices into
+the layer axis (``boundaries[0] == 0``, contiguous, monotone) and
+``loads`` as the per-core latency sums — ``pipeline_latency =
+max(loads)`` and eq. (6)'s ``speedup = sum / max``.
 """
 
 from __future__ import annotations

@@ -1,0 +1,104 @@
+"""Fused Pallas count-terms kernel: one pass over the [unique × layers] tile.
+
+The DSE engine's heavy stage (``energymodel._term_sums_body``) evaluates the
+14 per-layer access-count terms the energy/latency model is linear in, then
+collapses the layer axis with per-network segment sums.  The stock jax path
+materialises each [n_unique, n_layers] term before its ``sum`` chain — 14
+full tiles in flight.  This kernel fuses both steps: a grid over
+(unique-row blocks × layer blocks) loads one [block_u, block_l] tile's
+inputs into VMEM, computes the RS mapping + all 14 terms in registers, and
+folds the segment reduction into the same pass as a matmul against a
+one-hot [block_l, n_net] segment matrix, accumulating the
+``[14, n_unique, n_networks]`` partial-sum stack directly — no per-term
+[unique, layers] intermediate ever reaches HBM.
+
+The arithmetic is exactly ``energymodel._count_terms`` (the kernel calls
+it with ``xp=jnp``), so parity with the jax/numpy engines is machine-eps;
+only the reduction order differs (one-hot dot vs slice sums), both f64.
+
+The mapping is recomputed per count-unique row instead of being gathered
+from the mapping-unique rows (the two-level dedup of the jax path): a
+cross-block gather is awkward inside a Pallas grid, and the mapping is
+cheap elementwise integer math — recomputing it keeps the kernel a pure
+tile program.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import energymodel
+from repro.core.energymodel import _COUNT_COLUMNS as CFG_COLUMNS
+
+#: Row order of the stacked layer-struct operand (matches
+#: ``rs_mapping.layer_struct`` keys).
+LAYER_FIELDS = ("c_ch", "m", "ky", "kx", "stride", "ix", "iy", "oy", "ox",
+                "macs", "weight_words", "ifmap_words", "ofmap_words",
+                "is_acc", "is_dw", "is_pool")
+
+#: Number of count terms (see ``energymodel._count_terms``).
+N_TERMS = 14
+
+
+def _count_terms_kernel(cfg_ref, lay_ref, seg_ref, o_ref):
+    """One (unique-block, layer-block) grid step.
+
+    cfg_ref: [len(CFG_COLUMNS), block_u]   count-unique config columns
+    lay_ref: [len(LAYER_FIELDS), block_l]  layer-struct columns
+    seg_ref: [block_l, n_net]              one-hot segment matrix slice
+    o_ref:   [N_TERMS, block_u, n_net]     accumulated partial sums
+    """
+    cfg = {k: cfg_ref[i, :][:, None] for i, k in enumerate(CFG_COLUMNS)}
+    lay = {k: lay_ref[i, :][None, :] for i, k in enumerate(LAYER_FIELDS)}
+
+    terms = energymodel._count_terms(jnp, cfg, lay)
+    seg = seg_ref[...]
+    block_u = cfg[CFG_COLUMNS[0]].shape[0]
+    block_l = seg.shape[0]
+    part = jnp.stack([
+        jnp.dot(jnp.broadcast_to(t, (block_u, block_l)), seg)
+        for t in terms])                       # [N_TERMS, block_u, n_net]
+
+    l_step = pl.program_id(1)
+
+    @pl.when(l_step == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(l_step != 0)
+    def _acc():
+        o_ref[...] += part
+
+
+def count_terms_kernel(cfg: jax.Array, lay: jax.Array, seg: jax.Array, *,
+                       block_u: int = 128, block_l: int = 128,
+                       interpret: bool = True) -> jax.Array:
+    """cfg: [n_cfg_cols, n_u]; lay: [n_lay_cols, L]; seg: [L, n_net].
+
+    ``n_u`` must be a multiple of ``block_u`` and ``L`` of ``block_l``
+    (the ops wrapper pads).  Returns [N_TERMS, n_u, n_net] float64 partial
+    sums; the layer grid axis is innermost so each output block is
+    accumulated in place before the grid moves to the next row block.
+    """
+    n_cols, n_u = cfg.shape
+    n_lay, l_tot = lay.shape
+    n_net = seg.shape[1]
+    assert n_u % block_u == 0, (n_u, block_u)
+    assert l_tot % block_l == 0, (l_tot, block_l)
+    return pl.pallas_call(
+        _count_terms_kernel,
+        grid=(n_u // block_u, l_tot // block_l),
+        in_specs=[
+            pl.BlockSpec((n_cols, block_u), lambda i, l: (0, i)),
+            pl.BlockSpec((n_lay, block_l), lambda i, l: (0, l)),
+            pl.BlockSpec((block_l, n_net), lambda i, l: (l, 0)),
+        ],
+        out_specs=pl.BlockSpec((N_TERMS, block_u, n_net),
+                               lambda i, l: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N_TERMS, n_u, n_net), cfg.dtype),
+        interpret=interpret,
+    )(cfg, lay, seg)

@@ -1,0 +1,74 @@
+"""Padding/stacking wrapper around the fused count-terms Pallas kernel.
+
+Takes the engine's native operands — the [n_u, 1] count-unique config
+columns, the [1, L] stacked layer columns, and the static per-network
+``segments`` tuple — pads both tiled axes to block multiples, builds the
+one-hot segment matrix, and returns the tuple of 14 [n_u, n_net] partial
+sums ``energymodel._gather_combine_body`` consumes.  Traceable under
+``jax.jit`` (all shapes static at trace time).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.energymodel import _PAD_LAYER_ROW
+from .kernel import (CFG_COLUMNS, LAYER_FIELDS, N_TERMS,
+                     count_terms_kernel)
+
+
+def _segment_onehot(segments, l_pad: int) -> np.ndarray:
+    """Static one-hot [l_pad, n_net] segment matrix: rows past the last
+    segment's stop stay all-zero, so layer padding is annihilated by the
+    in-kernel reduction regardless of its term values."""
+    seg = np.zeros((l_pad, len(segments)))
+    for j, (a, b) in enumerate(segments):
+        seg[a:b, j] = 1.0
+    return seg
+
+
+def count_term_sums(cfg_u, lay, segments, *, block_u: int = 128,
+                    block_l: int = 128, interpret: bool = True):
+    """Fused mapping → 14 count terms → per-network segment reduction.
+
+    cfg_u: dict of [n_u, 1] arrays keyed by ``_COUNT_COLUMNS``;
+    lay: dict of [1, L] arrays keyed like ``rs_mapping.layer_struct``;
+    segments: static ((start, stop), ...).  Returns a 14-tuple of
+    [n_u, n_net] float64 arrays, drop-in for ``_term_sums_body``'s output
+    (config-independent terms arrive broadcast along the unique axis).
+
+    ``interpret=True`` (the default on every platform) runs the Pallas
+    interpreter, still XLA-jitted end to end.  A native lowering is NOT
+    enabled by default: the tile program is float64 (access counts exceed
+    float32's exact-integer range) with an n_net-wide last dimension,
+    both of which violate TPU/Mosaic tiling constraints as written —
+    opting in via ``interpret=False`` is for hosts where a lowering has
+    been validated.
+    """
+    cfg = jnp.concatenate(
+        [jnp.asarray(cfg_u[k]).reshape(1, -1) for k in CFG_COLUMNS], axis=0)
+    laym = jnp.concatenate(
+        [jnp.asarray(lay[k]).reshape(1, -1) for k in LAYER_FIELDS], axis=0)
+    n_u = cfg.shape[1]
+    l_tot = laym.shape[1]
+
+    bu = min(block_u, max(8, n_u))
+    pad_u = (-n_u) % bu
+    if pad_u:
+        # repeat row 0 — a benign valid config, sliced off below
+        cfg = jnp.concatenate([cfg, jnp.broadcast_to(
+            cfg[:, :1], (cfg.shape[0], pad_u))], axis=1)
+    bl = min(block_l, l_tot)
+    pad_l = (-l_tot) % bl
+    if pad_l:
+        pad_col = np.array([[_PAD_LAYER_ROW[k]] for k in LAYER_FIELDS])
+        laym = jnp.concatenate([laym, jnp.broadcast_to(
+            jnp.asarray(pad_col, laym.dtype),
+            (laym.shape[0], pad_l))], axis=1)
+    seg = jnp.asarray(_segment_onehot(segments, l_tot + pad_l), cfg.dtype)
+
+    out = count_terms_kernel(cfg, laym.astype(cfg.dtype), seg,
+                             block_u=bu, block_l=bl, interpret=interpret)
+    out = out[:, :n_u, :]
+    return tuple(out[i] for i in range(N_TERMS))

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused count-terms kernel.
+
+Mirrors ``energymodel._term_sums_body`` without the two-level dedup: the
+RS mapping runs directly on the count-unique rows and the layer axis is
+collapsed with static per-network segment slices — the exact arithmetic
+the Pallas kernel fuses, in the engine's original reduction order.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import energymodel
+
+
+def count_term_sums_ref(cfg_u, lay, segments) -> jnp.ndarray:
+    """cfg_u: dict of [n_u, 1] count columns; lay: dict of [1, L] layer
+    columns; segments: static ((start, stop), ...) per network, the last
+    stop == L.  Returns the stacked [N_TERMS, n_u, n_net] partial sums
+    (config-independent terms broadcast along the unique axis)."""
+    terms = energymodel._count_terms(jnp, cfg_u, lay)
+    n_u = cfg_u[next(iter(cfg_u))].shape[0]
+    out = []
+    for t in terms:
+        s = jnp.stack([t[..., a:b].sum(-1) for a, b in segments], axis=-1)
+        out.append(jnp.broadcast_to(s, (n_u, len(segments))))
+    return jnp.stack(out)

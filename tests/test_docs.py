@@ -1,0 +1,79 @@
+"""Docs tree health: every relative link under docs/ (and README.md)
+resolves to a real file, and every dotted ``repro.*`` / ``benchmarks.*``
+symbol or backticked repo path a doc references still exists — so the
+prose can't silently rot as the code moves."""
+
+import importlib
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = sorted((ROOT / "docs").glob("**/*.md")) + [ROOT / "README.md"]
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SYMBOL_RE = re.compile(r"`((?:repro|benchmarks)(?:\.\w+)+)(?:\(\))?`")
+_PATH_RE = re.compile(r"`([\w][\w./-]*\.(?:py|md|json|yml|txt|ini))`")
+
+
+def _doc_ids(files):
+    return [str(p.relative_to(ROOT)) for p in files]
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _docs_exist():
+    assert (ROOT / "docs" / "architecture.md").is_file()
+    assert (ROOT / "docs" / "bench_schema.md").is_file()
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=_doc_ids(DOC_FILES))
+def test_relative_links_resolve(doc):
+    dead = []
+    for m in _LINK_RE.finditer(doc.read_text()):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:                       # pure in-page anchor
+            continue
+        if not (doc.parent / path).exists():
+            dead.append(target)
+    assert not dead, f"{doc.name}: dead relative links {dead}"
+
+
+def _resolve(dotted: str) -> bool:
+    """Import the longest module prefix, then getattr the rest."""
+    parts = dotted.split(".")
+    for i in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:i]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[i:]:
+                obj = getattr(obj, attr)
+            return True
+        except AttributeError:
+            return False
+    return False
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=_doc_ids(DOC_FILES))
+def test_referenced_symbols_exist(doc):
+    missing = [s for s in sorted(set(_SYMBOL_RE.findall(doc.read_text())))
+               if not _resolve(s)]
+    assert not missing, (
+        f"{doc.name} references symbols that no longer exist: {missing}")
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=_doc_ids(DOC_FILES))
+def test_referenced_paths_exist(doc):
+    missing = []
+    for p in sorted(set(_PATH_RE.findall(doc.read_text()))):
+        if "*" in p or "<" in p:
+            continue
+        if not ((ROOT / p).exists() or (doc.parent / p).exists()):
+            missing.append(p)
+    assert not missing, (
+        f"{doc.name} references repo paths that do not exist: {missing}")

@@ -103,6 +103,13 @@ def test_sharded_multi_device_subprocess():
         e2, t2 = energymodel.evaluate_networks(grid, nets, use_jax=True,
                                                shard=True, chunk_size=128)
         np.testing.assert_allclose(e2, e0, rtol=1e-9)
+        if energymodel.pallas_available():
+            # fused-kernel shard_map path: all 14 terms all-gather
+            e3, t3 = energymodel.evaluate_networks(grid, nets,
+                                                   backend="pallas",
+                                                   shard=True)
+            np.testing.assert_allclose(e3, e0, rtol=1e-9)
+            np.testing.assert_allclose(t3, t0, rtol=1e-9)
         sr = energymodel.stream_networks(grid, nets, chunk_size=128,
                                          use_jax=True, shard=True)
         edp = e0 * t0
