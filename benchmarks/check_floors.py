@@ -1,0 +1,105 @@
+"""Assert BENCH_dse speedup floors against committed baselines.
+
+    PYTHONPATH=src python -m benchmarks.check_floors \
+        [--quick-json BENCH_dse.quick.json] [--committed BENCH_dse.json] \
+        [--floors benchmarks/floors.json]
+
+CI's fast job runs this right after ``benchmarks.run --quick``: the
+committed ``BENCH_dse.json`` trajectory file must keep meeting the
+full-run floors (so a perf-regressing PR fails the build instead of the
+regression merely drifting in the JSON), and the freshly regenerated
+``BENCH_dse.quick.json`` must meet the conservative quick floors and
+every parity ceiling.  Floors live in ``benchmarks/floors.json``
+(documented in docs/bench_schema.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def _level(payload: dict, name: str) -> dict | None:
+    for lv in payload.get("levels", []):
+        if lv.get("name") == name:
+            return lv
+    return None
+
+
+def check_payload(payload: dict, floors: dict, label: str) -> list:
+    """→ list of violation strings for one payload vs one floor set."""
+    problems = []
+    for name, want in floors.get("levels", {}).items():
+        lv = _level(payload, name)
+        if lv is None:
+            problems.append(f"{label}: level {name!r} missing")
+            continue
+        for key, floor in want.items():
+            got = lv.get(key)
+            if got is None or got < floor:
+                problems.append(
+                    f"{label}: level {name} {key}={got} < floor {floor}")
+    cod_floors = floors.get("codesign", {})
+    cod = payload.get("codesign") or {}
+    for key, floor in cod_floors.items():
+        got = cod.get(key)
+        if got is None or got < floor:
+            problems.append(
+                f"{label}: codesign {key}={got} < floor {floor}")
+    return problems
+
+
+def check_parity(payload: dict, ceiling: float, label: str) -> list:
+    """Every ``max_rel_err_*`` / ``max_rel_diff_*`` in the payload must
+    sit under the ceiling (None = backend unavailable, skipped)."""
+    problems = []
+
+    def scan(d: dict, where: str):
+        for k, v in d.items():
+            if (k.startswith("max_rel_err") or k.startswith("max_rel_diff")) \
+                    and v is not None and v > ceiling:
+                problems.append(f"{label}: {where}.{k}={v:.2e} > {ceiling}")
+
+    for lv in payload.get("levels", []):
+        scan(lv, f"level {lv.get('name')}")
+    scan(payload.get("partition") or {}, "partition")
+    scan(payload.get("codesign") or {}, "codesign")
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick-json", default="BENCH_dse.quick.json")
+    ap.add_argument("--committed", default="BENCH_dse.json")
+    ap.add_argument("--floors", default="benchmarks/floors.json")
+    args = ap.parse_args()
+
+    floors = json.loads(Path(args.floors).read_text())
+    ceiling = float(floors.get("parity_ceiling", 1e-6))
+    problems = []
+
+    committed = json.loads(Path(args.committed).read_text())
+    problems += check_payload(committed, floors["committed"], "committed")
+    problems += check_parity(committed, ceiling, "committed")
+
+    quick_path = Path(args.quick_json)
+    if quick_path.exists():
+        quick = json.loads(quick_path.read_text())
+        problems += check_payload(quick, floors["quick"], "quick")
+        problems += check_parity(quick, ceiling, "quick")
+    else:
+        problems.append(f"quick payload {quick_path} not found "
+                        "(run `python -m benchmarks.run --quick` first)")
+
+    if problems:
+        for p in problems:
+            print(f"FLOOR CHECK FAILED: {p}", file=sys.stderr)
+        raise SystemExit(1)
+    print("floor checks passed "
+          f"(committed={args.committed}, quick={args.quick_json})")
+
+
+if __name__ == "__main__":
+    main()

@@ -49,6 +49,24 @@ def main():
     print(f"\nstreaming design_chip reproduces the cover: {same} "
           f"(boundary sets only, no [n_cfg, n_net] matrices)")
 
+    # --- per-layer co-design: which chip AND which layer→core schedule ---
+    # one per_layer=True engine call + one batched hetero-schedule solve
+    # evaluates every candidate (type multiset × core counts) chip
+    print("\n=== per-layer chip + schedule co-design (§IV.A × §IV.B) ===")
+    cd = hetero.co_design(grid, nets, m_cores=4, max_types=3, pool_size=6)
+    print(f"co-designed chip ({cd.n_chips} candidates searched): "
+          f"{cd.summary(grid)}")
+    print(f"mean normalized EDP {cd.score:.3f} vs best homogeneous "
+          f"{cd.homogeneous_score:.3f} "
+          f"({(1 - cd.score / cd.homogeneous_score) * 100:.1f}% better)")
+    for net in ("ResNet50", "MobileNetV2", "VGG16"):
+        s = cd.schedules[net]
+        moves = sum(1 for a, b in zip(s.layer_core, s.layer_core[1:])
+                    if a != b)
+        print(f"  {net}: {s.n_layers} layers over {s.n_cores} cores "
+              f"({len(set(s.layer_type))} type(s)), pipeline speedup "
+              f"{s.speedup:.2f}x, {moves} core hand-offs")
+
     # --- Algorithm II on each group's core type ---------------------------
     # one batch_partition call solves every (network, k) split at once
     print("\n=== model parallelism on homogeneous cores (§IV.B) ===")

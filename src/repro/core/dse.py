@@ -95,6 +95,24 @@ def sweep_networks(networks: Mapping[str, Sequence[Layer]],
     return out
 
 
+def layer_metrics(networks: Mapping[str, Sequence[Layer]],
+                  grid: ConfigGrid | None = None,
+                  **kwargs) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-layer energy/latency tensors over a grid (default: the paper's
+    150-point space): ``evaluate_networks(..., per_layer=True)`` →
+    ``[n_cfg, n_net, n_layer]`` pairs, zero-padded past each network's
+    length (:func:`energymodel.network_layer_counts`).  These are the
+    operands of the heterogeneous co-design stack
+    (:func:`repro.core.hetero.co_design` /
+    :func:`repro.core.partition.batch_schedule_hetero`); keyword
+    arguments forward to :func:`energymodel.evaluate_networks`
+    (``backend``, ``shard``, ``chunk_size``, ``use_jax``)."""
+    if grid is None:
+        grid = _paper_grid(ARRAY_SIZES, GB_SIZES_KB, GB_SIZES_KB, None)
+    return energymodel.evaluate_networks(grid, networks, per_layer=True,
+                                         **kwargs)
+
+
 def stream_grid(networks: Mapping[str, Sequence[Layer]],
                 grid: ConfigGrid,
                 **kwargs) -> "energymodel.StreamResult":

@@ -41,17 +41,28 @@ Array-shape conventions of the batched engine (see also
   linear in the 14 count terms of :func:`_count_terms` (eq. (1) unrolled)
   — reduce to ``[n_unique, n_networks]`` partial sums before any
   per-config coefficient is applied.
+* ``per_layer=True`` keeps the layer axis instead of segment-summing:
+  the same heavy stage emits the raw per-layer terms, the coefficient
+  combine broadcasts over the concatenated axis, and the result is
+  re-split into a padded ``[n_cfg, n_networks, n_layer]`` tensor
+  (``n_layer`` = longest network; shorter networks zero-padded).  This
+  is the input of the heterogeneous layer→core co-design solver
+  (:func:`repro.core.partition.batch_schedule_hetero`).
 
 Three interchangeable backends evaluate the heavy stage (selected by
 ``backend=`` on the public entry points, auto-fallback order
 pallas → jax → numpy): the jitted jax kernel, the fused Pallas
 count-terms kernel (:mod:`repro.kernels.count_terms`), and the numpy
-reference.
+reference.  An unavailable choice degrades silently at the result level
+but emits ONE :class:`RuntimeWarning` per process per degradation edge
+(see :func:`resolve_backend`); :func:`last_backend` always reports what
+actually executed.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Dict, List, Mapping, Sequence, Tuple
 
 import numpy as np
@@ -402,17 +413,21 @@ def _bucketed(n: int, bucket: int) -> int:
 
 
 def _stack_networks(networks: Mapping[str, Sequence[Layer]],
-                    bucket: int = _LAYER_BUCKET):
+                    bucket: int = _LAYER_BUCKET,
+                    absorb_pad: bool = True):
     """Concatenate all networks' compute layers along one padded axis.
 
     Returns ``(lay, segments)``: ``lay`` values have shape [L_pad] and
     ``segments`` is a static tuple of per-network (start, stop) on that
-    axis.  The LAST segment extends to L_pad — pad layers contribute
-    exactly zero (see ``_PAD_LAYER_ROW``), and absorbing them into the
-    last segment makes the static jit key depend only on the bucketed
-    length: every single-network sweep of a ≤ ``bucket``-layer network
-    shares the one ``((0, bucket),)`` trace, rather than retracing per
-    layer count.
+    axis.  With ``absorb_pad`` the LAST segment extends to L_pad — pad
+    layers contribute exactly zero (see ``_PAD_LAYER_ROW``), and
+    absorbing them into the last segment makes the static jit key depend
+    only on the bucketed length: every single-network sweep of a
+    ≤ ``bucket``-layer network shares the one ``((0, bucket),)`` trace,
+    rather than retracing per layer count.  The per-layer path passes
+    ``absorb_pad=False`` — it needs the TRUE per-network lengths to size
+    the padded ``n_layer`` output axis (at the cost of one extra trace
+    per distinct length multiset).
     """
     if not networks:
         raise ValueError("evaluate_networks needs at least one network")
@@ -433,9 +448,18 @@ def _stack_networks(networks: Mapping[str, Sequence[Layer]],
         col[:total] = np.concatenate([s[k] for s in structs])
         lay[k] = col
     offs = np.concatenate([[0], np.cumsum(seg_lens)]).astype(int)
-    offs[-1] = l_pad                        # zero-energy pad → last segment
+    if absorb_pad:
+        offs[-1] = l_pad                    # zero-energy pad → last segment
     segments = tuple((int(a), int(b)) for a, b in zip(offs[:-1], offs[1:]))
     return lay, segments
+
+
+def network_layer_counts(networks: Mapping[str, Sequence[Layer]]
+                         ) -> np.ndarray:
+    """Per-network compute-layer counts, ordered like ``networks`` — the
+    valid lengths of the per-layer path's padded ``n_layer`` axis."""
+    return np.array([sum(1 for l in layers if l.kind != "input")
+                     for layers in networks.values()], dtype=np.int64)
 
 
 #: Config columns the RS mapping / access counts depend on.  Everything
@@ -564,12 +588,65 @@ def _pallas_term_sums(segments, cfg_u, lay):
     return count_term_sums(cfg_u, lay, segments)
 
 
+# ---------------------------------------------------------------------------
+# Per-layer path: the SAME heavy stage without the early segment reduction.
+# The 14 terms stay [n_u, L] (the one-hot matmul of the fused kernel is
+# skipped), the coefficient combine broadcasts over the concatenated layer
+# axis, and the result is re-split per network onto a padded n_layer axis.
+# ---------------------------------------------------------------------------
+
+
+def _term_layers_body(xp, cfg_m, cfg_u, lay, inv_m):
+    """Per-layer twin of :func:`_term_sums_body`: the raw 14 count terms,
+    each [n_u, L] ([1, L] for the config-independent two) — no segment
+    reduction."""
+    mp_m = _mapping(xp, cfg_m, lay)
+    mp = {k: mp_m[k][inv_m] for k in _MAPPING_KEYS}
+    return _count_terms(xp, cfg_u, lay, mp)
+
+
+def _pallas_term_layers(cfg_u, lay):
+    """Fused Pallas per-layer heavy stage: same tile program with the
+    one-hot segment matmul skipped — emits the [14, n_u, L] per-layer
+    partials directly (see ``repro.kernels.count_terms.count_term_layers``)."""
+    from repro.kernels.count_terms import count_term_layers
+    return count_term_layers(cfg_u, lay)
+
+
+def _layer_axis_len(segments) -> int:
+    """Padded n_layer of the per-layer output: the longest segment."""
+    return max(b - a for a, b in segments)
+
+
+def _split_layers(xp, arr, segments):
+    """[n, L_concat] → [n, n_net, n_layer]: slice each network's segment
+    off the concatenated axis and zero-pad to the longest one (pad rows
+    of shorter networks are exactly 0 — see ``_PAD_LAYER_ROW``)."""
+    n_layer = _layer_axis_len(segments)
+    outs = []
+    for a, b in segments:
+        seg = arr[:, a:b]
+        if b - a < n_layer:
+            seg = xp.pad(seg, ((0, 0), (0, n_layer - (b - a))))
+        outs.append(seg)
+    return xp.stack(outs, axis=1)
+
+
 def _grid_kernel_body(xp, segments, cfg_m, cfg_u, lay, inv_m, inv, coefs,
-                      backend: str = "jax"):
+                      backend: str = "jax", per_layer: bool = False):
     """Shared numpy/jax/pallas kernel: mapping on the mapping-unique rows,
     counts on the count-unique rows, segment-reduce, then coefficient
     combine.  ``backend="pallas"`` swaps the heavy stage for the fused
-    count-terms kernel (same operands, same [n_u, n_net] partial sums)."""
+    count-terms kernel (same operands, same [n_u, n_net] partial sums).
+    ``per_layer=True`` skips the segment reduction: the combine runs on
+    the [*, L] terms and the outputs are re-split to [n, n_net, n_layer]."""
+    if per_layer:
+        if backend == "pallas":
+            S = _pallas_term_layers(cfg_u, lay)
+        else:
+            S = _term_layers_body(xp, cfg_m, cfg_u, lay, inv_m)
+        e, t = _gather_combine_body(xp, S, inv, coefs)
+        return _split_layers(xp, e, segments), _split_layers(xp, t, segments)
     if backend == "pallas":
         S = _pallas_term_sums(segments, cfg_u, lay)
     else:
@@ -577,37 +654,40 @@ def _grid_kernel_body(xp, segments, cfg_m, cfg_u, lay, inv_m, inv, coefs,
     return _gather_combine_body(xp, S, inv, coefs)
 
 
-def _np_grid_kernel(segments, cfg_m, cfg_u, lay, inv_m, inv, coefs):
+def _np_grid_kernel(segments, cfg_m, cfg_u, lay, inv_m, inv, coefs,
+                    per_layer: bool = False):
     return _grid_kernel_body(np, segments, cfg_m, cfg_u, lay, inv_m, inv,
-                             coefs)
+                             coefs, per_layer=per_layer)
 
 
-_jitted_grid_kernels: Dict[str, Any] = {}   # built lazily per backend
+_jitted_grid_kernels: Dict[Tuple[str, bool], Any] = {}  # per (backend, mode)
 
 
-def _jax_grid_kernel(backend: str = "jax"):
-    if backend not in _jitted_grid_kernels:
+def _jax_grid_kernel(backend: str = "jax", per_layer: bool = False):
+    key = (backend, per_layer)
+    if key not in _jitted_grid_kernels:
         import jax
         import jax.numpy as jnp
 
         def kernel(segments, cfg_m, cfg_u, lay, inv_m, inv, coefs):
             _JIT_STATS["traces"] += 1        # runs only while tracing
             return _grid_kernel_body(jnp, segments, cfg_m, cfg_u, lay,
-                                     inv_m, inv, coefs, backend=backend)
+                                     inv_m, inv, coefs, backend=backend,
+                                     per_layer=per_layer)
 
-        _jitted_grid_kernels[backend] = jax.jit(kernel, static_argnums=0)
-    return _jitted_grid_kernels[backend]
+        _jitted_grid_kernels[key] = jax.jit(kernel, static_argnums=0)
+    return _jitted_grid_kernels[key]
 
 
 #: Indices in the `_count_terms` tuple that do not depend on the config
 #: (shape [1, L]): pure-MAC and pooling op counts.
 _CFG_INDEP_TERMS = (6, 7)
 
-_jitted_sharded_kernels: Dict[str, Any] = {}
+_jitted_sharded_kernels: Dict[Tuple[str, bool], Any] = {}
 _sharded_kernel_ndev = 0
 
 
-def _jax_sharded_kernel(backend: str = "jax"):
+def _jax_sharded_kernel(backend: str = "jax", per_layer: bool = False):
     """Sharded twin of :func:`_jax_grid_kernel`, built on ``shard_map``:
     the count-unique config rows are split along a 1-D device mesh, each
     device runs the heavy (rows × layers) stage on its slice, and the tiny
@@ -621,19 +701,25 @@ def _jax_sharded_kernel(backend: str = "jax"):
     if _sharded_kernel_ndev != mesh.devices.size:
         _jitted_sharded_kernels = {}         # device count changed: rebuild
         _sharded_kernel_ndev = mesh.devices.size
-    if backend not in _jitted_sharded_kernels:
+    key = (backend, per_layer)
+    if key not in _jitted_sharded_kernels:
         def kernel(segments, cfg_m, cfg_u, lay, inv_m, inv, coefs):
             _JIT_STATS["traces"] += 1        # runs only while tracing
             return _sharded_grid_body(segments, cfg_m, cfg_u, lay, inv_m,
-                                      inv, coefs, backend=backend)
+                                      inv, coefs, backend=backend,
+                                      per_layer=per_layer)
 
-        _jitted_sharded_kernels[backend] = jax.jit(kernel, static_argnums=0)
-    return _jitted_sharded_kernels[backend]
+        _jitted_sharded_kernels[key] = jax.jit(kernel, static_argnums=0)
+    return _jitted_sharded_kernels[key]
 
 
 def _sharded_grid_body(segments, cfg_m, cfg_u, lay, inv_m, inv, coefs,
-                       backend: str = "jax"):
-    """Traced body of the sharded kernel (shared with the stream step)."""
+                       backend: str = "jax", per_layer: bool = False):
+    """Traced body of the sharded kernel (shared with the stream step).
+
+    In per-layer mode the all-gathered partials are [n_u, L] instead of
+    [n_u, n_net] — heavier across the mesh, but the split along the
+    unique-config axis (and the replicated combine) is identical."""
     import jax.numpy as jnp
     from jax import lax
     from jax.sharding import PartitionSpec as P
@@ -643,6 +729,16 @@ def _sharded_grid_body(segments, cfg_m, cfg_u, lay, inv_m, inv, coefs,
     row2, row1, rep = P("cfg", None), P("cfg"), P()
 
     def local(cfg_m_, cfg_u_, lay_, inv_m_):
+        if per_layer:
+            if backend == "pallas":
+                S = _pallas_term_layers(cfg_u_, lay_)
+                return tuple(lax.all_gather(s, "cfg", axis=0, tiled=True)
+                             for s in S)
+            S = _term_layers_body(jnp, cfg_m_, cfg_u_, lay_, inv_m_)
+            return tuple(
+                s if i in _CFG_INDEP_TERMS
+                else lax.all_gather(s, "cfg", axis=0, tiled=True)
+                for i, s in enumerate(S))
         if backend == "pallas":
             # the fused kernel emits every term per count-unique row (the
             # config-independent ones broadcast), so all 14 gather
@@ -661,6 +757,10 @@ def _sharded_grid_body(segments, cfg_m, cfg_u, lay, inv_m, inv, coefs,
                   {k: rep for k in lay}, row1),
         out_specs=tuple(rep for _ in range(14)),
         check_rep=False)(cfg_m, cfg_u, lay, inv_m)
+    if per_layer:
+        e, t = _gather_combine_body(jnp, S, inv, coefs)
+        return (_split_layers(jnp, e, segments),
+                _split_layers(jnp, t, segments))
     return _gather_combine_body(jnp, S, inv, coefs)
 
 
@@ -690,6 +790,11 @@ BACKENDS = ("pallas", "jax", "numpy")
 
 _LAST_BACKEND: str | None = None
 
+#: (requested, resolved) degradation edges already warned about — the
+#: auto-fallback warns exactly ONCE per process per edge, never per call
+#: (a mega-grid chunked sweep resolves the backend thousands of times).
+_FALLBACK_WARNED: set = set()
+
 
 def last_backend() -> str | None:
     """Backend the most recent engine dispatch actually ran on
@@ -699,18 +804,36 @@ def last_backend() -> str | None:
     return _LAST_BACKEND
 
 
+def _warn_fallback(requested: str, resolved: str) -> None:
+    key = (requested, resolved)
+    if key in _FALLBACK_WARNED:
+        return
+    _FALLBACK_WARNED.add(key)
+    warnings.warn(
+        f"engine backend {requested!r} is unavailable on this host; "
+        f"falling back to {resolved!r} (check energymodel.last_backend() "
+        "for what each dispatch ran on; this warning fires once per "
+        "process)", RuntimeWarning, stacklevel=3)
+
+
 def resolve_backend(backend: str | None = None,
                     use_jax: bool | None = None) -> str:
     """Resolve the requested backend with auto-fallback.
 
     Explicit ``backend`` wins over the legacy ``use_jax`` tri-state; an
     unavailable choice degrades (pallas → jax → numpy) instead of
-    raising, so ``backend="pallas"`` is safe on hosts without Pallas."""
+    raising, so ``backend="pallas"`` is safe on hosts without Pallas.
+    Each degradation edge emits one ``RuntimeWarning`` per process (not
+    per call); the silent paths are only the auto-selections where
+    nothing was requested."""
     if backend is None:
         if use_jax is None:
             backend = "jax" if jax_available() else "numpy"
         else:
             backend = "jax" if use_jax else "numpy"
+        requested = None                     # auto-selection: never warn
+    else:
+        requested = backend
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, "
                          f"got {backend!r}")
@@ -718,6 +841,8 @@ def resolve_backend(backend: str | None = None,
         backend = "jax"
     if backend == "jax" and not jax_available():
         backend = "numpy"
+    if requested is not None and backend != requested:
+        _warn_fallback(requested, backend)
     return backend
 
 
@@ -839,30 +964,33 @@ def _prepare_fields(fields: Dict[str, np.ndarray],
 
 def _eval_fields(fields, lay, segments, backend: str, shard: bool,
                  u_bucket: int | None = None,
-                 m_bucket: int | None = None):
-    """Evaluate one batch of grid columns → ([n, n_net], [n, n_net])."""
+                 m_bucket: int | None = None,
+                 per_layer: bool = False):
+    """Evaluate one batch of grid columns → ([n, n_net], [n, n_net])
+    (or [n, n_net, n_layer] pairs in per-layer mode)."""
     use_jax = backend != "numpy"
     n_dev = host_device_count() if (shard and use_jax) else 1
     cfg_m, cfg_u, inv_m, inv, coefs = _prepare_fields(
         fields, u_bucket, m_bucket, n_dev, backend)
     if not use_jax:
         e, t = _np_grid_kernel(segments, cfg_m, cfg_u, lay, inv_m, inv,
-                               coefs)
+                               coefs, per_layer=per_layer)
         return np.asarray(e), np.asarray(t)
     from jax.experimental import enable_x64
     with enable_x64():
         args = (cfg_m, cfg_u, lay, inv_m, inv, coefs)
         if n_dev > 1:
             args = _device_put_sharded(*args)
-            kern = _jax_sharded_kernel(backend)
+            kern = _jax_sharded_kernel(backend, per_layer)
         else:
-            kern = _jax_grid_kernel(backend)
+            kern = _jax_grid_kernel(backend, per_layer)
         _JIT_STATS["calls"] += 1
         e, t = kern(segments, *args)
         return np.asarray(e), np.asarray(t)
 
 
-def _dispatch_chunk(fc, lay, segments, device=None, backend: str = "jax"):
+def _dispatch_chunk(fc, lay, segments, device=None, backend: str = "jax",
+                    per_layer: bool = False):
     """Async-dispatch one padded chunk on ``device`` (jax path): returns
     uncollected device arrays so the host can prepare the next chunk — and
     other devices can compute — while this one runs."""
@@ -873,20 +1001,24 @@ def _dispatch_chunk(fc, lay, segments, device=None, backend: str = "jax"):
     if device is not None:
         args = jax.device_put(args, device)
     _JIT_STATS["calls"] += 1
-    return _jax_grid_kernel(backend)(segments, *args)
+    return _jax_grid_kernel(backend, per_layer)(segments, *args)
 
 
 def _eval_chunked(fields, lay, segments, backend: str, shard: bool,
-                  chunk_size: int, n: int, n_net: int):
-    """Chunked evaluation of the full grid → dense [n, n_net] outputs.
+                  chunk_size: int, n: int, n_net: int,
+                  per_layer: bool = False):
+    """Chunked evaluation of the full grid → dense [n, n_net] outputs
+    ([n, n_net, n_layer] in per-layer mode).
 
     With ``shard=True`` and several host devices, whole chunks round-robin
     across the devices: each device runs the complete two-level-dedup
     kernel on its chunks (no duplicated mapping work, no collectives), and
     asynchronous dispatch keeps every device busy while the host dedups
     the next chunk.  In-flight chunks are bounded to 2 per device."""
-    e = np.empty((n, n_net))
-    t = np.empty((n, n_net))
+    shape = ((n, n_net, _layer_axis_len(segments)) if per_layer
+             else (n, n_net))
+    e = np.empty(shape)
+    t = np.empty(shape)
 
     def chunks():
         for ci, start in enumerate(range(0, n, chunk_size)):
@@ -898,7 +1030,8 @@ def _eval_chunked(fields, lay, segments, backend: str, shard: bool,
     if backend == "numpy":
         for _, start, stop, fc in chunks():
             ec, tc = _eval_fields(fc, lay, segments, "numpy", False,
-                                  _UNIQUE_BUCKET, _MAPPING_BUCKET)
+                                  _UNIQUE_BUCKET, _MAPPING_BUCKET,
+                                  per_layer=per_layer)
             e[start:stop] = ec[:stop - start]
             t[start:stop] = tc[:stop - start]
         return e, t
@@ -917,7 +1050,8 @@ def _eval_chunked(fields, lay, segments, backend: str, shard: bool,
     with enable_x64():
         for ci, start, stop, fc in chunks():
             dev = devs[ci % n_dev] if n_dev > 1 else None
-            ec, tc = _dispatch_chunk(fc, lay, segments, dev, backend)
+            ec, tc = _dispatch_chunk(fc, lay, segments, dev, backend,
+                                     per_layer)
             pending.append((start, stop, ec, tc))
             if len(pending) > 2 * n_dev:
                 drain(pending.pop(0))
@@ -933,6 +1067,7 @@ def evaluate_networks(grid: ConfigGrid,
                       backend: str | None = None,
                       shard: bool = False,
                       chunk_size: int | None = None,
+                      per_layer: bool = False,
                       ) -> Tuple[np.ndarray, np.ndarray]:
     """Evaluate every network against every grid point.
 
@@ -947,20 +1082,31 @@ def evaluate_networks(grid: ConfigGrid,
     in fixed-shape chunks so the heavy (unique-rows × layers)
     intermediates stay bounded — mega-scale spaces would otherwise
     materialise multi-GB tiles.
+
+    ``per_layer=True`` keeps the layer axis: the outputs become
+    ``[grid.n, len(networks), n_layer]`` where ``n_layer`` is the longest
+    network's compute-layer count (shorter networks zero-padded — see
+    :func:`network_layer_counts` for the valid lengths).  Summing the
+    last axis reproduces the default outputs exactly (the default path
+    merely performs that sum earlier, before the coefficients).  This is
+    the input of the heterogeneous layer→core co-design stack
+    (:func:`repro.core.hetero.co_design`).
     """
     global _LAST_BACKEND
     backend = resolve_backend(backend, use_jax)
     _LAST_BACKEND = backend
-    lay, segments = _stack_networks(networks)
+    lay, segments = _stack_networks(networks, absorb_pad=not per_layer)
     lay = {k: v[None, :] for k, v in lay.items()}
     fields = grid.fields if isinstance(grid, ConfigGrid) else dict(grid)
     n = int(next(iter(fields.values())).shape[0])
 
     if chunk_size is not None and n > chunk_size:
         return _eval_chunked(fields, lay, segments, backend, shard,
-                             chunk_size, n, len(networks))
+                             chunk_size, n, len(networks),
+                             per_layer=per_layer)
 
-    return _eval_fields(fields, lay, segments, backend, shard)
+    return _eval_fields(fields, lay, segments, backend, shard,
+                        per_layer=per_layer)
 
 
 # ---------------------------------------------------------------------------
@@ -1185,6 +1331,127 @@ def stream_networks(grid: ConfigGrid,
         min_energy=min_e, min_latency=min_t, min_metric=min_m,
         argmin=argm, topk_idx=top_i, topk_metric=top_v,
         boundary_idx=b_idx, boundary_energy=b_e, boundary_latency=b_t)
+
+
+# ---------------------------------------------------------------------------
+# Streaming per-layer top-k: the per-layer tensors of a mega-scale sweep are
+# far too large to keep ([n_cfg, n_net, n_layer] at 49k points × 18 nets ×
+# 256 layers ≈ 1.8 GB each), but the co-design consumers only ever need the
+# per-layer rows of the few near-optimal configs per network.  This variant
+# evaluates chunk by chunk in per-layer mode and folds each chunk into a
+# running per-network top-k that KEEPS the [n_layer] energy/latency rows of
+# the current top-k configs only.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerTopK:
+    """Running per-layer top-k of a streamed per-layer sweep."""
+
+    networks: Tuple[str, ...]
+    n_cfg: int
+    metric: str
+    layer_counts: np.ndarray        # [n_net] valid lengths of the layer axis
+    topk_idx: np.ndarray            # [k, n_net] flat grid indices, best first
+    topk_metric: np.ndarray         # [k, n_net]
+    layer_energy: np.ndarray        # [k, n_net, n_layer]
+    layer_latency: np.ndarray       # [k, n_net, n_layer]
+
+
+def stream_layer_topk(grid: ConfigGrid,
+                      networks: Mapping[str, Sequence[Layer]],
+                      *,
+                      topk: int = 8,
+                      chunk_size: int = 4096,
+                      use_jax: bool | None = None,
+                      backend: str | None = None,
+                      shard: bool = False,
+                      metric: str = "edp") -> LayerTopK:
+    """Streamed per-layer sweep keeping only each network's top-k configs.
+
+    Equivalent to ``evaluate_networks(..., per_layer=True)`` followed by a
+    per-network top-k on the layer-summed metric — at bounded memory: only
+    one chunk's ``[chunk, n_net, n_layer]`` tensors are ever alive, and
+    the state carries ``k`` per-layer rows per network.  Ties rank by
+    lower flat grid index (stable against chunk boundaries)."""
+    global _LAST_BACKEND
+    backend = resolve_backend(backend, use_jax)
+    _LAST_BACKEND = backend
+    names = tuple(networks)
+    n_net = len(names)
+    lay, segments = _stack_networks(networks, absorb_pad=False)
+    lay = {k: v[None, :] for k, v in lay.items()}
+    n_layer = _layer_axis_len(segments)
+    fields = grid.fields if isinstance(grid, ConfigGrid) else dict(grid)
+    n = int(next(iter(fields.values())).shape[0])
+    chunk = max(1, min(chunk_size, n))
+
+    k = int(topk)
+    top_v = np.full((k, n_net), np.inf)
+    top_i = np.full((k, n_net), -1, np.int64)
+    top_e = np.zeros((k, n_net, n_layer))
+    top_t = np.zeros((k, n_net, n_layer))
+
+    def fold(start, stop, ec, tc):
+        nonlocal top_v, top_i, top_e, top_t
+        m = stop - start
+        ec, tc = np.asarray(ec)[:m], np.asarray(tc)[:m]
+        v = _metric_of(metric, ec.sum(-1), tc.sum(-1))     # [m, n_net]
+        idx = np.arange(start, stop, dtype=np.int64)
+        all_v = np.concatenate([top_v, v], axis=0)
+        all_i = np.concatenate([top_i, np.broadcast_to(
+            idx[:, None], v.shape)], axis=0)
+        # lexsort on (index, value): ascending metric, lower index on ties
+        order = np.lexsort((all_i, all_v), axis=0)[:k]     # [k, n_net]
+        new_e = np.empty_like(top_e)
+        new_t = np.empty_like(top_t)
+        for j in range(n_net):
+            for r, src in enumerate(order[:, j]):
+                if src < k:                                # kept old row
+                    new_e[r, j] = top_e[src, j]
+                    new_t[r, j] = top_t[src, j]
+                else:                                      # new chunk row
+                    new_e[r, j] = ec[src - k, j]
+                    new_t[r, j] = tc[src - k, j]
+        top_v = np.take_along_axis(all_v, order, axis=0)
+        top_i = np.take_along_axis(all_i, order, axis=0)
+        top_e, top_t = new_e, new_t
+
+    def chunks():
+        for ci, start in enumerate(range(0, n, chunk)):
+            stop = min(start + chunk, n)
+            fc = {k_: _pad_rows(v[start:stop], chunk)
+                  for k_, v in fields.items()}
+            yield ci, start, stop, fc
+
+    if backend == "numpy":
+        for _, start, stop, fc in chunks():
+            ec, tc = _eval_fields(fc, lay, segments, "numpy", False,
+                                  _UNIQUE_BUCKET, _MAPPING_BUCKET,
+                                  per_layer=True)
+            fold(start, stop, ec, tc)
+    else:
+        import jax
+        from jax.experimental import enable_x64
+        devs = jax.devices()
+        n_dev = host_device_count() if shard else 1
+        pending: list = []
+        with enable_x64():
+            for ci, start, stop, fc in chunks():
+                dev = devs[ci % n_dev] if n_dev > 1 else None
+                ec, tc = _dispatch_chunk(fc, lay, segments, dev, backend,
+                                         per_layer=True)
+                pending.append((start, stop, ec, tc))
+                if len(pending) > 2 * n_dev:
+                    fold(*pending.pop(0))
+            for item in pending:
+                fold(*item)
+
+    return LayerTopK(
+        networks=names, n_cfg=n, metric=metric,
+        layer_counts=network_layer_counts(networks),
+        topk_idx=top_i, topk_metric=top_v,
+        layer_energy=top_e, layer_latency=top_t)
 
 
 def simulate_grid(configs: Sequence[AcceleratorConfig] | ConfigGrid,

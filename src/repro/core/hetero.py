@@ -23,16 +23,26 @@ into a :class:`repro.core.accelerator.ConfigGrid` (the boundary sets a
 materialised), and ``StreamChip.core_cells`` converts back to cells.
 Both share ``_greedy_cover`` over per-network candidate-index sets, so
 they provably pick identical core types.
+
+``co_design`` goes one level deeper than ``design_chip``: instead of
+assigning each network WHOLE to one core type, it searches over candidate
+multi-core chips (a type multiset drawn from the boundary-set pool) and
+schedules every network's LAYERS across the chip's heterogeneous cores —
+the per-layer tensors come from the engine's ``per_layer=True`` path and
+all (chip × network) schedules are solved by ONE call to the batched
+:func:`repro.core.partition.batch_schedule_hetero` solver.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Dict, List, Mapping, Sequence, Tuple
 
 import numpy as np
 
 from . import energymodel
+from . import partition
 from .accelerator import ConfigGrid
 from .dse import SweepResult, boundary_configs
 from .topology import Layer
@@ -190,6 +200,255 @@ def cross_penalty(chip: HeteroChip, network: str, other_core: int
     d_d = (sw.latency[oth] - sw.latency[own]) / sw.latency[own] * 100.0
     d_edp = (sw.edp[oth] - sw.edp[own]) / sw.edp[own] * 100.0
     return dict(dE=float(d_e), dD=float(d_d), dEDP=float(d_edp))
+
+
+# ---------------------------------------------------------------------------
+# Batched per-layer co-design (§IV.A × §IV.B fused): which multi-core chip,
+# and which layer→core schedule on it, for every network at once.
+# ---------------------------------------------------------------------------
+
+
+def _compositions(n: int, k: int):
+    """Positive integer k-tuples summing to n (core counts per type)."""
+    if k == 1:
+        yield (n,)
+        return
+    for first in range(1, n - k + 2):
+        for rest in _compositions(n - first, k - 1):
+            yield (first,) + rest
+
+
+def _enumerate_chips(pool_size: int, max_types: int, m_cores: int
+                     ) -> List[Tuple[Tuple[int, ...], Tuple[int, ...]]]:
+    """All candidate chips: (pool positions, per-type core counts)."""
+    chips = []
+    for k in range(1, min(max_types, m_cores, pool_size) + 1):
+        for combo in itertools.combinations(range(pool_size), k):
+            for comp in _compositions(m_cores, k):
+                chips.append((combo, comp))
+    return chips
+
+
+def _expand_pool_tensor(tensor: np.ndarray, chips, n_net: int,
+                        t_max: int) -> np.ndarray:
+    """[pool, n_net, L] per-layer pool tensor → the chip-major problem
+    block [n_chips · n_net, t_max, L]: each chip's type rows gathered and
+    laid out network-major within the chip (unused type slots stay 0).
+    Both solver latencies and the energy attribution go through THIS
+    layout, so they can never desynchronise."""
+    n_layer = tensor.shape[2]
+    out = np.zeros((len(chips) * n_net, t_max, n_layer))
+    for ci, (ty, _) in enumerate(chips):
+        out[ci * n_net:(ci + 1) * n_net, :len(ty)] = \
+            tensor[list(ty)].transpose(1, 0, 2)           # [n_net, k, L]
+    return out
+
+
+@dataclasses.dataclass
+class CoDesign:
+    """Result of the batched chip + layer-schedule co-design search."""
+
+    core_types: List[int]                 # winning chip: flat grid indices
+    core_counts: List[int]                # cores per type (Σ == m_cores)
+    schedules: Dict[str, "partition.HeteroSchedule"]   # per network
+    energy: Dict[str, float]              # Σ per-layer energy as scheduled
+    latency: Dict[str, float]             # pipeline bottleneck (ns)
+    score: float                          # winning chip's mean norm. metric
+    homogeneous_score: float              # best single-type chip's score
+    metric: str
+    m_cores: int
+    pool: List[int]                       # candidate type pool (flat idx)
+    chip_types: List[Tuple[int, ...]]     # every candidate: pool positions
+    chip_counts: List[Tuple[int, ...]]
+    chip_scores: np.ndarray               # [n_chips]
+
+    @property
+    def n_chips(self) -> int:
+        return len(self.chip_types)
+
+    def edp(self, name: str) -> float:
+        return self.energy[name] * self.latency[name]
+
+    def core_label(self, idx: int, grid: ConfigGrid) -> str:
+        return grid.config_at(self.core_types[idx]).label()
+
+    def summary(self, grid: ConfigGrid) -> str:
+        parts = [f"{c}x {self.core_label(i, grid)}"
+                 for i, c in enumerate(self.core_counts)]
+        return " + ".join(parts)
+
+
+@dataclasses.dataclass
+class CoDesignProblems:
+    """The materialised (chip × network) schedule problem set — step 1–3
+    of :func:`co_design` without the solve, so benchmarks can time the
+    batched solver against the per-(chip, network) loop it replaces on
+    the exact same problems."""
+
+    names: List[str]
+    pool: List[int]                        # candidate types (flat idx)
+    chips: List[Tuple[Tuple[int, ...], Tuple[int, ...]]]  # (types, counts)
+    lat_dense: np.ndarray                  # [B, t_max, n_layer] solver input
+    n_layers_b: np.ndarray                 # [B] true lengths per problem
+    counts: np.ndarray                     # [B, t_max]
+    e_layer: np.ndarray                    # [pool, n_net, n_layer]
+    t_layer: np.ndarray
+    e: np.ndarray                          # dense sweep [n, n_net]
+    t: np.ndarray
+    lens: np.ndarray                       # [n_net] true layer counts
+
+    @property
+    def n_problems(self) -> int:
+        return int(self.lat_dense.shape[0])
+
+    @property
+    def lats(self) -> List[np.ndarray]:
+        """Per-problem [n_types, n_layers] views (the scalar-oracle loop's
+        input format)."""
+        return [self.lat_dense[i, :, :self.n_layers_b[i]]
+                for i in range(self.n_problems)]
+
+
+def codesign_problems(grid: ConfigGrid,
+                      networks: Mapping[str, Sequence[Layer]],
+                      m_cores: int = 4,
+                      *,
+                      max_types: int = 3,
+                      pool_size: int = 6,
+                      bound: float = 0.05,
+                      metric: str = "edp",
+                      backend: str | None = None,
+                      use_jax: bool | None = None) -> CoDesignProblems:
+    """Build the co-design problem set: dense sweep → boundary-set pool →
+    per-layer pool tensors → every (chip candidate × network) problem."""
+    names = list(networks)
+    n_net = len(names)
+    e, t = energymodel.evaluate_networks(grid, networks, use_jax=use_jax,
+                                         backend=backend)
+
+    # ---- pool from the boundary sets (greedy cover, then top-up) ---------
+    val = energymodel._metric_of(metric, e, t)            # [n, n_net]
+    mins = val.min(axis=0)
+    cand = (val <= mins[None, :] * (1.0 + bound)).T       # [n_net, n]
+    rel = (val / mins[None, :]).T
+    pool_size = min(pool_size, grid.n)
+    cols, _, _ = _greedy_cover(cand, rel, pool_size)
+    pool = [int(c) for c in cols]
+    if len(pool) < pool_size:
+        for c in np.argsort(rel.min(axis=0), kind="stable"):
+            if int(c) not in pool:
+                pool.append(int(c))
+            if len(pool) == pool_size:
+                break
+
+    # ---- per-layer tensors of the pool (ONE compiled call) ---------------
+    e_l, t_l = energymodel.evaluate_networks(
+        grid.take(pool), networks, use_jax=use_jax, backend=backend,
+        per_layer=True)                                   # [P, n_net, L]
+    lens = energymodel.network_layer_counts(networks)
+
+    # ---- candidate chips × networks (dense solver tensors) ---------------
+    chips = _enumerate_chips(len(pool), max_types, m_cores)
+    t_max = max(len(ty) for ty, _ in chips)
+    lat_b = _expand_pool_tensor(t_l, chips, n_net, t_max)
+    counts_b = np.zeros((len(chips) * n_net, t_max), dtype=np.int64)
+    for ci, (ty, cn) in enumerate(chips):
+        counts_b[ci * n_net:(ci + 1) * n_net, :len(cn)] = cn
+    return CoDesignProblems(names=names, pool=pool, chips=chips,
+                            lat_dense=lat_b,
+                            n_layers_b=np.tile(lens, len(chips)),
+                            counts=counts_b,
+                            e_layer=e_l, t_layer=t_l, e=e, t=t, lens=lens)
+
+
+def co_design(grid: ConfigGrid,
+              networks: Mapping[str, Sequence[Layer]],
+              m_cores: int = 4,
+              *,
+              max_types: int = 3,
+              pool_size: int = 6,
+              bound: float = 0.05,
+              metric: str = "edp",
+              backend: str | None = None,
+              use_jax: bool | None = None) -> CoDesign:
+    """Batched heterogeneous chip + per-layer schedule co-design (§IV).
+
+    1. One dense sweep ranks every grid point per network; the candidate
+       core-type POOL is the greedy-cover prefix of the ≤``bound``
+       boundary sets (the same cover ``design_chip`` runs), topped up
+       with the best near-optimal cells.
+    2. ONE ``per_layer=True`` engine call evaluates the pool → the
+       ``[pool, n_net, n_layer]`` per-layer energy/latency tensors.
+    3. Every chip candidate — type subsets of the pool (≤ ``max_types``)
+       × core-count compositions of ``m_cores`` — is scheduled for every
+       network by ONE :func:`repro.core.partition.batch_schedule_hetero`
+       call over all (chip × network) problems.
+    4. Chips are scored by the per-network scheduled metric (energy as
+       assigned / pipeline bottleneck / their product for ``"edp"``),
+       normalised by that network's single-core optimum and averaged;
+       the arg-min chip wins and only ITS schedules are materialised.
+
+    The ``homogeneous_score`` of the best single-type candidate (the
+    §IV.B baseline: ``m_cores`` identical cores) is kept for the savings
+    headline — heterogeneous wins exactly when ``score`` beats it.
+    """
+    probs = codesign_problems(grid, networks, m_cores,
+                              max_types=max_types, pool_size=pool_size,
+                              bound=bound, metric=metric, backend=backend,
+                              use_jax=use_jax)
+    res = partition.batch_schedule_hetero(probs.lat_dense, probs.counts,
+                                          n_layers=probs.n_layers_b,
+                                          use_jax=use_jax)
+    return score_codesign(probs, res, metric=metric, m_cores=m_cores)
+
+
+def score_codesign(probs: CoDesignProblems,
+                   res: "partition.BatchHeteroResult",
+                   *, metric: str = "edp", m_cores: int = 4) -> CoDesign:
+    """Step 4 of :func:`co_design`: fold a solved problem set into chip
+    scores and materialise the winning chip's schedules."""
+    names, chips, pool = probs.names, probs.chips, probs.pool
+    n_net, n_chips = len(names), len(chips)
+    t_max = probs.counts.shape[1]
+    n_layer = probs.e_layer.shape[2]
+
+    # ---- energy of every problem as scheduled ----------------------------
+    # same chip-major expansion the solver latencies used (one helper,
+    # one layout), then one take_along_axis gather over assigned types
+    en_b = _expand_pool_tensor(probs.e_layer, chips, n_net, t_max)
+    tt = res.layer_type[:, :n_layer]
+    energy_b = np.take_along_axis(
+        en_b, tt[:, None, :], axis=1)[:, 0, :].sum(-1)    # [B]
+
+    # ---- score chips ------------------------------------------------------
+    bott = res.bottleneck.reshape(n_chips, n_net)
+    energy = energy_b.reshape(n_chips, n_net)
+    if metric == "energy":
+        cell, ref = energy, probs.e.min(axis=0)
+    elif metric == "latency":
+        cell, ref = bott, probs.t.min(axis=0)
+    else:
+        cell, ref = energy * bott, (probs.e * probs.t).min(axis=0)
+    chip_scores = (cell / ref[None, :]).mean(axis=1)      # [n_chips]
+    best = int(np.argmin(chip_scores))
+    homog = min(chip_scores[ci] for ci, (ty, _) in enumerate(chips)
+                if len(ty) == 1)
+
+    ty, cn = chips[best]
+    schedules = {nm: res.schedule(best * n_net + j)
+                 for j, nm in enumerate(names)}
+    return CoDesign(
+        core_types=[pool[p] for p in ty],
+        core_counts=list(cn),
+        schedules=schedules,
+        energy={nm: float(energy[best, j]) for j, nm in enumerate(names)},
+        latency={nm: float(bott[best, j]) for j, nm in enumerate(names)},
+        score=float(chip_scores[best]),
+        homogeneous_score=float(homog),
+        metric=metric, m_cores=m_cores, pool=pool,
+        chip_types=[c[0] for c in chips],
+        chip_counts=[c[1] for c in chips],
+        chip_scores=chip_scores)
 
 
 def savings_summary(chip: HeteroChip) -> Dict[str, Dict[str, float]]:

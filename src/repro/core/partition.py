@@ -33,6 +33,22 @@ A :class:`Partition` stores ``boundaries`` as the k+1 split indices into
 the layer axis (``boundaries[0] == 0``, contiguous, monotone) and
 ``loads`` as the per-core latency sums — ``pipeline_latency =
 max(loads)`` and eq. (6)'s ``speedup = sum / max``.
+
+``batch_schedule_hetero`` generalises the solver beyond same-type cores
+(the heterogeneous-chip co-design of :func:`repro.core.hetero.co_design`):
+each problem is a (chip, network) pair with per-layer latencies on every
+core TYPE (``[n_types, n_layers]``, from the DSE engine's
+``per_layer=True`` path) and a core count per type.  The schedule is
+defined in two exact stages — (1) every layer goes to the available type
+that runs it fastest (per-layer argmin, ties → lower type index); (2)
+each type's layer subsequence is split contiguously over that type's
+cores, all types balanced against ONE shared pipeline bottleneck.
+Feasibility of a bottleneck T is the conjunction of the per-type greedy
+coverings (each monotone in T), so a single bisection per problem drives
+every (problem × type) greedy row at once, and the optimum is exactly
+``max over types of dp_partition(type's subsequence, type's cores)`` —
+the oracle :func:`schedule_hetero_oracle` the tests compare against.
+With one type and count k this degenerates to ``batch_partition``.
 """
 
 from __future__ import annotations
@@ -307,7 +323,7 @@ def _jax_solver():
 
             starts = []
             pos = jnp.zeros_like(net)
-            for s in range(_K_MAX):           # static unroll; kk masks
+            for s in range(k_max):            # static unroll; kk masks
                 starts.append(jnp.where(s < kk,
                                         jnp.minimum(pos, n_arr), n_arr))
                 j = rowsearch(pos, hi_f)
@@ -424,3 +440,395 @@ def partition_network(report, n_cores: int, method: str = "bb") -> Partition:
     fn = {"bb": bb_partition, "dp": dp_partition,
           "brute": brute_force_partition}[method]
     return fn(lat, n_cores)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous layer→core scheduling: batch_partition generalised beyond
+# same-type cores.  A problem is a (chip, network) pair — per-layer
+# latencies on every core TYPE plus a core count per type.  The schedule:
+#
+# 1. **per-layer argmin** — each layer runs on the available type that
+#    executes it fastest (ties → lower type index);
+# 2. **per-core-count balancing** — each type's layer subsequence is split
+#    contiguously over that type's cores; the pipeline bottleneck is the
+#    max core load across ALL types, so feasibility of a bottleneck T is
+#    the AND of the per-type greedy coverings and ONE bisection per
+#    problem drives every (problem × type) greedy row at once.
+#
+# Masked prefix sums make stage 2 exact: a type's costs are written onto
+# the FULL layer axis (other types' slots are 0.0 — adding zero is exact
+# in fp), so segment sums are the same prefix differences dp_partition
+# computes on the compacted subsequence, and the final bottleneck is
+# bit-identical to max_t dp_partition(subseq_t, counts_t) — the oracle.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HeteroSchedule:
+    """One network's layer→core schedule on a heterogeneous chip."""
+
+    types: Tuple[int, ...]        # core → type index (type-major order)
+    layer_type: Tuple[int, ...]   # layer → type index (per-layer argmin)
+    layer_core: Tuple[int, ...]   # layer → global core id
+    loads: Tuple[float, ...]      # per-core latency sums (idle cores 0.0)
+    bottleneck: float             # pipeline latency = max(loads)
+    speedup: float                # Σ assigned layer latency / bottleneck
+    n_layers: int
+
+    @property
+    def n_cores(self) -> int:
+        return len(self.types)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchHeteroResult:
+    """Array-level output of :func:`batch_schedule_hetero` (B problems).
+
+    Kept as arrays so mega-batch co-design sweeps never pay per-problem
+    Python object construction for schedules nobody reads —
+    :meth:`schedule` materialises a :class:`HeteroSchedule` on demand.
+    """
+
+    counts: np.ndarray            # [B, T] cores per type (as requested)
+    n_layers: np.ndarray          # [B]
+    layer_type: np.ndarray        # [B, L_pad] per-layer argmin type
+    starts: np.ndarray            # [B, T, k_max] full-axis segment starts
+    seg_counts: np.ndarray        # [B, T] segments actually opened
+    loads: np.ndarray             # [B, T, k_max] per-segment latency sums
+    bottleneck: np.ndarray        # [B]
+    total: np.ndarray             # [B] Σ assigned layer latency
+
+    def __len__(self) -> int:
+        return int(self.bottleneck.shape[0])
+
+    @property
+    def speedup(self) -> np.ndarray:
+        with np.errstate(divide="ignore"):
+            return np.where(self.bottleneck > 0,
+                            self.total / self.bottleneck, np.inf)
+
+    def schedule(self, i: int) -> HeteroSchedule:
+        n_t = self.counts.shape[1]
+        L = int(self.n_layers[i])
+        tt = self.layer_type[i, :L]
+        counts = self.counts[i]
+        core_off = np.concatenate([[0], np.cumsum(counts)])
+        types = tuple(int(t) for t in np.repeat(np.arange(n_t), counts))
+        loads = np.zeros(int(core_off[-1]))
+        layer_core = np.zeros(L, dtype=np.intp)
+        for t in range(n_t):
+            if counts[t] == 0:
+                continue
+            kk = int(self.seg_counts[i, t])
+            st = self.starts[i, t, :kk]
+            ends = np.concatenate([st[1:], [L]])
+            lt = np.flatnonzero(tt == t)
+            if lt.size:
+                layer_core[lt] = core_off[t] + np.searchsorted(
+                    ends, lt, side="right")
+            loads[core_off[t]:core_off[t] + kk] = self.loads[i, t, :kk]
+        bott = float(self.bottleneck[i])
+        total = float(self.total[i])
+        return HeteroSchedule(
+            types=types, layer_type=tuple(int(t) for t in tt),
+            layer_core=tuple(int(c) for c in layer_core),
+            loads=tuple(float(x) for x in loads),
+            bottleneck=bott,
+            speedup=total / bott if bott > 0 else float("inf"),
+            n_layers=L)
+
+    def schedules(self) -> List[HeteroSchedule]:
+        return [self.schedule(i) for i in range(len(self))]
+
+
+def schedule_hetero_oracle(latencies, counts) -> Dict[str, Any]:
+    """Scalar reference for ONE (chip, network) problem.
+
+    ``latencies``: [n_types, n_layers] per-layer latency on each core
+    type; ``counts``: [n_types] cores per type.  Per-layer argmin over
+    the available types, then ``dp_partition`` per type's subsequence —
+    the exact semantics ``batch_schedule_hetero`` batches."""
+    lat = np.asarray(latencies, dtype=np.float64)
+    counts = np.asarray(counts, dtype=np.int64)
+    n_types, n_layers = lat.shape
+    if counts.shape[0] > n_types:        # zero-padded type slots are fine
+        if (counts[n_types:] > 0).any():
+            raise ValueError("counts for more types than latency rows")
+        counts = counts[:n_types]
+    if n_layers == 0:
+        raise ValueError("schedule_hetero_oracle needs ≥ 1 layer")
+    if not (counts > 0).any():
+        raise ValueError("schedule_hetero_oracle needs ≥ 1 core")
+    cost = np.where((counts > 0)[:, None], lat, np.inf)
+    tt = np.argmin(cost, axis=0)
+    bottleneck = 0.0
+    for t in range(n_types):
+        sub = lat[t, tt == t]
+        if counts[t] <= 0 or sub.size == 0:
+            continue
+        p = dp_partition(sub, int(counts[t]))
+        bottleneck = max(bottleneck, p.pipeline_latency)
+    total = float(lat[tt, np.arange(n_layers)].sum())
+    return dict(bottleneck=bottleneck, layer_type=tt, total=total,
+                speedup=total / bottleneck if bottleneck > 0
+                else float("inf"))
+
+
+_B_BUCKET = 32     # problem-axis bucket of the jitted hetero solver
+
+_jitted_hetero_stage1 = None
+
+
+def _jax_hetero_stage1():
+    """Fused stage 1 of the hetero solver: per-layer argmin assignment +
+    masked per-type prefix sums + the per-type reductions (layer counts,
+    max, total), one XLA program instead of ~6 full-tensor numpy passes
+    over the [B, T, L] block.  Bit-identical to the numpy body (same
+    first-minimum argmin, same cumsum order; adding exact zeros)."""
+    global _jitted_hetero_stage1
+    if _jitted_hetero_stage1 is None:
+        import jax
+        import jax.numpy as jnp
+
+        def stage1(lat, avail, n_lens):
+            n_types = lat.shape[1]
+            l_idx = jnp.arange(lat.shape[2])
+            valid = l_idx[None, :] < n_lens[:, None]          # [B, L]
+            cost = jnp.where(avail[:, :, None], lat, jnp.inf)
+            tt = jnp.argmin(cost, axis=1)                     # [B, L]
+            tmask = ((tt[:, None, :] == jnp.arange(n_types)[None, :, None])
+                     & valid[:, None, :])                     # [B, T, L]
+            masked = jnp.where(tmask, lat, 0.0)
+            # NOTE no cumsum here: XLA's scan is not bit-identical to
+            # numpy's sequential one, and the solver's exactness-vs-dp
+            # contract rides on identical prefix arithmetic — the prefix
+            # sums stay on the host.
+            return (masked, jnp.where(valid, tt, 0),
+                    tmask.sum(axis=-1), masked.max(axis=-1))
+
+        _jitted_hetero_stage1 = jax.jit(stage1)
+    return _jitted_hetero_stage1
+
+
+def batch_schedule_hetero(latencies, counts,
+                          n_layers=None,
+                          use_jax: bool | None = None,
+                          ) -> BatchHeteroResult:
+    """Solve every heterogeneous (chip, network) schedule in one call.
+
+    ``latencies``: one ``[n_types, n_layers]`` per-layer latency matrix
+    per problem — a sequence of such, or ONE dense ``[B, T, L]`` float64
+    array (the DSE engine's ``per_layer=True`` tensors gathered per
+    chip; the fast path — no per-problem Python work).  ``counts``: the
+    matching per-type core counts (``[T]`` per problem, or ``[B, T]``).
+    With a dense array, ``n_layers`` gives each problem's true layer
+    count (default: the full ``L``) — entries past it are ignored.
+    Types with count 0 (padding slots) never receive layers.  Returns a
+    :class:`BatchHeteroResult`; bottlenecks are exactly
+    :func:`schedule_hetero_oracle`'s (same prefix-difference arithmetic,
+    ulp-tight bisection).  With jax available the bisection +
+    segmentation run as ONE jitted dispatch over all (problem × type)
+    rows; the numpy body is the reference fallback.
+    """
+    dense = isinstance(latencies, np.ndarray) and latencies.ndim == 3
+    if dense:
+        n_b, in_types, n_max = latencies.shape
+        n_lens = (np.full(n_b, n_max, dtype=np.int64) if n_layers is None
+                  else np.asarray(n_layers, dtype=np.int64))
+    else:
+        lats = [np.asarray(l, dtype=np.float64) for l in latencies]
+        n_b = len(lats)
+        in_types = max((l.shape[0] for l in lats), default=0)
+        n_lens = np.array([l.shape[1] for l in lats], dtype=np.int64)
+        n_max = int(n_lens.max()) if n_b else 0
+    cnts = np.asarray(counts)
+    if cnts.ndim == 1:
+        cnts = np.broadcast_to(cnts, (n_b, cnts.shape[0]))
+    cnts = cnts.astype(np.int64)
+    if n_b == 0:
+        return BatchHeteroResult(
+            counts=np.zeros((0, 0), np.int64), n_layers=np.zeros(0, np.int64),
+            layer_type=np.zeros((0, 0), np.int64),
+            starts=np.zeros((0, 0, _K_MAX), np.int64),
+            seg_counts=np.zeros((0, 0), np.int64),
+            loads=np.zeros((0, 0, _K_MAX)), bottleneck=np.zeros(0),
+            total=np.zeros(0))
+    if cnts.shape[0] != n_b:
+        raise ValueError(f"counts rows {cnts.shape[0]} != problems {n_b}")
+    n_types = max(in_types, cnts.shape[1])
+    if (n_lens == 0).any():
+        raise ValueError("every problem needs ≥ 1 layer")
+    # a positive count for a type slot beyond a problem's latency rows
+    # would hand every layer to a phantom zero-latency type — reject it,
+    # exactly like schedule_hetero_oracle does
+    prob_types = (np.asarray([l.shape[0] for l in lats], dtype=np.int64)
+                  if not dense else np.full(n_b, in_types, np.int64))
+    ghost = np.arange(cnts.shape[1])[None, :] >= prob_types[:, None]
+    if (cnts * ghost).any():
+        raise ValueError("counts for more types than latency rows")
+
+    if max(int(c) for c in cnts.max(axis=0)) > _K_MAX and use_jax is not False:
+        use_jax = False                    # solver unrolls _K_MAX segments
+    use_jax = (jax_available() if use_jax is None else use_jax)
+
+    n_pad = _bucketed(n_max, _N_BUCKET) if use_jax else n_max
+    b_pad = _bucketed(n_b, _B_BUCKET) if use_jax else n_b
+
+    lat = np.zeros((b_pad, n_types, n_pad))
+    if dense:
+        lat[:n_b, :in_types, :n_max] = latencies
+    else:
+        for i, l in enumerate(lats):
+            lat[i, :l.shape[0], :l.shape[1]] = l
+    counts_p = np.ones((b_pad, n_types), dtype=np.int64)  # benign pad rows
+    counts_p[:n_b] = 0
+    counts_p[:n_b, :cnts.shape[1]] = cnts
+    avail = counts_p > 0
+    if not avail[:n_b].any(axis=1).all():
+        raise ValueError("every problem needs ≥ 1 core (counts all zero)")
+    avail[n_b:] = False
+    avail[n_b:, 0] = True                  # padded problems: 1 trivial core
+    n_lens_p = np.concatenate([n_lens, np.ones(b_pad - n_b, np.int64)])
+
+    # stage 1: per-layer argmin over the available types + masked per-type
+    # prefix sums (fused on-device when jax runs the search below)
+    l_idx = np.arange(n_pad)
+    valid_l = l_idx[None, :] < n_lens_p[:, None]              # [B, L]
+    if use_jax:
+        from jax.experimental import enable_x64
+        with enable_x64():
+            masked, tt, n_t, mx = (
+                np.asarray(o) for o in _jax_hetero_stage1()(
+                    lat, avail, n_lens_p))
+    else:
+        cost = np.where(avail[:, :, None], lat, np.inf)
+        tt = np.argmin(cost, axis=1)                          # [B, L]
+        tt = np.where(valid_l, tt, 0)
+        tmask = ((tt[:, None, :] == np.arange(n_types)[None, :, None])
+                 & valid_l[:, None, :])
+        masked = np.where(tmask, lat, 0.0)
+        n_t = tmask.sum(axis=-1)                              # layers/type
+        mx = masked.max(axis=-1)                              # [B, T]
+    # prefix sums on the HOST: numpy's sequential cumsum is the exact
+    # arithmetic of the dp oracle (see _jax_hetero_stage1's note)
+    cum = np.cumsum(masked, axis=-1)                          # [B, T, L]
+    pref = np.where(valid_l[:, None, :], cum, np.inf)
+    P = np.full((b_pad * n_types, n_pad + 1), np.inf)
+    P[:, 0] = 0.0
+    P[:, 1:] = pref.reshape(b_pad * n_types, n_pad)
+    kk = np.where(n_t > 0, np.minimum(counts_p, np.maximum(n_t, 1)), 1)
+    kk = np.maximum(kk, 1)
+    total_t = P[np.arange(b_pad * n_types),
+                np.repeat(n_lens_p, n_types)].reshape(b_pad, n_types)
+
+    # Per-(problem, type) solves: the global bottleneck is simply the MAX
+    # of the independent per-type optima (feasibility decomposes over
+    # types), so every row runs its OWN parametric search — the exact
+    # machinery (and jit cache) of batch_partition, one row per
+    # (problem, type).  Two row classes are CLOSED FORM and skip the
+    # bisection entirely (in chip co-design sweeps they are the
+    # majority — core counts are small):
+    #   kk == 1     → one segment: T* = total_t, starts = [0, …]
+    #   kk == n_t   → one layer per segment: T* = mx_t, starts = the
+    #                 type's layer positions on the full axis
+    # (kk = min(counts, n_t) never exceeds n_t, so these two plus the
+    # bisected 2 ≤ kk < n_t rows are exhaustive.)
+    rows = b_pad * n_types
+    net_r = np.arange(rows, dtype=np.int64)
+    n_arr_r = np.repeat(n_lens_p, n_types)
+    kk_r = kk.reshape(rows)
+    n_t_r = n_t.reshape(rows)
+    k_out = max(_K_MAX, int(kk_r.max()))
+    starts_r = np.broadcast_to(n_arr_r[:, None],
+                               (rows, k_out)).copy()
+
+    single = kk_r == 1
+    starts_r[single, 0] = 0
+
+    per_layer_rows = (~single) & (kk_r == n_t_r)
+    if per_layer_rows.any():
+        type_mask = ((tt[:, None, :] == np.arange(n_types)[None, :, None])
+                     & valid_l[:, None, :]).reshape(rows, n_pad)
+        sub = type_mask[per_layer_rows]
+        occ = np.cumsum(sub, axis=1)
+        for s in range(int(kk_r[per_layer_rows].max())):
+            hit = sub & (occ == s + 1)
+            pos = np.argmax(hit, axis=1)
+            has = hit.any(axis=1)
+            starts_r[np.flatnonzero(per_layer_rows)[has], s] = pos[has]
+
+    # kk == 2 is closed form too: with A_j = P[j] (non-decreasing) and
+    # B_j = P[n] − P[j] (non-increasing), T* = min_j max(A_j, B_j) sits at
+    # the predicate crossing A_j ≤ B_j — one vectorised binary search per
+    # row, then the two candidate cuts around it.  Same prefix-difference
+    # arithmetic as the dp oracle, so still exact.
+    halves = np.flatnonzero(~single & ~per_layer_rows & (kk_r == 2))
+    if halves.size:
+        net_h, n_h = net_r[halves], n_arr_r[halves]
+        tot_h = P[net_h, n_h]
+        lo_j = np.ones(halves.size, dtype=np.int64)
+        hi_j = np.maximum(n_h - 1, 1)
+        steps = int(np.ceil(np.log2(P.shape[1]))) + 1
+        for _ in range(steps):
+            mid = (lo_j + hi_j + 1) >> 1
+            ok = P[net_h, mid] <= tot_h - P[net_h, mid]
+            lo_j = np.where(ok, mid, lo_j)
+            hi_j = np.where(ok, hi_j, mid - 1)
+        j0 = np.clip(lo_j, 1, np.maximum(n_h - 1, 1))
+        j1 = np.clip(lo_j + 1, 1, np.maximum(n_h - 1, 1))
+        m0 = np.maximum(P[net_h, j0], tot_h - P[net_h, j0])
+        m1 = np.maximum(P[net_h, j1], tot_h - P[net_h, j1])
+        cut = np.where(m0 <= m1, j0, j1)
+        starts_r[halves, 0] = 0
+        starts_r[halves, 1] = cut
+
+    need = np.flatnonzero(~single & ~per_layer_rows & (kk_r > 2))
+    if need.size:
+        lb = np.maximum(mx, total_t / kk).reshape(-1)[need]
+        lo_n = np.nextafter(lb, -np.inf)
+        hi_n = ((total_t / kk + mx).reshape(-1)[need]) * (1.0 + 1e-12)
+        net_n, n_arr_n, kk_n = net_r[need], n_arr_r[need], kk_r[need]
+        k_mx = int(kk_n.max())
+        if use_jax:
+            r_pad = _bucketed(need.size, _ROW_BUCKET)
+            pad = r_pad - need.size
+            netp = np.concatenate([net_n, np.zeros(pad, np.int64)])
+            n_ap = np.concatenate([n_arr_n,
+                                   np.full(pad, n_arr_r[0], np.int64)])
+            kkp = np.concatenate([kk_n, np.ones(pad, np.int64)])
+            lop = np.concatenate([lo_n, np.zeros(pad)])
+            hip = np.concatenate([hi_n, np.ones(pad)])
+            from jax.experimental import enable_x64
+            with enable_x64():
+                bs_steps = int(np.ceil(np.log2(n_pad + 1))) + 1
+                starts_r[need, :k_mx] = np.asarray(_jax_solver()(
+                    P, netp, n_ap, kkp, lop, hip, k_mx,
+                    bs_steps))[:need.size]
+        else:
+            lo_b, hi_b = lo_n.copy(), hi_n.copy()
+            for _ in range(_BISECT_ITERS):
+                mid = 0.5 * (lo_b + hi_b)
+                feas = _batch_greedy(P, net_n, n_arr_n, mid, kk_n, k_mx,
+                                     exact=False)
+                hi_b = np.where(feas, mid, hi_b)
+                lo_b = np.where(feas, lo_b, mid)
+            st = _batch_greedy(P, net_n, n_arr_n, hi_b, kk_n, k_mx,
+                               exact=True)
+            starts_r[need, :st.shape[1]] = st
+
+    k_out = starts_r.shape[1]
+    ends_r = np.concatenate(
+        [starts_r[:, 1:], np.zeros((rows, 1), starts_r.dtype)], axis=1)
+    ends_r[:, -1] = n_arr_r
+    ends_r = np.minimum(np.maximum(ends_r, starts_r), n_arr_r[:, None])
+    loads_r = P[net_r[:, None], ends_r] - P[net_r[:, None], starts_r]
+    loads_r = np.where(np.isfinite(loads_r), loads_r, 0.0)
+
+    loads = loads_r.reshape(b_pad, n_types, k_out)[:n_b]
+    bottleneck = loads.max(axis=(1, 2))
+    return BatchHeteroResult(
+        counts=np.asarray(cnts), n_layers=n_lens,
+        layer_type=tt[:n_b], starts=starts_r.reshape(
+            b_pad, n_types, k_out)[:n_b],
+        seg_counts=kk[:n_b], loads=loads,
+        bottleneck=bottleneck, total=total_t[:n_b].sum(axis=1))

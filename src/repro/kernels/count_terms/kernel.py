@@ -21,6 +21,13 @@ from the mapping-unique rows (the two-level dedup of the jax path): a
 cross-block gather is awkward inside a Pallas grid, and the mapping is
 cheap elementwise integer math — recomputing it keeps the kernel a pure
 tile program.
+
+The one-hot segment matmul is OPTIONAL: the per-layer variant
+(:func:`count_layers_kernel`, backing the engine's ``per_layer=True``
+path) runs the same tile program without the reduction, each grid step
+writing its ``[N_TERMS, block_u, block_l]`` partials straight into its
+own slot of the ``[N_TERMS, n_u, L]`` output — still no per-term
+intermediates beyond the one live tile.
 """
 
 from __future__ import annotations
@@ -102,3 +109,49 @@ def count_terms_kernel(cfg: jax.Array, lay: jax.Array, seg: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((N_TERMS, n_u, n_net), cfg.dtype),
         interpret=interpret,
     )(cfg, lay, seg)
+
+
+def _count_layers_kernel(cfg_ref, lay_ref, o_ref):
+    """Per-layer grid step: identical term math, NO segment reduction.
+
+    cfg_ref: [len(CFG_COLUMNS), block_u]   count-unique config columns
+    lay_ref: [len(LAYER_FIELDS), block_l]  layer-struct columns
+    o_ref:   [N_TERMS, block_u, block_l]   this step's per-layer partials
+    """
+    cfg = {k: cfg_ref[i, :][:, None] for i, k in enumerate(CFG_COLUMNS)}
+    lay = {k: lay_ref[i, :][None, :] for i, k in enumerate(LAYER_FIELDS)}
+
+    terms = energymodel._count_terms(jnp, cfg, lay)
+    block_u = cfg[CFG_COLUMNS[0]].shape[0]
+    block_l = lay[LAYER_FIELDS[0]].shape[1]
+    o_ref[...] = jnp.stack([
+        jnp.broadcast_to(t, (block_u, block_l)) for t in terms])
+
+
+def count_layers_kernel(cfg: jax.Array, lay: jax.Array, *,
+                        block_u: int = 128, block_l: int = 128,
+                        interpret: bool = True) -> jax.Array:
+    """cfg: [n_cfg_cols, n_u]; lay: [n_lay_cols, L] → [N_TERMS, n_u, L].
+
+    The per-layer twin of :func:`count_terms_kernel`: the one-hot segment
+    operand and the in-place accumulation disappear — every
+    (row-block, layer-block) step owns a disjoint output block, so the
+    grid order is free.  Pad layers (``_PAD_LAYER_ROW``) produce exactly
+    zero in every term, so layer padding needs no masking here either.
+    """
+    n_cols, n_u = cfg.shape
+    n_lay, l_tot = lay.shape
+    assert n_u % block_u == 0, (n_u, block_u)
+    assert l_tot % block_l == 0, (l_tot, block_l)
+    return pl.pallas_call(
+        _count_layers_kernel,
+        grid=(n_u // block_u, l_tot // block_l),
+        in_specs=[
+            pl.BlockSpec((n_cols, block_u), lambda i, l: (0, i)),
+            pl.BlockSpec((n_lay, block_l), lambda i, l: (0, l)),
+        ],
+        out_specs=pl.BlockSpec((N_TERMS, block_u, block_l),
+                               lambda i, l: (0, i, l)),
+        out_shape=jax.ShapeDtypeStruct((N_TERMS, n_u, l_tot), cfg.dtype),
+        interpret=interpret,
+    )(cfg, lay)

@@ -15,7 +15,34 @@ import jax.numpy as jnp
 
 from repro.core.energymodel import _PAD_LAYER_ROW
 from .kernel import (CFG_COLUMNS, LAYER_FIELDS, N_TERMS,
-                     count_terms_kernel)
+                     count_layers_kernel, count_terms_kernel)
+
+
+def _pad_operands(cfg_u, lay, block_u: int, block_l: int):
+    """Stack the struct-of-arrays operands into the kernel's 2-D layout
+    and pad both tiled axes to block multiples (config rows repeat row 0
+    — a benign valid config; layer columns get ``_PAD_LAYER_ROW``, whose
+    terms are exactly zero)."""
+    cfg = jnp.concatenate(
+        [jnp.asarray(cfg_u[k]).reshape(1, -1) for k in CFG_COLUMNS], axis=0)
+    laym = jnp.concatenate(
+        [jnp.asarray(lay[k]).reshape(1, -1) for k in LAYER_FIELDS], axis=0)
+    n_u = cfg.shape[1]
+    l_tot = laym.shape[1]
+
+    bu = min(block_u, max(8, n_u))
+    pad_u = (-n_u) % bu
+    if pad_u:
+        cfg = jnp.concatenate([cfg, jnp.broadcast_to(
+            cfg[:, :1], (cfg.shape[0], pad_u))], axis=1)
+    bl = min(block_l, l_tot)
+    pad_l = (-l_tot) % bl
+    if pad_l:
+        pad_col = np.array([[_PAD_LAYER_ROW[k]] for k in LAYER_FIELDS])
+        laym = jnp.concatenate([laym, jnp.broadcast_to(
+            jnp.asarray(pad_col, laym.dtype),
+            (laym.shape[0], pad_l))], axis=1)
+    return cfg, laym.astype(cfg.dtype), n_u, l_tot, bu, bl, pad_l
 
 
 def _segment_onehot(segments, l_pad: int) -> np.ndarray:
@@ -46,29 +73,29 @@ def count_term_sums(cfg_u, lay, segments, *, block_u: int = 128,
     opting in via ``interpret=False`` is for hosts where a lowering has
     been validated.
     """
-    cfg = jnp.concatenate(
-        [jnp.asarray(cfg_u[k]).reshape(1, -1) for k in CFG_COLUMNS], axis=0)
-    laym = jnp.concatenate(
-        [jnp.asarray(lay[k]).reshape(1, -1) for k in LAYER_FIELDS], axis=0)
-    n_u = cfg.shape[1]
-    l_tot = laym.shape[1]
-
-    bu = min(block_u, max(8, n_u))
-    pad_u = (-n_u) % bu
-    if pad_u:
-        # repeat row 0 — a benign valid config, sliced off below
-        cfg = jnp.concatenate([cfg, jnp.broadcast_to(
-            cfg[:, :1], (cfg.shape[0], pad_u))], axis=1)
-    bl = min(block_l, l_tot)
-    pad_l = (-l_tot) % bl
-    if pad_l:
-        pad_col = np.array([[_PAD_LAYER_ROW[k]] for k in LAYER_FIELDS])
-        laym = jnp.concatenate([laym, jnp.broadcast_to(
-            jnp.asarray(pad_col, laym.dtype),
-            (laym.shape[0], pad_l))], axis=1)
+    cfg, laym, n_u, l_tot, bu, bl, pad_l = _pad_operands(
+        cfg_u, lay, block_u, block_l)
     seg = jnp.asarray(_segment_onehot(segments, l_tot + pad_l), cfg.dtype)
 
-    out = count_terms_kernel(cfg, laym.astype(cfg.dtype), seg,
+    out = count_terms_kernel(cfg, laym, seg,
                              block_u=bu, block_l=bl, interpret=interpret)
     out = out[:, :n_u, :]
+    return tuple(out[i] for i in range(N_TERMS))
+
+
+def count_term_layers(cfg_u, lay, *, block_u: int = 128,
+                      block_l: int = 128, interpret: bool = True):
+    """Fused mapping → 14 PER-LAYER count terms (no segment reduction).
+
+    Same operands as :func:`count_term_sums` minus ``segments``; returns
+    a 14-tuple of [n_u, L] float64 arrays, drop-in for
+    ``energymodel._term_layers_body``'s output (config-independent terms
+    arrive per-row, which the consumer treats as already gathered).  The
+    engine's ``per_layer=True`` path routes here when
+    ``backend="pallas"``."""
+    cfg, laym, n_u, l_tot, bu, bl, _ = _pad_operands(
+        cfg_u, lay, block_u, block_l)
+    out = count_layers_kernel(cfg, laym, block_u=bu, block_l=bl,
+                              interpret=interpret)
+    out = out[:, :n_u, :l_tot]
     return tuple(out[i] for i in range(N_TERMS))

@@ -25,3 +25,13 @@ def count_term_sums_ref(cfg_u, lay, segments) -> jnp.ndarray:
         s = jnp.stack([t[..., a:b].sum(-1) for a, b in segments], axis=-1)
         out.append(jnp.broadcast_to(s, (n_u, len(segments))))
     return jnp.stack(out)
+
+
+def count_term_layers_ref(cfg_u, lay) -> jnp.ndarray:
+    """Per-layer oracle: the raw [N_TERMS, n_u, L] term stack (the
+    config-independent terms broadcast along the unique axis), i.e. the
+    segment-reduction-free twin of :func:`count_term_sums_ref`."""
+    terms = energymodel._count_terms(jnp, cfg_u, lay)
+    n_u = cfg_u[next(iter(cfg_u))].shape[0]
+    l_tot = lay[next(iter(lay))].shape[-1]
+    return jnp.stack([jnp.broadcast_to(t, (n_u, l_tot)) for t in terms])

@@ -7,7 +7,9 @@ import numpy as np
 import pytest
 
 from repro.core import accelerator, energymodel, topology
-from repro.kernels.count_terms import count_term_sums, count_term_sums_ref
+from repro.kernels.count_terms import (count_term_layers,
+                                       count_term_layers_ref,
+                                       count_term_sums, count_term_sums_ref)
 from repro.kernels.count_terms.kernel import CFG_COLUMNS, LAYER_FIELDS
 
 NETS = ("AlexNet", "VGG16", "MobileNet")
@@ -51,6 +53,42 @@ def test_pallas_matches_ref_odd_blocks(networks):
         arrays=((12, 14), (16, 16), (64, 64)), gb_psum_kb=(13, 54, 216),
         gb_ifmap_kb=(27,))
     _pallas_vs_ref(*_kernel_inputs(grid, networks))
+
+
+def test_per_layer_kernel_matches_ref(networks):
+    """The segment-matmul-free per-layer variant ≡ the raw [14, n_u, L]
+    term stack, and summing its segments reproduces count_term_sums."""
+    from jax.experimental import enable_x64
+    cfg_u, lay, segments = _kernel_inputs(
+        accelerator.ConfigGrid.product(
+            arrays=((12, 14), (16, 16), (64, 64)),
+            gb_psum_kb=(13, 54, 216), gb_ifmap_kb=(27,)), networks)
+    with enable_x64():
+        ref = np.asarray(count_term_layers_ref(cfg_u, lay))
+        out = np.stack([np.asarray(o)
+                        for o in count_term_layers(cfg_u, lay)])
+        sums = np.stack([np.asarray(o)
+                         for o in count_term_sums(cfg_u, lay, segments)])
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(out, ref, rtol=1e-12, atol=0.0)
+    seg_sums = np.stack([out[..., a:b].sum(-1) for a, b in segments],
+                        axis=-1)
+    np.testing.assert_allclose(seg_sums, sums, rtol=1e-12)
+
+
+def test_per_layer_kernel_odd_blocks(networks):
+    """Layer/row paddings of the per-layer kernel slice off cleanly."""
+    from jax.experimental import enable_x64
+    grid = accelerator.ConfigGrid.product(
+        arrays=((16, 16),), gb_psum_kb=(13, 27, 54), gb_ifmap_kb=(27, 54))
+    cfg_u, lay, _ = _kernel_inputs(grid, {"AlexNet":
+                                          networks["AlexNet"]})
+    with enable_x64():
+        ref = np.asarray(count_term_layers_ref(cfg_u, lay))
+        out = np.stack([np.asarray(o)
+                        for o in count_term_layers(cfg_u, lay,
+                                                   block_u=4, block_l=8)])
+    np.testing.assert_allclose(out, ref, rtol=1e-12, atol=0.0)
 
 
 def test_pallas_backend_matches_jax_engine_5400_subsample(networks):

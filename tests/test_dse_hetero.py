@@ -1,9 +1,11 @@
-"""DSE (Tables 1–5) and the heterogeneous chip scheme (§IV.A)."""
+"""DSE (Tables 1–5), the heterogeneous chip scheme (§IV.A), and the
+batched per-layer chip + schedule co-design (§IV.A × §IV.B)."""
 
 import numpy as np
 import pytest
 
-from repro.core import dse, hetero, topology
+from repro.core import accelerator, dse, energymodel, hetero, partition, \
+    topology
 
 
 @pytest.fixture(scope="module")
@@ -65,6 +67,97 @@ def test_chip_design_covers_everything(sweeps):
     for name, s in sav.items():
         assert s["energy_saved"] >= -1e-9
         assert s["edp_saved"] >= -1e-9
+
+
+# ---------------------------------------------------------------------------
+# co_design: batched chip + per-layer schedule search
+# ---------------------------------------------------------------------------
+
+CODESIGN_NETS = ("AlexNet", "VGG16", "MobileNet", "GoogleNet")
+
+
+@pytest.fixture(scope="module")
+def codesign_result():
+    nets = {n: topology.get_network(n) for n in CODESIGN_NETS}
+    grid = accelerator.ConfigGrid.product()
+    cd = hetero.co_design(grid, nets, m_cores=4, max_types=3, pool_size=5)
+    return grid, nets, cd
+
+
+def test_co_design_structure(codesign_result):
+    grid, nets, cd = codesign_result
+    assert sum(cd.core_counts) == cd.m_cores == 4
+    assert 1 <= len(cd.core_types) <= 3
+    assert all(0 <= c < grid.n for c in cd.core_types)
+    assert set(cd.core_types) <= set(cd.pool)
+    assert set(cd.schedules) == set(nets)
+    # candidate enumeration covers every type-subset × composition once
+    assert len(cd.chip_types) == len(set(
+        (t, c) for t, c in zip(cd.chip_types, cd.chip_counts)))
+    assert cd.n_chips == len(cd.chip_scores)
+    assert cd.summary(grid)                  # label rendering works
+
+
+def test_co_design_beats_or_matches_homogeneous(codesign_result):
+    """The chip enumeration contains every single-type chip, so the
+    winner can never score worse than the best homogeneous candidate."""
+    _, _, cd = codesign_result
+    assert cd.score <= cd.homogeneous_score + 1e-12
+    assert cd.score == pytest.approx(float(cd.chip_scores.min()))
+
+
+def test_co_design_schedules_match_oracle(codesign_result):
+    """Every winning-chip schedule reproduces the scalar oracle exactly,
+    and its per-layer energies/latencies tie back to the engine's
+    per-layer tensors."""
+    grid, nets, cd = codesign_result
+    names = list(nets)
+    lens = energymodel.network_layer_counts(nets)
+    e_l, t_l = energymodel.evaluate_networks(
+        grid.take(cd.core_types), nets, use_jax=False, per_layer=True)
+    for j, nm in enumerate(names):
+        lat = t_l[:, j, :lens[j]]
+        oracle = partition.schedule_hetero_oracle(lat, cd.core_counts)
+        s = cd.schedules[nm]
+        assert s.bottleneck == oracle["bottleneck"]
+        assert cd.latency[nm] == oracle["bottleneck"]
+        assert tuple(s.layer_type) == tuple(oracle["layer_type"])
+        want_e = e_l[oracle["layer_type"], j,
+                     np.arange(lens[j])].sum()
+        assert cd.energy[nm] == pytest.approx(want_e, rel=1e-12)
+        assert cd.edp(nm) == pytest.approx(want_e * s.bottleneck,
+                                           rel=1e-12)
+
+
+def test_co_design_metric_variants():
+    nets = {n: topology.get_network(n) for n in ("AlexNet", "MobileNet")}
+    grid = accelerator.ConfigGrid.product(
+        arrays=((16, 16), (32, 32), (64, 64)), gb_psum_kb=(13, 54, 216),
+        gb_ifmap_kb=(27, 108))
+    for metric in ("edp", "energy", "latency"):
+        cd = hetero.co_design(grid, nets, m_cores=2, max_types=2,
+                              pool_size=3, metric=metric)
+        assert cd.metric == metric
+        assert sum(cd.core_counts) == 2
+        assert cd.score <= cd.homogeneous_score + 1e-12
+
+
+def test_codesign_problems_shapes():
+    nets = {n: topology.get_network(n) for n in ("AlexNet", "VGG16")}
+    grid = accelerator.ConfigGrid.product()
+    probs = hetero.codesign_problems(grid, nets, 3, max_types=2,
+                                     pool_size=3)
+    n_net = 2
+    assert probs.n_problems == len(probs.chips) * n_net
+    assert probs.lat_dense.shape[0] == probs.n_problems
+    assert probs.counts.shape == (probs.n_problems,
+                                  probs.lat_dense.shape[1])
+    assert len(probs.pool) == 3 == len(set(probs.pool))
+    # per-problem views agree with the dense tensor
+    lats = probs.lats
+    for i in (0, probs.n_problems - 1):
+        np.testing.assert_array_equal(
+            lats[i], probs.lat_dense[i, :, :probs.n_layers_b[i]])
 
 
 def test_cross_penalty_nonnegative_own_core(sweeps):

@@ -1,0 +1,231 @@
+"""Batched heterogeneous layer→core schedule solver
+(`partition.batch_schedule_hetero`): exactness against the scalar oracle
+(per-layer argmin + per-type dp), against a BRUTE-FORCE segmentation
+enumeration on small instances, schedule validity, and the degeneracy to
+`batch_partition` when there is a single core type."""
+
+import numpy as np
+import pytest
+
+from repro.core import partition
+
+# Guarded per-test (not module-level importorskip) so the deterministic
+# oracle/degeneracy tests below always run.
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAS_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    _HAS_HYPOTHESIS = False
+
+    def _skip_property(f):
+        return pytest.mark.skip(
+            reason="property test needs hypothesis "
+            "(pip install -r requirements-dev.txt)")(f)
+
+
+def _brute_force_hetero(lat, counts):
+    """Brute-force oracle within the solver's semantics: per-layer argmin
+    type assignment, then EVERY contiguous segmentation of each type's
+    subsequence enumerated (`brute_force_partition`), bottleneck = max
+    over types.  ≤8 layers / ≤3 types keeps this trivial."""
+    lat = np.asarray(lat, dtype=np.float64)
+    counts = np.asarray(counts, dtype=np.int64)
+    cost = np.where((counts > 0)[:, None], lat, np.inf)
+    tt = np.argmin(cost, axis=0)
+    bottleneck = 0.0
+    for t in range(lat.shape[0]):
+        sub = lat[t, tt == t]
+        if counts[t] <= 0 or sub.size == 0:
+            continue
+        p = partition.brute_force_partition(sub, int(counts[t]))
+        bottleneck = max(bottleneck, p.pipeline_latency)
+    return bottleneck
+
+
+def _assert_schedule_valid(s, lat, counts):
+    lat = np.asarray(lat, dtype=np.float64)
+    counts = np.asarray(counts, dtype=np.int64)
+    assert s.n_cores == counts.sum()
+    assert len(s.layer_type) == len(s.layer_core) == lat.shape[1]
+    # per-type core budget respected; core/type bookkeeping consistent
+    used = {}
+    for ty, co in zip(s.layer_type, s.layer_core):
+        assert counts[ty] > 0
+        assert s.types[co] == ty
+        used.setdefault(ty, set()).add(co)
+    for ty, cores in used.items():
+        assert len(cores) <= counts[ty]
+    # loads recompute from the assignment; bottleneck = max load
+    loads = np.zeros(len(s.types))
+    for l in range(lat.shape[1]):
+        loads[s.layer_core[l]] += lat[s.layer_type[l], l]
+    np.testing.assert_allclose(loads, s.loads, rtol=1e-12, atol=1e-12)
+    assert s.bottleneck == pytest.approx(max(s.loads))
+    # contiguity: each core's layers form one contiguous run of its
+    # type's subsequence (layer order within a type never interleaves)
+    for ty, cores in used.items():
+        seq = [s.layer_core[l] for l in range(lat.shape[1])
+               if s.layer_type[l] == ty]
+        assert seq == sorted(seq)
+
+
+if _HAS_HYPOTHESIS:
+    lat_matrix = st.integers(1, 3).flatmap(
+        lambda t: st.integers(1, 8).flatmap(
+            lambda n: st.lists(
+                st.lists(st.floats(0.01, 100.0), min_size=n, max_size=n),
+                min_size=t, max_size=t)))
+
+    def _bruteforce_property(f):
+        return settings(max_examples=150, deadline=None)(
+            given(lat_matrix, st.data())(f))
+
+    def _degeneracy_property(f):
+        return settings(max_examples=50, deadline=None)(given(
+            st.lists(st.lists(st.floats(0.01, 50.0), min_size=2,
+                              max_size=12), min_size=1, max_size=5),
+            st.integers(1, 5))(f))
+else:                                                  # pragma: no cover
+    _bruteforce_property = _degeneracy_property = _skip_property
+
+
+@_bruteforce_property
+def test_matches_bruteforce_oracle(lat, data):
+    """The batched solver (both backends) lands EXACTLY on the brute-force
+    optimum on every random ≤(3 types × 8 layers) instance."""
+    lat = np.asarray(lat)
+    counts = np.asarray([data.draw(st.integers(0, 3))
+                         for _ in range(lat.shape[0])])
+    if counts.sum() == 0:
+        counts[0] = 1
+    want = _brute_force_hetero(lat, counts)
+    oracle = partition.schedule_hetero_oracle(lat, counts)
+    assert oracle["bottleneck"] == pytest.approx(want, rel=1e-12)
+    for use_jax in (False, True):
+        res = partition.batch_schedule_hetero([lat], [counts],
+                                              use_jax=use_jax)
+        assert res.bottleneck[0] == oracle["bottleneck"], use_jax
+        _assert_schedule_valid(res.schedule(0), lat, counts)
+
+
+@_degeneracy_property
+def test_single_type_degenerates_to_batch_partition(lat_groups, k):
+    """T=1 with k cores ≡ the homogeneous batch_partition pipeline."""
+    res = partition.batch_schedule_hetero(
+        [np.asarray(l)[None, :] for l in lat_groups],
+        [[k]] * len(lat_groups), use_jax=False)
+    bp = partition.batch_partition(lat_groups, k, use_jax=False)
+    for i, lat in enumerate(lat_groups):
+        assert res.bottleneck[i] == bp[i][k].pipeline_latency
+        assert res.speedup[i] == pytest.approx(bp[i][k].speedup)
+
+
+def test_bruteforce_oracle_deterministic_seeded():
+    """Non-hypothesis twin of the property test (always runs): 120 seeded
+    random ≤(3 × 8) instances vs the brute-force enumeration."""
+    rng = np.random.default_rng(123)
+    for _ in range(120):
+        t = int(rng.integers(1, 4))
+        n = int(rng.integers(1, 9))
+        lat = rng.uniform(0.01, 100.0, size=(t, n))
+        counts = rng.integers(0, 4, size=t)
+        if counts.sum() == 0:
+            counts[int(rng.integers(t))] = 1
+        want = _brute_force_hetero(lat, counts)
+        for use_jax in (False, True):
+            res = partition.batch_schedule_hetero([lat], [counts],
+                                                  use_jax=use_jax)
+            assert res.bottleneck[0] == pytest.approx(want, rel=1e-12)
+            _assert_schedule_valid(res.schedule(0), lat, counts)
+
+
+def test_batched_many_problems_both_backends():
+    """A mixed batch (ragged T and L, zero-count padding types) solves to
+    the oracle on every problem, with identical results across backends."""
+    rng = np.random.default_rng(7)
+    problems = []
+    for _ in range(40):
+        t = int(rng.integers(1, 4))
+        n = int(rng.integers(1, 30))
+        lat = rng.uniform(0.01, 10.0, size=(t, n))
+        counts = rng.integers(0, 4, size=t)
+        if counts.sum() == 0:
+            counts[int(rng.integers(t))] = 2
+        problems.append((lat, counts))
+    lats = [p[0] for p in problems]
+    counts = np.zeros((len(problems), 3), dtype=np.int64)
+    for i, (lat, cn) in enumerate(problems):
+        counts[i, :cn.shape[0]] = cn
+    res_np = partition.batch_schedule_hetero(lats, counts, use_jax=False)
+    res_jx = partition.batch_schedule_hetero(lats, counts, use_jax=True)
+    for i, (lat, cn) in enumerate(problems):
+        want = partition.schedule_hetero_oracle(lat, cn)["bottleneck"]
+        assert res_np.bottleneck[i] == want, i
+        assert res_jx.bottleneck[i] == want, i
+    w = min(res_np.layer_type.shape[1], res_jx.layer_type.shape[1])
+    np.testing.assert_array_equal(res_np.layer_type[:, :w],
+                                  res_jx.layer_type[:, :w])
+
+
+def test_layer_argmin_assignment_and_ties():
+    """Stage 1 semantics: every layer on the fastest AVAILABLE type, ties
+    broken toward the lower type index."""
+    lat = np.array([[2.0, 5.0, 3.0],
+                    [2.0, 1.0, 9.0],
+                    [9.0, 9.0, 1.0]])
+    res = partition.batch_schedule_hetero([lat], [[1, 1, 1]],
+                                          use_jax=False)
+    assert tuple(res.schedule(0).layer_type) == (0, 1, 2)   # tie → type 0
+    # type 0 unavailable: its layers move to the next-fastest type
+    res = partition.batch_schedule_hetero([lat], [[0, 1, 1]],
+                                          use_jax=False)
+    assert tuple(res.schedule(0).layer_type) == (1, 1, 2)
+
+
+def test_more_cores_than_layers_and_idle_cores():
+    lat = np.array([[4.0, 6.0]])
+    res = partition.batch_schedule_hetero([lat], [[5]], use_jax=False)
+    s = res.schedule(0)
+    assert s.n_cores == 5
+    assert s.bottleneck == pytest.approx(6.0)       # one layer per core
+    assert sorted(s.loads, reverse=True)[:2] == [6.0, 4.0]
+    assert sum(1 for x in s.loads if x == 0.0) == 3  # idle cores are real
+
+
+def test_input_validation():
+    with pytest.raises(ValueError):
+        partition.batch_schedule_hetero([np.zeros((1, 0))], [[1]])
+    with pytest.raises(ValueError):
+        partition.batch_schedule_hetero([np.ones((2, 3))], [[0, 0]])
+    with pytest.raises(ValueError):
+        partition.schedule_hetero_oracle(np.ones((1, 3)), [0])
+    assert len(partition.batch_schedule_hetero([], [])) == 0
+
+
+def test_rejects_counts_for_phantom_types():
+    """A positive count for a type slot with no latency row would hand
+    every layer to a phantom zero-latency type — both the oracle and the
+    batch solver (list and dense inputs) must reject it; zero-count
+    padding slots stay legal."""
+    lat = np.array([[1.0, 2.0, 3.0]])
+    with pytest.raises(ValueError):
+        partition.batch_schedule_hetero([lat], [[1, 1]])
+    with pytest.raises(ValueError):
+        partition.schedule_hetero_oracle(lat, [1, 1])
+    # ragged batch: the wide counts row only fits the 2-type problem
+    with pytest.raises(ValueError):
+        partition.batch_schedule_hetero(
+            [lat, np.ones((2, 4))], np.array([[1, 2], [1, 1]]))
+    # zero-count padding beyond the latency rows is fine
+    res = partition.batch_schedule_hetero([lat], [[2, 0]])
+    assert res.bottleneck[0] == 3.0
+    assert partition.schedule_hetero_oracle(lat, [2, 0])["bottleneck"] \
+        == 3.0
+
+
+def test_large_counts_fall_back_to_numpy():
+    """counts beyond the jitted unroll (_K_MAX) still solve exactly."""
+    lat = np.abs(np.sin(np.arange(40.0)))[None, :] + 0.1
+    res = partition.batch_schedule_hetero([lat], [[12]])
+    want = partition.dp_partition(lat[0], 12).pipeline_latency
+    assert res.bottleneck[0] == want
