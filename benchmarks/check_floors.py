@@ -28,6 +28,11 @@ def _level(payload: dict, name: str) -> dict | None:
     return None
 
 
+#: Top-level payload sections that carry their own floor dicts (the
+#: per-grid-size ``levels`` are handled separately by name).
+FLOOR_SECTIONS = ("codesign", "codesign_mega")
+
+
 def check_payload(payload: dict, floors: dict, label: str) -> list:
     """→ list of violation strings for one payload vs one floor set."""
     problems = []
@@ -41,13 +46,13 @@ def check_payload(payload: dict, floors: dict, label: str) -> list:
             if got is None or got < floor:
                 problems.append(
                     f"{label}: level {name} {key}={got} < floor {floor}")
-    cod_floors = floors.get("codesign", {})
-    cod = payload.get("codesign") or {}
-    for key, floor in cod_floors.items():
-        got = cod.get(key)
-        if got is None or got < floor:
-            problems.append(
-                f"{label}: codesign {key}={got} < floor {floor}")
+    for section in FLOOR_SECTIONS:
+        sec = payload.get(section) or {}
+        for key, floor in floors.get(section, {}).items():
+            got = sec.get(key)
+            if got is None or got < floor:
+                problems.append(
+                    f"{label}: {section} {key}={got} < floor {floor}")
     return problems
 
 
@@ -66,6 +71,7 @@ def check_parity(payload: dict, ceiling: float, label: str) -> list:
         scan(lv, f"level {lv.get('name')}")
     scan(payload.get("partition") or {}, "partition")
     scan(payload.get("codesign") or {}, "codesign")
+    scan(payload.get("codesign_mega") or {}, "codesign_mega")
     return problems
 
 
@@ -74,6 +80,9 @@ def main() -> None:
     ap.add_argument("--quick-json", default="BENCH_dse.quick.json")
     ap.add_argument("--committed", default="BENCH_dse.json")
     ap.add_argument("--floors", default="benchmarks/floors.json")
+    ap.add_argument("--report", default=None,
+                    help="also write the pass/fail lines to this file "
+                         "(uploaded as a CI artifact)")
     args = ap.parse_args()
 
     floors = json.loads(Path(args.floors).read_text())
@@ -93,12 +102,16 @@ def main() -> None:
         problems.append(f"quick payload {quick_path} not found "
                         "(run `python -m benchmarks.run --quick` first)")
 
+    lines = ([f"FLOOR CHECK FAILED: {p}" for p in problems]
+             or ["floor checks passed "
+                 f"(committed={args.committed}, quick={args.quick_json})"])
+    if args.report:
+        Path(args.report).write_text("\n".join(lines) + "\n")
     if problems:
-        for p in problems:
-            print(f"FLOOR CHECK FAILED: {p}", file=sys.stderr)
+        for line in lines:
+            print(line, file=sys.stderr)
         raise SystemExit(1)
-    print("floor checks passed "
-          f"(committed={args.committed}, quick={args.quick_json})")
+    print(lines[0])
 
 
 if __name__ == "__main__":

@@ -67,6 +67,29 @@ def main():
               f"({len(set(s.layer_type))} type(s)), pipeline speedup "
               f"{s.speedup:.2f}x, {moves} core hand-offs")
 
+    # --- latency-bound Pareto sweep: one compiled call, ALL deadlines ----
+    # the streamed problem set (boundary sets from one chunked pass, no
+    # dense [n_cfg, n_net] matrices) feeds the same batched solve, then
+    # every chip is scored against the whole deadline grid at once
+    print("\n=== latency-bound Pareto co-design (streamed pool) ===")
+    probs = hetero.codesign_problems_streaming(grid, nets, m_cores=4,
+                                               max_types=3, pool_size=6,
+                                               chunk_size=50)
+    pc = hetero.pareto_codesign(probs, n_deadlines=8)
+    print(f"{pc.n_chips} chips x {len(nets)} networks x "
+          f"{pc.deadlines.size} deadlines (x min single-core latency):")
+    for di, (d, c) in enumerate(zip(pc.deadlines, pc.best_chip)):
+        if c < 0:
+            print(f"  deadline {d:.2f}: no chip feasible")
+        else:
+            print(f"  deadline {d:.2f}: chip {int(c)} "
+                  f"({pc.chip_summary(int(c), grid)}), "
+                  f"mean norm energy {pc.scores[int(c), di]:.3f}")
+    net = "ResNet50"
+    print(f"Pareto frontier for {net} (latency ns, energy pJ):")
+    for c, lat, en in pc.frontier(net)[:5]:
+        print(f"  chip {c}: latency {lat:.3e}, energy {en:.3e}")
+
     # --- Algorithm II on each group's core type ---------------------------
     # one batch_partition call solves every (network, k) split at once
     print("\n=== model parallelism on homogeneous cores (§IV.B) ===")

@@ -113,6 +113,23 @@ def layer_metrics(networks: Mapping[str, Sequence[Layer]],
                                          **kwargs)
 
 
+def stream_layer_grid(networks: Mapping[str, Sequence[Layer]],
+                      grid: ConfigGrid,
+                      **kwargs) -> "energymodel.LayerTopK":
+    """Streaming PER-LAYER sweep of an arbitrary ConfigGrid: one chunked
+    pass folds every chunk into on-device running reductions — per-network
+    top-k configs WITH their ``[n_layer]`` energy/latency rows, aggregate
+    and per-(network, layer) minima, and (with ``bound=``) the ≤bound
+    boundary candidate sets that
+    :func:`repro.core.hetero.codesign_problems_streaming` builds the
+    co-design pool from.  The ``[n_cfg, n_net, n_layer]`` tensors are
+    never materialised, so mega-scale grids stream at bounded memory.
+    Keyword arguments forward to
+    :func:`repro.core.energymodel.stream_layer_topk` (``topk``, ``bound``,
+    ``chunk_size``, ``shard``, ``metric``, ``use_jax``, ``backend``)."""
+    return energymodel.stream_layer_topk(grid, networks, **kwargs)
+
+
 def stream_grid(networks: Mapping[str, Sequence[Layer]],
                 grid: ConfigGrid,
                 **kwargs) -> "energymodel.StreamResult":

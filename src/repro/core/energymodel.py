@@ -1174,10 +1174,13 @@ def _stream_reduce_body(xp, metric, topk, e, t, base, m_valid, bound,
     idx = xp.broadcast_to((base + rows)[:, None], v.shape)
     all_v = xp.concatenate([top_v, v], axis=0)
     all_i = xp.concatenate([top_i, idx], axis=0)
-    if xp is np:
-        order = np.argsort(all_v, axis=0, kind="stable")[:topk]
-    else:                      # jax sorts are stable by construction
-        order = xp.argsort(all_v, axis=0)[:topk]
+    # Ties at the top-k boundary break by LOWER flat config index — NOT by
+    # fold order (a stable sort on the value alone keeps whichever tied row
+    # entered the state first, which depends on the chunk size).  Lexsort
+    # on (value, index) makes the streamed top-k chunk-size-invariant; the
+    # +inf initial state rows carry index -1, so they still sort ahead of
+    # masked padding rows and the sentinel survives under-filled states.
+    order = xp.lexsort((all_i, all_v), axis=0)[:topk]
     top_v = xp.take_along_axis(all_v, order, axis=0)
     top_i = xp.take_along_axis(all_i, order, axis=0)
     mask = v <= min_m[None, :] * (1.0 + bound)
@@ -1334,19 +1337,31 @@ def stream_networks(grid: ConfigGrid,
 
 
 # ---------------------------------------------------------------------------
-# Streaming per-layer top-k: the per-layer tensors of a mega-scale sweep are
-# far too large to keep ([n_cfg, n_net, n_layer] at 49k points × 18 nets ×
-# 256 layers ≈ 1.8 GB each), but the co-design consumers only ever need the
-# per-layer rows of the few near-optimal configs per network.  This variant
-# evaluates chunk by chunk in per-layer mode and folds each chunk into a
-# running per-network top-k that KEEPS the [n_layer] energy/latency rows of
-# the current top-k configs only.
+# Streaming per-layer reduction: the per-layer tensors of a mega-scale sweep
+# are far too large to keep ([n_cfg, n_net, n_layer] at 49k points × 18 nets
+# × 256 layers ≈ 1.8 GB each), but the co-design consumers only ever need
+# the per-layer rows of the few near-optimal configs per network plus the
+# ≤bound boundary candidate sets.  This variant evaluates chunk by chunk in
+# per-layer mode and folds each chunk ON DEVICE into (a) a running
+# per-network top-k that KEEPS the [n_layer] energy/latency rows of the
+# current top-k configs only, (b) running per-network minima of energy /
+# latency / EDP / the selected metric, (c) running per-(network, layer)
+# metric minima, and (d) — with ``bound=`` — the ≤bound threshold mask
+# whose hits become the per-network boundary sets
+# ``repro.core.hetero.codesign_problems_streaming`` builds its candidate
+# pool from.  One mega-grid pass therefore emits exactly the co-design
+# candidate pool without ever materialising [n_cfg, n_net, n_layer].
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
 class LayerTopK:
-    """Running per-layer top-k of a streamed per-layer sweep."""
+    """Running reductions of a streamed per-layer sweep.
+
+    The boundary-set fields are ``None`` unless the sweep ran with a
+    ``bound=``; everything else is always populated.  ``topk_idx`` ranks
+    by (metric, flat index) — ties break toward the LOWER grid index, so
+    the result is invariant to the chunk size."""
 
     networks: Tuple[str, ...]
     n_cfg: int
@@ -1356,6 +1371,104 @@ class LayerTopK:
     topk_metric: np.ndarray         # [k, n_net]
     layer_energy: np.ndarray        # [k, n_net, n_layer]
     layer_latency: np.ndarray       # [k, n_net, n_layer]
+    # -- aggregate running minima (refs for co-design chip scoring) --------
+    min_energy: np.ndarray | None = None      # [n_net]
+    min_latency: np.ndarray | None = None     # [n_net]
+    min_edp: np.ndarray | None = None         # [n_net]
+    min_metric: np.ndarray | None = None      # [n_net]
+    argmin: np.ndarray | None = None          # [n_net] flat index of min
+    # -- per-(network, layer) running minima -------------------------------
+    layer_min_metric: np.ndarray | None = None   # [n_net, n_layer]
+    layer_argmin: np.ndarray | None = None       # [n_net, n_layer]
+    # -- ≤bound boundary sets (None when bound was not requested) ----------
+    bound: float | None = None
+    boundary_idx: Dict[str, np.ndarray] | None = None   # sorted by metric
+    boundary_energy: Dict[str, np.ndarray] | None = None
+    boundary_latency: Dict[str, np.ndarray] | None = None
+
+    def boundary_metric(self, name: str) -> np.ndarray:
+        if self.boundary_energy is None:
+            raise ValueError("this stream carries no boundary sets — "
+                             "run stream_layer_topk with bound=")
+        return _metric_of(self.metric, self.boundary_energy[name],
+                          self.boundary_latency[name])
+
+
+def _layer_reduce_body(xp, metric, topk, e, t, base, m_valid, bound,
+                       lay_valid, state):
+    """Fold one [chunk, n_net, n_layer] per-layer evaluation into the
+    running state; returns ``(state, mask, es, ts)`` where ``mask`` is
+    the ≤bound threshold mask against the *updated* running minimum (a
+    superset of the final boundary set — pruned at the end) and
+    ``es``/``ts`` are the layer-summed [chunk, n_net] aggregates the
+    boundary collection reads.  Padded chunk rows (index ≥ ``m_valid``)
+    are masked to +inf so they never win a reduction; ``lay_valid`` masks
+    each network's zero-padded layer tail out of the per-layer minima."""
+    (top_v, top_i, top_e, top_t, min_e, min_t, min_edp, min_m, argm,
+     lmin, larg) = state
+    rows = xp.arange(e.shape[0])
+    invalid = (rows >= m_valid)[:, None]
+    es = xp.where(invalid, np.inf, e.sum(-1))
+    ts = xp.where(invalid, np.inf, t.sum(-1))
+    v = _metric_of(metric, es, ts)
+    min_e = xp.minimum(min_e, es.min(axis=0))
+    min_t = xp.minimum(min_t, ts.min(axis=0))
+    min_edp = xp.minimum(min_edp, xp.where(invalid, np.inf,
+                                           es * ts).min(axis=0))
+    cmin = v.min(axis=0)
+    better = cmin < min_m
+    min_m = xp.where(better, cmin, min_m)
+    argm = xp.where(better, base + xp.argmin(v, axis=0), argm)
+
+    # per-(network, layer) metric minima; strict < keeps the earlier
+    # (lower-index) config on ties, so this too is chunk-size-invariant
+    vl = _metric_of(metric, e, t)
+    vl = xp.where(invalid[:, :, None] | ~lay_valid[None, :, :], np.inf, vl)
+    clmin = vl.min(axis=0)
+    lbetter = clmin < lmin
+    lmin = xp.where(lbetter, clmin, lmin)
+    larg = xp.where(lbetter, base + xp.argmin(vl, axis=0), larg)
+
+    # top-k fold with the per-layer rows gathered alongside; the same
+    # (value, index) lexsort tie-break as _stream_reduce_body
+    idx = xp.broadcast_to((base + rows)[:, None], v.shape)
+    all_v = xp.concatenate([top_v, v], axis=0)
+    all_i = xp.concatenate([top_i, idx], axis=0)
+    order = xp.lexsort((all_i, all_v), axis=0)[:topk]
+    top_v = xp.take_along_axis(all_v, order, axis=0)
+    top_i = xp.take_along_axis(all_i, order, axis=0)
+    all_e = xp.concatenate([top_e, e], axis=0)
+    all_t = xp.concatenate([top_t, t], axis=0)
+    top_e = xp.take_along_axis(all_e, order[:, :, None], axis=0)
+    top_t = xp.take_along_axis(all_t, order[:, :, None], axis=0)
+
+    mask = v <= min_m[None, :] * (1.0 + bound)
+    state = (top_v, top_i, top_e, top_t, min_e, min_t, min_edp, min_m,
+             argm, lmin, larg)
+    return state, mask, es, ts
+
+
+_jitted_layer_reduce = None
+
+
+def _jax_layer_reduce_step():
+    """Jitted streaming per-layer reduction: a chunk's
+    [chunk, n_net, n_layer] tensors fold into the state on device — only
+    the small state, the boundary mask, and the [chunk, n_net] aggregates
+    ever cross to the host."""
+    global _jitted_layer_reduce
+    if _jitted_layer_reduce is None:
+        import jax
+
+        def red(metric, topk, e, t, state, base, m_valid, bound,
+                lay_valid):
+            _JIT_STATS["traces"] += 1        # runs only while tracing
+            import jax.numpy as jnp
+            return _layer_reduce_body(jnp, metric, topk, e, t, base,
+                                      m_valid, bound, lay_valid, state)
+
+        _jitted_layer_reduce = jax.jit(red, static_argnums=(0, 1))
+    return _jitted_layer_reduce
 
 
 def stream_layer_topk(grid: ConfigGrid,
@@ -1366,14 +1479,23 @@ def stream_layer_topk(grid: ConfigGrid,
                       use_jax: bool | None = None,
                       backend: str | None = None,
                       shard: bool = False,
-                      metric: str = "edp") -> LayerTopK:
-    """Streamed per-layer sweep keeping only each network's top-k configs.
+                      metric: str = "edp",
+                      bound: float | None = None) -> LayerTopK:
+    """Streamed per-layer sweep: one pass, every co-design reduction.
 
-    Equivalent to ``evaluate_networks(..., per_layer=True)`` followed by a
-    per-network top-k on the layer-summed metric — at bounded memory: only
-    one chunk's ``[chunk, n_net, n_layer]`` tensors are ever alive, and
-    the state carries ``k`` per-layer rows per network.  Ties rank by
-    lower flat grid index (stable against chunk boundaries)."""
+    Equivalent to ``evaluate_networks(..., per_layer=True)`` followed by
+    per-network reductions on the layer-summed metric — at bounded
+    memory: only one chunk's ``[chunk, n_net, n_layer]`` tensors are ever
+    alive (the jax path folds each chunk on device through one jitted
+    step), and the state carries ``k`` per-layer rows per network plus
+    the running aggregate / per-(network, layer) minima.  With
+    ``bound=``, the ≤bound threshold mask is maintained alongside and the
+    result carries the per-network boundary candidate sets (flat indices
+    + aggregate energy/latency, metric-sorted) — exactly the candidate
+    pool inputs :func:`repro.core.hetero.codesign_problems_streaming`
+    consumes, so a 49,000-point mega grid feeds the co-design search
+    without materialising ``[n_cfg, n_net, n_layer]``.  Ties rank by
+    lower flat grid index everywhere (chunk-size-invariant)."""
     global _LAST_BACKEND
     backend = resolve_backend(backend, use_jax)
     _LAST_BACKEND = backend
@@ -1385,37 +1507,36 @@ def stream_layer_topk(grid: ConfigGrid,
     fields = grid.fields if isinstance(grid, ConfigGrid) else dict(grid)
     n = int(next(iter(fields.values())).shape[0])
     chunk = max(1, min(chunk_size, n))
+    lay_counts = network_layer_counts(networks)
+    lay_valid = np.arange(n_layer)[None, :] < lay_counts[:, None]
 
     k = int(topk)
-    top_v = np.full((k, n_net), np.inf)
-    top_i = np.full((k, n_net), -1, np.int64)
-    top_e = np.zeros((k, n_net, n_layer))
-    top_t = np.zeros((k, n_net, n_layer))
+    state = (np.full((k, n_net), np.inf),              # top_v
+             np.full((k, n_net), -1, np.int64),        # top_i
+             np.zeros((k, n_net, n_layer)),            # top_e
+             np.zeros((k, n_net, n_layer)),            # top_t
+             np.full(n_net, np.inf),                   # min_energy
+             np.full(n_net, np.inf),                   # min_latency
+             np.full(n_net, np.inf),                   # min_edp
+             np.full(n_net, np.inf),                   # min_metric
+             np.full(n_net, -1, np.int64),             # argmin
+             np.full((n_net, n_layer), np.inf),        # layer_min_metric
+             np.full((n_net, n_layer), -1, np.int64))  # layer_argmin
+    b = 0.0 if bound is None else float(bound)
+    cand: Dict[str, list] = {nm: [] for nm in names}
 
-    def fold(start, stop, ec, tc):
-        nonlocal top_v, top_i, top_e, top_t
-        m = stop - start
-        ec, tc = np.asarray(ec)[:m], np.asarray(tc)[:m]
-        v = _metric_of(metric, ec.sum(-1), tc.sum(-1))     # [m, n_net]
-        idx = np.arange(start, stop, dtype=np.int64)
-        all_v = np.concatenate([top_v, v], axis=0)
-        all_i = np.concatenate([top_i, np.broadcast_to(
-            idx[:, None], v.shape)], axis=0)
-        # lexsort on (index, value): ascending metric, lower index on ties
-        order = np.lexsort((all_i, all_v), axis=0)[:k]     # [k, n_net]
-        new_e = np.empty_like(top_e)
-        new_t = np.empty_like(top_t)
+    def collect(mask, es, ts, start):
+        if bound is None:
+            return
+        rows_i, cols_i = np.nonzero(np.asarray(mask))
+        if not rows_i.size:
+            return
+        es, ts = np.asarray(es), np.asarray(ts)
         for j in range(n_net):
-            for r, src in enumerate(order[:, j]):
-                if src < k:                                # kept old row
-                    new_e[r, j] = top_e[src, j]
-                    new_t[r, j] = top_t[src, j]
-                else:                                      # new chunk row
-                    new_e[r, j] = ec[src - k, j]
-                    new_t[r, j] = tc[src - k, j]
-        top_v = np.take_along_axis(all_v, order, axis=0)
-        top_i = np.take_along_axis(all_i, order, axis=0)
-        top_e, top_t = new_e, new_t
+            sel = rows_i[cols_i == j]
+            if sel.size:
+                cand[names[j]].append((start + sel, es[sel, j],
+                                       ts[sel, j]))
 
     def chunks():
         for ci, start in enumerate(range(0, n, chunk)):
@@ -1429,7 +1550,10 @@ def stream_layer_topk(grid: ConfigGrid,
             ec, tc = _eval_fields(fc, lay, segments, "numpy", False,
                                   _UNIQUE_BUCKET, _MAPPING_BUCKET,
                                   per_layer=True)
-            fold(start, stop, ec, tc)
+            state, mask, es, ts = _layer_reduce_body(
+                np, metric, k, ec, tc, start, stop - start, b,
+                lay_valid, state)
+            collect(mask, es, ts, start)
     else:
         import jax
         from jax.experimental import enable_x64
@@ -1437,21 +1561,57 @@ def stream_layer_topk(grid: ConfigGrid,
         n_dev = host_device_count() if shard else 1
         pending: list = []
         with enable_x64():
+            def reduce_one(item):
+                nonlocal state
+                start, stop, e_d, t_d = item
+                if n_dev > 1:
+                    e_d = jax.device_put(e_d, devs[0])
+                    t_d = jax.device_put(t_d, devs[0])
+                _JIT_STATS["calls"] += 1
+                state, mask, es, ts = _jax_layer_reduce_step()(
+                    metric, k, e_d, t_d, state, np.int64(start),
+                    np.int64(stop - start), float(b), lay_valid)
+                collect(mask, es, ts, start)
+
             for ci, start, stop, fc in chunks():
                 dev = devs[ci % n_dev] if n_dev > 1 else None
                 ec, tc = _dispatch_chunk(fc, lay, segments, dev, backend,
                                          per_layer=True)
                 pending.append((start, stop, ec, tc))
                 if len(pending) > 2 * n_dev:
-                    fold(*pending.pop(0))
+                    reduce_one(pending.pop(0))
             for item in pending:
-                fold(*item)
+                reduce_one(item)
+
+    (top_v, top_i, top_e, top_t, min_e, min_t, min_edp, min_m, argm,
+     lmin, larg) = (np.asarray(s) for s in state)
+
+    b_idx = b_e = b_t = None
+    if bound is not None:
+        b_idx, b_e, b_t = {}, {}, {}
+        for j, nm in enumerate(names):
+            if cand[nm]:
+                idx = np.concatenate([c[0] for c in cand[nm]])
+                ee = np.concatenate([c[1] for c in cand[nm]])
+                tt = np.concatenate([c[2] for c in cand[nm]])
+            else:                                      # pragma: no cover
+                idx, ee, tt = (np.zeros(0, np.int64),) + (np.zeros(0),) * 2
+            v = _metric_of(metric, ee, tt)
+            keep = v <= min_m[j] * (1.0 + b)   # prune to the final min
+            idx, ee, tt, v = idx[keep], ee[keep], tt[keep], v[keep]
+            order = np.lexsort((idx, v))       # metric, then lower index
+            b_idx[nm], b_e[nm], b_t[nm] = idx[order], ee[order], tt[order]
 
     return LayerTopK(
         networks=names, n_cfg=n, metric=metric,
-        layer_counts=network_layer_counts(networks),
+        layer_counts=lay_counts,
         topk_idx=top_i, topk_metric=top_v,
-        layer_energy=top_e, layer_latency=top_t)
+        layer_energy=top_e, layer_latency=top_t,
+        min_energy=min_e, min_latency=min_t, min_edp=min_edp,
+        min_metric=min_m, argmin=argm,
+        layer_min_metric=lmin, layer_argmin=larg,
+        bound=bound, boundary_idx=b_idx,
+        boundary_energy=b_e, boundary_latency=b_t)
 
 
 def simulate_grid(configs: Sequence[AcceleratorConfig] | ConfigGrid,

@@ -434,6 +434,105 @@ def batch_partition(latencies: Sequence[Sequence[float]],
     return out
 
 
+# ---------------------------------------------------------------------------
+# Latency-bound Pareto scoring: batch_schedule_hetero's chip scoring
+# vectorised over a deadline axis.  A solved problem set gives every
+# (chip, network) pair a scheduled (energy, latency) point; under a latency
+# bound the score of a chip is its energy *subject to* the pipeline
+# bottleneck meeting the deadline — infeasible schedules mask to +inf, so
+# per-deadline argmins and the whole (chips × networks × deadlines) score
+# block come out of ONE compiled call, with no python loop over deadlines.
+# The (energy, latency) dominance masks (the Pareto fronts) ride along in
+# the same program.
+# ---------------------------------------------------------------------------
+
+
+def _pareto_body(xp, value, latency, norm_latency, deadlines):
+    """Traced body shared by the numpy and jitted paths.
+
+    ``value``/``latency``/``norm_latency``: [C, N] per-(chip, network)
+    score (normalised energy by convention), raw pipeline bottleneck, and
+    normalised bottleneck; ``deadlines``: [N, D] absolute per-network
+    latency bounds.  Returns
+
+    * ``masked``  [C, N, D] — ``value`` where the schedule meets the
+      deadline, +inf where it misses,
+    * ``scores``  [C, D]   — per-chip mean over networks (one infeasible
+      network poisons the chip: +inf propagates through the mean),
+    * ``best``    [D]      — argmin chip per deadline (-1: none feasible),
+    * ``best_net`` [N, D]  — per-network argmin chip per deadline,
+    * ``net_front`` [C, N] — non-dominated (value, latency) chips per
+      network (weak dominance: a point falls only to another that is ≤ in
+      both coordinates and < in at least one),
+    * ``chip_front`` [C]   — non-dominated chips on the network-mean
+      (value, norm_latency) plane."""
+    feas = latency[:, :, None] <= deadlines[None, :, :]
+    masked = xp.where(feas, value[:, :, None], np.inf)
+    scores = masked.mean(axis=1)                              # [C, D]
+    best = xp.where(xp.isfinite(scores).any(axis=0),
+                    xp.argmin(scores, axis=0), -1)
+    best_net = xp.where(xp.isfinite(masked).any(axis=0),
+                        xp.argmin(masked, axis=0), -1)        # [N, D]
+
+    e1, e2 = value[:, None, :], value[None, :, :]
+    l1, l2 = latency[:, None, :], latency[None, :, :]
+    dom = (e2 <= e1) & (l2 <= l1) & ((e2 < e1) | (l2 < l1))
+    net_front = ~dom.any(axis=1)                              # [C, N]
+
+    mv, ml = value.mean(axis=1), norm_latency.mean(axis=1)
+    domc = ((mv[None, :] <= mv[:, None]) & (ml[None, :] <= ml[:, None])
+            & ((mv[None, :] < mv[:, None]) | (ml[None, :] < ml[:, None])))
+    chip_front = ~domc.any(axis=1)                            # [C]
+    return masked, scores, best, best_net, net_front, chip_front
+
+
+_jitted_pareto = None
+
+
+def _jax_pareto():
+    global _jitted_pareto
+    if _jitted_pareto is None:
+        import jax
+        import jax.numpy as jnp
+
+        def kernel(value, latency, norm_latency, deadlines):
+            return _pareto_body(jnp, value, latency, norm_latency,
+                                deadlines)
+
+        _jitted_pareto = jax.jit(kernel)
+    return _jitted_pareto
+
+
+def batch_pareto_scores(value, latency, deadlines,
+                        norm_latency=None,
+                        use_jax: bool | None = None):
+    """Score a solved (chip × network) block against ALL deadlines at once.
+
+    ``value``/``latency`` are [C, N] (scheduled score — normalised energy
+    by convention — and pipeline bottleneck); ``deadlines`` is [N, D]
+    absolute per-network bounds or [D] (broadcast to every network);
+    ``norm_latency`` defaults to ``latency`` and only feeds the
+    network-mean chip front.  Returns the 6-tuple of
+    :func:`_pareto_body` as numpy arrays.  With jax available the whole
+    block — masking, per-deadline argmins, both dominance fronts — is ONE
+    jitted dispatch; the numpy body is the reference fallback."""
+    value = np.asarray(value, dtype=np.float64)
+    latency = np.asarray(latency, dtype=np.float64)
+    deadlines = np.asarray(deadlines, dtype=np.float64)
+    if deadlines.ndim == 1:
+        deadlines = np.broadcast_to(deadlines[None, :],
+                                    (value.shape[1], deadlines.shape[0]))
+    norm_latency = (latency if norm_latency is None
+                    else np.asarray(norm_latency, dtype=np.float64))
+    use_jax = jax_available() if use_jax is None else use_jax
+    if use_jax:
+        from jax.experimental import enable_x64
+        with enable_x64():
+            out = _jax_pareto()(value, latency, norm_latency, deadlines)
+        return tuple(np.asarray(o) for o in out)
+    return _pareto_body(np, value, latency, norm_latency, deadlines)
+
+
 def partition_network(report, n_cores: int, method: str = "bb") -> Partition:
     """Distribute a simulated network (NetworkReport) across cores."""
     lat = report.layer_latencies

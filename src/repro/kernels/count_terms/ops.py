@@ -6,9 +6,24 @@ columns, the [1, L] stacked layer columns, and the static per-network
 one-hot segment matrix, and returns the tuple of 14 [n_u, n_net] partial
 sums ``energymodel._gather_combine_body`` consumes.  Traceable under
 ``jax.jit`` (all shapes static at trace time).
+
+Two engine paths consume the per-layer variant
+(:func:`count_term_layers`, no segment reduction):
+``evaluate_networks(..., per_layer=True)`` for dense per-layer tensors,
+and the streamed per-layer reduction
+(:func:`repro.core.energymodel.stream_layer_topk`) which dispatches one
+``count_term_layers`` call per fixed-shape chunk — the chunk padding
+upstream keeps ``n_u`` stable so the whole stream shares one trace.
+
+The interpret-mode default can be overridden process-wide with
+``REPRO_PALLAS_NATIVE=1`` (see :func:`default_interpret`) on hosts where
+a native Mosaic/Triton lowering of the tile program has been validated;
+explicit ``interpret=`` arguments always win.
 """
 
 from __future__ import annotations
+
+import os
 
 import numpy as np
 import jax.numpy as jnp
@@ -16,6 +31,17 @@ import jax.numpy as jnp
 from repro.core.energymodel import _PAD_LAYER_ROW
 from .kernel import (CFG_COLUMNS, LAYER_FIELDS, N_TERMS,
                      count_layers_kernel, count_terms_kernel)
+
+
+def default_interpret() -> bool:
+    """Whether the Pallas kernels run in interpret mode by default.
+
+    True everywhere unless ``REPRO_PALLAS_NATIVE=1`` opts into a native
+    lowering — the tile program is float64 with an n_net-wide innermost
+    dimension, which violates TPU/Mosaic tiling constraints as written,
+    so the opt-in is for hosts where a lowering has been validated
+    (see docs/architecture.md)."""
+    return os.environ.get("REPRO_PALLAS_NATIVE", "") != "1"
 
 
 def _pad_operands(cfg_u, lay, block_u: int, block_l: int):
@@ -56,7 +82,7 @@ def _segment_onehot(segments, l_pad: int) -> np.ndarray:
 
 
 def count_term_sums(cfg_u, lay, segments, *, block_u: int = 128,
-                    block_l: int = 128, interpret: bool = True):
+                    block_l: int = 128, interpret: bool | None = None):
     """Fused mapping → 14 count terms → per-network segment reduction.
 
     cfg_u: dict of [n_u, 1] arrays keyed by ``_COUNT_COLUMNS``;
@@ -73,6 +99,8 @@ def count_term_sums(cfg_u, lay, segments, *, block_u: int = 128,
     opting in via ``interpret=False`` is for hosts where a lowering has
     been validated.
     """
+    if interpret is None:
+        interpret = default_interpret()
     cfg, laym, n_u, l_tot, bu, bl, pad_l = _pad_operands(
         cfg_u, lay, block_u, block_l)
     seg = jnp.asarray(_segment_onehot(segments, l_tot + pad_l), cfg.dtype)
@@ -84,15 +112,19 @@ def count_term_sums(cfg_u, lay, segments, *, block_u: int = 128,
 
 
 def count_term_layers(cfg_u, lay, *, block_u: int = 128,
-                      block_l: int = 128, interpret: bool = True):
+                      block_l: int = 128, interpret: bool | None = None):
     """Fused mapping → 14 PER-LAYER count terms (no segment reduction).
 
     Same operands as :func:`count_term_sums` minus ``segments``; returns
     a 14-tuple of [n_u, L] float64 arrays, drop-in for
     ``energymodel._term_layers_body``'s output (config-independent terms
     arrive per-row, which the consumer treats as already gathered).  The
-    engine's ``per_layer=True`` path routes here when
-    ``backend="pallas"``."""
+    engine routes here when ``backend="pallas"`` in per-layer mode — both
+    the dense ``per_layer=True`` path and the streamed per-layer
+    reduction (``stream_layer_topk``), which calls once per fixed-shape
+    chunk."""
+    if interpret is None:
+        interpret = default_interpret()
     cfg, laym, n_u, l_tot, bu, bl, _ = _pad_operands(
         cfg_u, lay, block_u, block_l)
     out = count_layers_kernel(cfg, laym, block_u=bu, block_l=bl,

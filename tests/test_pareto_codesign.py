@@ -1,0 +1,249 @@
+"""Batched latency-bound Pareto sweep (`partition.batch_pareto_scores`
+/ `hetero.pareto_codesign`): the frontier equals a brute-force dominance
+filter, deadline scoring equals the per-deadline loop, and the co-design
+wrapper's invariants (winner feasibility, monotone scores, EDP-winner
+membership) hold on real problem sets."""
+
+import numpy as np
+import pytest
+
+from repro.core import accelerator, hetero, partition, topology
+
+# Guarded per-test (not module-level importorskip) so the deterministic
+# tests below always run.
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAS_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    _HAS_HYPOTHESIS = False
+
+    def _skip_property(f):
+        return pytest.mark.skip(
+            reason="property test needs hypothesis "
+            "(pip install -r requirements-dev.txt)")(f)
+
+
+def _brute_frontier(value, latency):
+    """O(C²) dominance filter: point c survives unless some other point
+    is ≤ in both coordinates and < in at least one."""
+    C = value.shape[0]
+    keep = np.ones(C, dtype=bool)
+    for c in range(C):
+        for o in range(C):
+            if (value[o] <= value[c] and latency[o] <= latency[c]
+                    and (value[o] < value[c] or latency[o] < latency[c])):
+                keep[c] = False
+                break
+    return keep
+
+
+def _loop_scores(value, latency, deadlines):
+    """Per-deadline python loop twin of the batched scoring."""
+    C, N = value.shape
+    D = deadlines.shape[1]
+    best = np.full(D, -1, dtype=np.int64)
+    best_net = np.full((N, D), -1, dtype=np.int64)
+    for d in range(D):
+        best_s = np.inf
+        net_s = np.full(N, np.inf)
+        for c in range(C):
+            feas = latency[c] <= deadlines[:, d]
+            if feas.all() and value[c].mean() < best_s:
+                best_s, best[d] = value[c].mean(), c
+            for j in np.flatnonzero(feas):
+                if value[c, j] < net_s[j]:
+                    net_s[j], best_net[j, d] = value[c, j], c
+    return best, best_net
+
+
+def _check_instance(value, latency, deadlines, use_jax):
+    masked, scores, best, best_net, net_front, chip_front = \
+        partition.batch_pareto_scores(value, latency, deadlines,
+                                      use_jax=use_jax)
+    C, N = value.shape
+    # masked/scores against the definition
+    feas = latency[:, :, None] <= deadlines[None, :, :]
+    want_masked = np.where(feas, value[:, :, None], np.inf)
+    np.testing.assert_array_equal(masked, want_masked)
+    np.testing.assert_array_equal(scores, want_masked.mean(axis=1))
+    # per-deadline argmins against the python loop
+    l_best, l_best_net = _loop_scores(value, latency, deadlines)
+    np.testing.assert_array_equal(best, l_best)
+    np.testing.assert_array_equal(best_net, l_best_net)
+    # frontier per network against the brute-force dominance filter
+    for j in range(N):
+        np.testing.assert_array_equal(
+            net_front[:, j], _brute_frontier(value[:, j], latency[:, j]),
+            err_msg=f"net {j}")
+    np.testing.assert_array_equal(
+        chip_front, _brute_frontier(value.mean(axis=1),
+                                    latency.mean(axis=1)))
+
+
+def test_pareto_scores_small_deterministic():
+    value = np.array([[1.0, 2.0], [2.0, 1.0], [3.0, 3.0], [1.0, 2.0]])
+    lat = np.array([[4.0, 1.0], [1.0, 4.0], [0.5, 0.5], [4.0, 1.0]])
+    deadlines = np.array([[0.4, 1.0, 5.0], [0.4, 1.0, 5.0]])
+    for use_jax in (False, True):
+        _check_instance(value, lat, deadlines, use_jax)
+    # duplicated points (rows 0 and 3) both survive weak dominance
+    _, _, _, _, net_front, _ = partition.batch_pareto_scores(
+        value, lat, deadlines, use_jax=False)
+    assert net_front[0, 0] and net_front[3, 0]
+
+
+def test_pareto_all_infeasible_and_broadcast():
+    value = np.array([[1.0], [2.0]])
+    lat = np.array([[5.0], [6.0]])
+    masked, scores, best, best_net, _, _ = partition.batch_pareto_scores(
+        value, lat, np.array([1.0, 5.5]), use_jax=False)   # [D] broadcast
+    assert np.all(np.isinf(masked[:, :, 0]))
+    assert best[0] == -1 and best_net[0, 0] == -1
+    assert best[1] == 0 and best_net[0, 1] == 0
+
+
+if _HAS_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.data())
+    def test_pareto_matches_brute_force_property(data):
+        """Frontier == brute-force dominance filter and per-deadline
+        argmins == the python loop, on random instances with deliberate
+        ties, through BOTH the numpy and jitted paths."""
+        C = data.draw(st.integers(2, 12), label="chips")
+        N = data.draw(st.integers(1, 4), label="nets")
+        D = data.draw(st.integers(1, 5), label="deadlines")
+        # few distinct values → frequent exact ties
+        val = st.sampled_from([0.5, 1.0, 1.5, 2.0, 3.0])
+        value = np.array(data.draw(
+            st.lists(st.lists(val, min_size=N, max_size=N),
+                     min_size=C, max_size=C), label="value"))
+        latency = np.array(data.draw(
+            st.lists(st.lists(val, min_size=N, max_size=N),
+                     min_size=C, max_size=C), label="latency"))
+        dl = np.array(data.draw(
+            st.lists(st.lists(val, min_size=D, max_size=D),
+                     min_size=N, max_size=N), label="dl"))
+        use_jax = data.draw(st.booleans(), label="use_jax")
+        _check_instance(value, latency, dl, use_jax)
+else:                                                  # pragma: no cover
+    @_skip_property
+    def test_pareto_matches_brute_force_property():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# pareto_codesign on a real problem set
+# ---------------------------------------------------------------------------
+
+PARETO_NETS = ("AlexNet", "VGG16", "MobileNet")
+
+
+@pytest.fixture(scope="module")
+def pareto_result():
+    nets = {n: topology.get_network(n) for n in PARETO_NETS}
+    grid = accelerator.ConfigGrid.product()
+    probs = hetero.codesign_problems(grid, nets, 4, max_types=3,
+                                     pool_size=5)
+    res = partition.batch_schedule_hetero(probs.lat_dense, probs.counts,
+                                          n_layers=probs.n_layers_b)
+    pc = hetero.pareto_codesign(probs, res, n_deadlines=9)
+    return grid, nets, probs, res, pc
+
+
+def test_pareto_codesign_structure(pareto_result):
+    grid, nets, probs, res, pc = pareto_result
+    n_chips, n_net = pc.n_chips, len(nets)
+    assert pc.energy.shape == pc.latency.shape == (n_chips, n_net)
+    assert pc.scores.shape == (n_chips, pc.deadlines.size)
+    assert pc.deadlines.size == 9
+    assert pc.best_chip.shape == (9,)
+    assert pc.best_chip_net.shape == (n_net, 9)
+    assert pc.net_frontier.shape == (n_chips, n_net)
+    # normalisation is by the per-network single-config minimum; a
+    # heterogeneous schedule may well beat it (different layers on
+    # different core types), but never by more than the per-layer-argmin
+    # lower bound — and everything is strictly positive
+    assert (pc.norm_energy > 0).all() and (pc.norm_latency > 0).all()
+    # every network has a non-empty frontier and a rendering chip summary
+    for nm in PARETO_NETS:
+        front = pc.frontier(nm)
+        assert front
+        lats = [f[1] for f in front]
+        assert lats == sorted(lats)
+    assert pc.chip_summary(int(pc.best_chip[-1]), grid)
+
+
+def test_pareto_codesign_deadline_semantics(pareto_result):
+    _, nets, probs, res, pc = pareto_result
+    D = pc.deadlines.size
+    # per chip: feasibility is monotone in the deadline (once feasible,
+    # stays feasible) and the finite score is the deadline-independent
+    # mean normalised energy
+    for c in range(pc.n_chips):
+        s = pc.scores[c]
+        fin = np.isfinite(s)
+        assert not (fin[:-1] & ~fin[1:]).any()
+        if fin.any():
+            np.testing.assert_allclose(s[fin], s[fin][0], rtol=1e-12)
+    # the widest deadline spans the whole observed range → all feasible
+    assert np.isfinite(pc.scores[:, -1]).all()
+    # per-deadline winners are feasible and minimal
+    dl_abs = probs.min_latency[:, None] * pc.deadlines[None, :]
+    for d in range(D):
+        c = int(pc.best_chip[d])
+        if c < 0:
+            assert not np.isfinite(pc.scores[:, d]).any()
+            continue
+        assert (pc.latency[c] <= dl_abs[:, d]).all()
+        assert pc.scores[c, d] == pc.scores[:, d].min()
+    # winners can only improve (lower mean energy) as deadlines loosen
+    win = [pc.scores[int(c), d] for d, c in enumerate(pc.best_chip)
+           if int(c) >= 0]
+    assert (np.diff(win) <= 1e-12).all()
+
+
+def test_pareto_codesign_contains_edp_winner(pareto_result):
+    """The EDP co-design winner is (a) on some network's frontier or
+    dominated only by other candidates present in the same enumeration,
+    and (b) the loosest-deadline best chip minimises mean normalised
+    energy over ALL chips."""
+    _, nets, probs, res, pc = pareto_result
+    cd = hetero.score_codesign(probs, res, metric="edp", m_cores=4)
+    # the CoDesign winner exists in the pareto enumeration with the same
+    # energies/latencies
+    wi = [i for i, (ty, cn) in enumerate(zip(pc.chip_types, pc.chip_counts))
+          if [probs.pool[p] for p in ty] == cd.core_types
+          and list(cn) == cd.core_counts]
+    assert len(wi) == 1
+    for j, nm in enumerate(pc.names):
+        assert pc.energy[wi[0], j] == pytest.approx(cd.energy[nm],
+                                                    rel=1e-12)
+        assert pc.latency[wi[0], j] == pytest.approx(cd.latency[nm],
+                                                     rel=1e-12)
+    c = int(pc.best_chip[-1])
+    # the jitted mean and numpy's may differ in the last ulp
+    assert pc.scores[c, -1] == pytest.approx(
+        pc.norm_energy.mean(axis=1).min(), rel=1e-12)
+    assert pc.scores[c, -1] == pc.scores[:, -1].min()
+
+
+def test_pareto_codesign_solves_when_res_missing(pareto_result):
+    _, _, probs, res, pc = pareto_result
+    pc2 = hetero.pareto_codesign(probs, deadlines=pc.deadlines)
+    np.testing.assert_array_equal(pc2.best_chip, pc.best_chip)
+    np.testing.assert_array_equal(pc2.scores, pc.scores)
+
+
+def test_pareto_codesign_points_reuse(pareto_result):
+    """The deadline re-sweep path (solved points passed back in) is
+    bit-identical to the full build, and rejects wrong shapes."""
+    _, _, probs, res, pc = pareto_result
+    new_dl = np.linspace(pc.deadlines[0], pc.deadlines[-1], 5)
+    full = hetero.pareto_codesign(probs, res, deadlines=new_dl)
+    fast = hetero.pareto_codesign(probs, deadlines=new_dl,
+                                  points=(pc.energy, pc.latency))
+    np.testing.assert_array_equal(full.scores, fast.scores)
+    np.testing.assert_array_equal(full.best_chip, fast.best_chip)
+    np.testing.assert_array_equal(full.net_frontier, fast.net_frontier)
+    with pytest.raises(ValueError, match="points"):
+        hetero.pareto_codesign(probs, points=(pc.energy[:2], pc.latency[:2]))
