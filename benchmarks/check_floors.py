@@ -75,10 +75,40 @@ def check_parity(payload: dict, ceiling: float, label: str) -> list:
     return problems
 
 
+def _dotted(payload: dict, path: str):
+    cur = payload
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def check_serve(payload: dict, bounds: dict, label: str) -> list:
+    """BENCH_serve guardrails: dotted-path keys are floors
+    (``got < bound`` fails); keys with a ``_max`` suffix are CEILINGS on
+    the stripped path (``got > bound`` fails) — e.g.
+    ``recovery.recovery_ratio_max`` caps the crash-recovery tax."""
+    problems = []
+    for key, bound in bounds.items():
+        if key.endswith("_max"):
+            got = _dotted(payload, key[:-len("_max")])
+            if got is None or got > bound:
+                problems.append(
+                    f"{label}: {key[:-4]}={got} > ceiling {bound}")
+        else:
+            got = _dotted(payload, key)
+            if got is None or got < bound:
+                problems.append(f"{label}: {key}={got} < floor {bound}")
+    return problems
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick-json", default="BENCH_dse.quick.json")
     ap.add_argument("--committed", default="BENCH_dse.json")
+    ap.add_argument("--serve-quick-json", default="BENCH_serve.quick.json")
+    ap.add_argument("--serve-committed", default="BENCH_serve.json")
     ap.add_argument("--floors", default="benchmarks/floors.json")
     ap.add_argument("--report", default=None,
                     help="also write the pass/fail lines to this file "
@@ -101,6 +131,22 @@ def main() -> None:
     else:
         problems.append(f"quick payload {quick_path} not found "
                         "(run `python -m benchmarks.run --quick` first)")
+
+    serve_floors = floors.get("serve", {})
+    if serve_floors:
+        serve = json.loads(Path(args.serve_committed).read_text())
+        problems += check_serve(serve, serve_floors.get("committed", {}),
+                                "serve committed")
+        serve_quick_path = Path(args.serve_quick_json)
+        if serve_quick_path.exists():
+            serve_quick = json.loads(serve_quick_path.read_text())
+            problems += check_serve(serve_quick,
+                                    serve_floors.get("quick", {}),
+                                    "serve quick")
+        else:
+            problems.append(
+                f"serve quick payload {serve_quick_path} not found "
+                "(run `python -m benchmarks.serve_bench --quick` first)")
 
     lines = ([f"FLOOR CHECK FAILED: {p}" for p in problems]
              or ["floor checks passed "

@@ -1,0 +1,167 @@
+"""Service + fault-tolerance benchmark: writes BENCH_serve[.quick].json.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--quick]
+
+Three measurements, mirroring the robustness claims the fault suite
+proves functionally (tests/test_faults.py, tests/test_stream_resume.py):
+
+* ``service`` — a :class:`repro.serving.dse_service.DSEService` draining a
+  seeded mix of best-config / best-chip / Pareto queries: queries/sec and
+  latency percentiles, all answers coalesced per compiled sweep;
+* ``recovery`` — a stream killed at ~90% of its chunks and resumed from
+  the last exported fold state: ``recovery_ratio`` = resume time / full
+  uninterrupted time (the crash-safety tax; floor-checked to stay <= 20%),
+  plus ``max_rel_err_resume`` which MUST be 0.0 — resume is bit-exact;
+* ``chaos`` — the service under the CI seed matrix of random fault plans:
+  every accepted query answered, zero errors.
+
+``benchmarks/check_floors.py`` asserts the guardrails in
+``benchmarks/floors.json`` (``serve`` section; ``*_max`` keys are
+ceilings).  Schema documented in docs/bench_schema.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import energymodel, topology
+from repro.core.accelerator import ConfigGrid, extended_grid
+from repro.ft.faults import FaultPlan, inject_chunk_faults
+from repro.serving.dse_service import DSEService
+
+BENCH_SERVE_JSON = Path("BENCH_serve.json")
+BENCH_SERVE_QUICK_JSON = Path("BENCH_serve.quick.json")
+
+QUICK_NETS = ("AlexNet", "MobileNet", "ResNet50")
+FULL_NETS = ("AlexNet", "VGG16", "GoogleNet", "MobileNet", "ResNet50",
+             "MobileNetV2")
+CHAOS_SEEDS = (0, 1, 2)
+
+
+def _service_metrics(grid, networks, *, n_queries: int,
+                     chunk_size: int) -> dict:
+    svc = DSEService(grid, networks, chunk_size=chunk_size,
+                     max_queue=n_queries)
+    names = list(networks)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for _ in range(n_queries):
+        kind = ("best_config", "best_chip", "pareto")[int(rng.integers(3))]
+        svc.submit(kind,
+                   network=(names[int(rng.integers(len(names)))]
+                            if kind != "best_config" else None),
+                   deadline=float(rng.choice([1.5, 2.0, 3.0])))
+    responses, drained = svc.run_until_drained(max_steps=200)
+    elapsed = time.perf_counter() - t0
+    h = svc.health()
+    return dict(n_cfg=grid.n, n_queries=n_queries, served=len(responses),
+                drained=bool(drained), elapsed_s=elapsed,
+                queries_per_sec=len(responses) / elapsed,
+                p50_s=h["p50_s"], p99_s=h["p99_s"],
+                degraded=h["degraded"], rejected=h["rejected"],
+                errors=h["errors"],
+                coalesced_batches=h["coalesced_batches"],
+                sweep_cache_misses=h["sweep_cache_misses"])
+
+
+def _recovery_metrics(grid, networks, *, chunk_size: int) -> dict:
+    """Kill at ~90% of chunks, resume from the last checkpoint; the ratio
+    of resume time to uninterrupted time is the crash-safety tax."""
+    kw = dict(topk=8, bound=0.05, chunk_size=chunk_size)
+    n_chunks = -(-grid.n // chunk_size)
+    kill_at = max(1, int(n_chunks * 0.9))
+
+    energymodel.stream_layer_topk(grid, networks, **kw)   # warm jit caches
+    t0 = time.perf_counter()
+    ref = energymodel.stream_layer_topk(grid, networks, **kw)
+    t_full = time.perf_counter() - t0
+
+    states = []
+    try:
+        with inject_chunk_faults(FaultPlan(kill_at=kill_at)):
+            energymodel.stream_layer_topk(grid, networks,
+                                          on_chunk=states.append, **kw)
+    except Exception:
+        pass
+    export = states[-1].export_state()
+
+    t0 = time.perf_counter()
+    res = energymodel.stream_layer_topk(grid, networks,
+                                        resume_from=export, **kw)
+    t_resume = time.perf_counter() - t0
+
+    err = 0.0
+    for got, want in ((res.min_metric, ref.min_metric),
+                      (res.topk_metric, ref.topk_metric)):
+        d = np.abs(np.asarray(got) - np.asarray(want))
+        err = max(err, float(np.max(d / np.maximum(np.abs(want), 1e-30))))
+    assert (np.asarray(res.argmin) == np.asarray(ref.argmin)).all()
+    return dict(n_chunks=n_chunks, kill_chunk=kill_at,
+                t_full_s=t_full, t_resume_s=t_resume,
+                recovery_ratio=t_resume / t_full,
+                max_rel_err_resume=err)
+
+
+def _chaos_metrics(grid, networks, *, chunk_size: int) -> dict:
+    n_chunks = -(-grid.n // chunk_size)
+    served = errors = degraded = 0
+    for seed in CHAOS_SEEDS:
+        svc = DSEService(grid, networks, chunk_size=chunk_size,
+                         max_retries=30, backoff_s=1e-4)
+        plan = FaultPlan.random(seed, n_chunks, p_fail=0.3, p_corrupt=0.2)
+        with inject_chunk_faults(plan):
+            for kind in ("best_config", "best_chip"):
+                svc.submit(kind, deadline=2.0)
+            out, drained = svc.run_until_drained(max_steps=100)
+        assert drained
+        served += len(out)
+        errors += sum(not r.ok for r in out)
+        degraded += sum(r.degraded for r in out)
+    return dict(seeds=list(CHAOS_SEEDS), served=served, errors=errors,
+                degraded=degraded)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small grid + fewer queries (CI guardrail mode)")
+    args = ap.parse_args()
+
+    if args.quick:
+        grid = ConfigGrid.product()                       # 150 points
+        nets = {n: topology.get_network(n) for n in QUICK_NETS}
+        n_queries, chunk = 8, 16
+        out_path = BENCH_SERVE_QUICK_JSON
+    else:
+        grid = extended_grid()                            # 5,400 points
+        nets = {n: topology.get_network(n) for n in FULL_NETS}
+        n_queries, chunk = 24, 256
+        out_path = BENCH_SERVE_JSON
+
+    payload = dict(
+        schema=1,
+        quick=bool(args.quick),
+        host=platform.node(),
+        python=platform.python_version(),
+        service=_service_metrics(grid, nets, n_queries=n_queries,
+                                 chunk_size=chunk),
+        recovery=_recovery_metrics(grid, nets, chunk_size=chunk),
+        chaos=_chaos_metrics(grid, nets, chunk_size=chunk),
+    )
+    out_path.write_text(json.dumps(payload, indent=2) + "\n")
+    svc = payload["service"]
+    rec = payload["recovery"]
+    print(f"{out_path}: {svc['served']}/{svc['n_queries']} queries at "
+          f"{svc['queries_per_sec']:.2f} q/s, recovery_ratio="
+          f"{rec['recovery_ratio']:.3f}, chaos errors="
+          f"{payload['chaos']['errors']}")
+
+
+if __name__ == "__main__":
+    main()

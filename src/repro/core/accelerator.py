@@ -138,6 +138,53 @@ GRID_COLUMNS: Tuple[str, ...] = (
     "gb_e_ref", "gb_t_ref", "gb_ref_kb", "mac_t")
 
 
+#: Columns that must be strictly positive: geometry, capacities, bandwidths
+#: and reference latencies act as divisors or multiplicative scales in the
+#: energy model — zero or negative values silently produce garbage (or
+#: divide-by-zero) energies instead of an error.
+_POSITIVE_COLUMNS: Tuple[str, ...] = (
+    "rows", "cols", "gb_ifmap_kb", "gb_psum_kb", "gb_weight_kb",
+    "rf_ifmap_words", "rf_weight_words", "rf_psum_words", "bitwidth",
+    "noc_wpc", "dram_wpc", "cycle_ns", "gb_t_ref", "gb_ref_kb", "mac_t")
+#: Per-access energy coefficients: zero is a legitimate ablation, negative
+#: energy is not.
+_NONNEGATIVE_COLUMNS: Tuple[str, ...] = (
+    "e_rf", "e_dram_r", "e_dram_w", "e_mac", "e_pe_idle", "e_noc_hop",
+    "gb_e_ref")
+
+
+def validate_fields(fields: Dict[str, np.ndarray], *,
+                    context: str = "ConfigGrid") -> None:
+    """Reject NaN/inf/non-positive config parameters at the engine boundary.
+
+    Raises ``ValueError`` naming the offending column and row index — the
+    alternative is a silent garbage energy surfacing many layers later in
+    a reduction or a Pareto frontier."""
+    for k in GRID_COLUMNS:
+        v = np.asarray(fields[k])
+        bad = ~np.isfinite(v)
+        if bad.any():
+            i = int(np.argmax(bad))
+            raise ValueError(
+                f"{context}: column {k!r} row {i} is non-finite "
+                f"({v.reshape(-1)[i]!r}); the energy model would silently "
+                f"propagate it into every reduction")
+        if k in _POSITIVE_COLUMNS:
+            bad = v <= 0
+            if bad.any():
+                i = int(np.argmax(bad))
+                raise ValueError(
+                    f"{context}: column {k!r} row {i} must be > 0, got "
+                    f"{v.reshape(-1)[i]!r}")
+        elif k in _NONNEGATIVE_COLUMNS:
+            bad = v < 0
+            if bad.any():
+                i = int(np.argmax(bad))
+                raise ValueError(
+                    f"{context}: column {k!r} row {i} must be >= 0, got "
+                    f"{v.reshape(-1)[i]!r}")
+
+
 def _config_row(cfg: AcceleratorConfig) -> Tuple[float, ...]:
     et = cfg.energy
     return (cfg.array_rows, cfg.array_cols, cfg.gb_ifmap_kb, cfg.gb_psum_kb,
@@ -167,6 +214,7 @@ class ConfigGrid:
         missing = set(GRID_COLUMNS) - set(self.fields)
         if missing:
             raise ValueError(f"ConfigGrid missing columns: {sorted(missing)}")
+        validate_fields(self.fields)
 
     @property
     def n(self) -> int:

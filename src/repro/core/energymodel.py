@@ -412,6 +412,32 @@ def _bucketed(n: int, bucket: int) -> int:
     return max(bucket, -(-n // bucket) * bucket)
 
 
+#: Layer-struct columns that must be ≥ 1 — shapes/strides act as tile
+#: divisors in the RS mapping — vs. counts that only need to be ≥ 0.
+_LAYER_DIM_COLUMNS = ("c_ch", "m", "ky", "kx", "stride", "ix", "iy",
+                      "oy", "ox")
+
+
+def _validate_layer_struct(name: str, struct: Dict[str, np.ndarray]):
+    """Reject NaN/inf/non-positive layer parameters at the engine boundary,
+    naming the network, layer index and field (the layer-axis analogue of
+    :func:`repro.core.accelerator.validate_fields`)."""
+    for k, v in struct.items():
+        bad = ~np.isfinite(v)
+        if bad.any():
+            i = int(np.argmax(bad))
+            raise ValueError(
+                f"network {name!r}: layer {i} field {k!r} is non-finite "
+                f"({v[i]!r})")
+        floor = 1 if k in _LAYER_DIM_COLUMNS else 0
+        bad = v < floor
+        if bad.any():
+            i = int(np.argmax(bad))
+            raise ValueError(
+                f"network {name!r}: layer {i} field {k!r} must be >= "
+                f"{floor}, got {v[i]!r}")
+
+
 def _stack_networks(networks: Mapping[str, Sequence[Layer]],
                     bucket: int = _LAYER_BUCKET,
                     absorb_pad: bool = True):
@@ -433,11 +459,12 @@ def _stack_networks(networks: Mapping[str, Sequence[Layer]],
         raise ValueError("evaluate_networks needs at least one network")
     structs = []
     seg_lens = []
-    for layers in networks.values():
+    for name, layers in networks.items():
         compute = [l for l in layers if l.kind != "input"]
         s = rs_mapping.layer_struct(np, compute)
-        structs.append({k: np.asarray(v, dtype=np.float64)
-                        for k, v in s.items()})
+        s = {k: np.asarray(v, dtype=np.float64) for k, v in s.items()}
+        _validate_layer_struct(name, s)
+        structs.append(s)
         seg_lens.append(len(compute))
     total = int(np.sum(seg_lens))
     l_pad = _bucketed(total, bucket)
@@ -1152,6 +1179,230 @@ class StreamResult:
                           self.boundary_latency[name])
 
 
+# ---------------------------------------------------------------------------
+# Crash-safe resumable streaming.  Both streamed sweeps are a fold over a
+# deterministic chunk schedule; everything the fold carries (the reduction
+# state tuple plus the boundary candidate triples) is exportable after every
+# chunk, so a run killed at chunk i restarts from chunk i and — because the
+# (value, flat index) tie-break discipline makes the fold independent of how
+# the rows were chunked or where the fold was split — produces results
+# bit-identical to an uninterrupted run.  A content hash over (grid columns,
+# network layer structs, metric, bound, topk, chunk schedule) is stamped
+# into every exported state; resuming against changed inputs is rejected
+# instead of silently folding incompatible partial results.
+# ---------------------------------------------------------------------------
+
+
+class StreamStateError(ValueError):
+    """Resume state incompatible with the requested stream: wrong stream
+    kind, inputs changed since the state was exported, or a truncated /
+    corrupt payload."""
+
+
+class ChunkCorruption(RuntimeError):
+    """Non-finite energy/latency detected in a streamed chunk.
+
+    Raised by the per-chunk NaN/inf guard BEFORE the chunk is folded, so
+    the running state is never poisoned; carries chunk provenance
+    (``chunk``, grid row range ``start:stop``, affected ``networks``)."""
+
+    def __init__(self, msg: str, *, chunk: int, start: int, stop: int,
+                 networks: Sequence[str] = ()):
+        super().__init__(msg)
+        self.chunk = int(chunk)
+        self.start = int(start)
+        self.stop = int(stop)
+        self.networks = tuple(networks)
+
+
+#: Fault-injection seam: when set, called as ``hook(chunk_index, e, t)`` on
+#: every chunk's raw evaluation right before it is folded (both backends,
+#: both streamed sweeps) and must return the possibly-modified ``(e, t)``.
+#: ``repro.ft.faults.inject_chunk_faults`` installs a deterministic
+#: :class:`repro.ft.faults.FaultPlan` here; production code leaves it None.
+_CHUNK_HOOK = None
+
+
+def _apply_chunk_hook(ci, e, t):
+    if _CHUNK_HOOK is None:
+        return e, t
+    return _CHUNK_HOOK(ci, e, t)
+
+
+def _guard_chunk(ci, start, stop, es, ts, names):
+    """NaN/inf guard with chunk provenance.
+
+    ``es``/``ts`` are the [chunk, n_net] aggregates; only the valid rows
+    (< stop-start) are checked — padded rows are legitimately +inf."""
+    m = stop - start
+    esn = np.asarray(es)[:m]
+    tsn = np.asarray(ts)[:m]
+    bad = ~np.isfinite(esn) | ~np.isfinite(tsn)
+    if bad.any():
+        nets = [names[j] for j in np.unique(np.nonzero(bad)[1])]
+        raise ChunkCorruption(
+            f"non-finite energy/latency in streamed chunk {ci} (grid rows "
+            f"{start}:{stop}, networks {nets}); the fold state was NOT "
+            f"updated with this chunk — retry the chunk or resume from the "
+            f"last exported state", chunk=ci, start=start, stop=stop,
+            networks=nets)
+
+
+def stream_input_hash(grid: ConfigGrid | Mapping[str, Any],
+                      networks: Mapping[str, Sequence[Layer]],
+                      *, kind: str, metric: str, bound: float | None,
+                      topk: int, chunk: int) -> str:
+    """Content hash of everything that determines a streamed fold.
+
+    Covers the grid columns byte-for-byte, each network's layer struct,
+    and the reduction parameters including the effective chunk schedule —
+    two streams with equal hashes fold identical chunk sequences, which
+    is the precondition for bit-exact resume."""
+    import hashlib
+    h = hashlib.sha256()
+    h.update(repr((kind, metric,
+                   None if bound is None else float(bound),
+                   int(topk), int(chunk))).encode())
+    fields = grid.fields if isinstance(grid, ConfigGrid) else dict(grid)
+    for k in sorted(fields):
+        h.update(k.encode())
+        h.update(np.ascontiguousarray(
+            np.asarray(fields[k], dtype=np.float64)).tobytes())
+    for nm in networks:
+        h.update(nm.encode())
+        struct = rs_mapping.layer_struct(
+            np, [l for l in networks[nm] if l.kind != "input"])
+        for sk in sorted(struct):
+            h.update(sk.encode())
+            h.update(np.ascontiguousarray(
+                np.asarray(struct[sk], dtype=np.float64)).tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class StreamFoldState:
+    """Serializable fold state of a streamed sweep after ``next_chunk``
+    chunks.
+
+    Emitted via the ``on_chunk=`` callback of :func:`stream_networks` /
+    :func:`stream_layer_topk` after every folded chunk and accepted back
+    through ``resume_from=``; :meth:`export_state` flattens it to plain
+    numpy arrays (device buffers materialised to host) and
+    :meth:`save`/:meth:`load` persist that export crash-safely (write to
+    a temp file, then atomic rename)."""
+
+    kind: str                       # "networks" | "layer_topk"
+    input_hash: str
+    next_chunk: int                 # chunks [0, next_chunk) are folded
+    n_chunks: int
+    chunk_size: int                 # effective chunk row count
+    n_cfg: int
+    networks: Tuple[str, ...]
+    metric: str
+    bound: float | None
+    topk: int
+    state: tuple                    # reduction state arrays (may be device)
+    cand: Dict[str, list]           # boundary triples (idx, e, t) per net
+
+    @property
+    def complete(self) -> bool:
+        return self.next_chunk >= self.n_chunks
+
+    def export_state(self) -> Dict[str, Any]:
+        """Flatten to a ``{name: np.ndarray}`` dict (+ a ``meta`` JSON
+        string) — npz-serializable, no pickling."""
+        import json
+        out: Dict[str, Any] = {}
+        for i, s in enumerate(self.state):
+            out[f"state_{i}"] = np.array(np.asarray(s), copy=True)
+        for j, nm in enumerate(self.networks):
+            entries = self.cand.get(nm, [])
+            if entries:
+                out[f"cand{j}_idx"] = np.concatenate(
+                    [np.asarray(c[0], np.int64) for c in entries])
+                out[f"cand{j}_e"] = np.concatenate(
+                    [np.asarray(c[1], np.float64) for c in entries])
+                out[f"cand{j}_t"] = np.concatenate(
+                    [np.asarray(c[2], np.float64) for c in entries])
+            else:
+                out[f"cand{j}_idx"] = np.zeros(0, np.int64)
+                out[f"cand{j}_e"] = np.zeros(0)
+                out[f"cand{j}_t"] = np.zeros(0)
+        out["meta"] = json.dumps(dict(
+            kind=self.kind, input_hash=self.input_hash,
+            next_chunk=int(self.next_chunk), n_chunks=int(self.n_chunks),
+            chunk_size=int(self.chunk_size), n_cfg=int(self.n_cfg),
+            networks=list(self.networks), metric=self.metric,
+            bound=self.bound, topk=int(self.topk),
+            n_state=len(self.state)))
+        return out
+
+    @classmethod
+    def from_export(cls, d: Mapping[str, Any]) -> "StreamFoldState":
+        import json
+        try:
+            meta_raw = d["meta"]
+            if not isinstance(meta_raw, str):
+                meta_raw = str(np.asarray(meta_raw)[()])
+            meta = json.loads(meta_raw)
+            state = tuple(np.asarray(d[f"state_{i}"])
+                          for i in range(int(meta["n_state"])))
+            cand: Dict[str, list] = {}
+            for j, nm in enumerate(meta["networks"]):
+                idx = np.asarray(d[f"cand{j}_idx"], np.int64)
+                cand[nm] = ([(idx, np.asarray(d[f"cand{j}_e"]),
+                              np.asarray(d[f"cand{j}_t"]))]
+                            if idx.size else [])
+        except (KeyError, ValueError, TypeError) as e:
+            raise StreamStateError(
+                f"truncated or corrupt stream fold-state payload: {e}")
+        return cls(kind=meta["kind"], input_hash=meta["input_hash"],
+                   next_chunk=int(meta["next_chunk"]),
+                   n_chunks=int(meta["n_chunks"]),
+                   chunk_size=int(meta["chunk_size"]),
+                   n_cfg=int(meta["n_cfg"]),
+                   networks=tuple(meta["networks"]), metric=meta["metric"],
+                   bound=meta["bound"], topk=int(meta["topk"]),
+                   state=state, cand=cand)
+
+    def save(self, path) -> None:
+        """Crash-safe persist: write the npz to ``path + '.tmp'``, fsync,
+        then atomically rename over ``path``."""
+        import os
+        d = self.export_state()
+        tmp = str(path) + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, **d)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, str(path))
+
+    @classmethod
+    def load(cls, path) -> "StreamFoldState":
+        with np.load(str(path), allow_pickle=False) as z:
+            d = {k: z[k] for k in z.files}
+        return cls.from_export(d)
+
+
+def _resume_fold(resume_from, *, kind, ihash, names):
+    """Validate a resume payload against the live call and unpack it."""
+    fs = (resume_from if isinstance(resume_from, StreamFoldState)
+          else StreamFoldState.from_export(resume_from))
+    if fs.kind != kind:
+        raise StreamStateError(
+            f"resume_from carries a {fs.kind!r} fold state but this is a "
+            f"{kind!r} stream")
+    if fs.input_hash != ihash:
+        raise StreamStateError(
+            "resume_from was exported from different inputs — the (grid, "
+            "networks, metric, bound, topk, chunk schedule) content hash "
+            "does not match; refusing to resume because the folded result "
+            "would not be bit-identical")
+    state = tuple(np.asarray(s) for s in fs.state)
+    cand = {nm: list(fs.cand.get(nm, [])) for nm in names}
+    return state, cand, int(fs.next_chunk)
+
+
 def _stream_reduce_body(xp, metric, topk, e, t, base, m_valid, bound,
                         state):
     """Fold one [chunk, n_net] evaluation into the running state.
@@ -1217,7 +1468,10 @@ def stream_networks(grid: ConfigGrid,
                     shard: bool = False,
                     bound: float = 0.05,
                     metric: str = "edp",
-                    topk: int = 16) -> StreamResult:
+                    topk: int = 16,
+                    resume_from: "StreamFoldState | Mapping | None" = None,
+                    on_chunk=None,
+                    nan_guard: bool = True) -> StreamResult:
     """Chunked streaming sweep with on-device running reductions.
 
     Never materialises the full ``[n_cfg, n_net]`` matrices: each chunk is
@@ -1226,6 +1480,13 @@ def stream_networks(grid: ConfigGrid,
     candidate sets.  Equivalent to reducing :func:`evaluate_networks`'s
     output, at bounded memory.  ``backend`` routes the per-chunk kernel
     like :func:`evaluate_networks` (pallas / jax / numpy, auto-fallback).
+
+    Crash-safety: ``on_chunk`` receives a :class:`StreamFoldState` after
+    every folded chunk; pass one back as ``resume_from=`` to restart from
+    the first unfolded chunk — the resumed result is bit-identical to an
+    uninterrupted run, and a state exported from different inputs is
+    rejected (:class:`StreamStateError`).  ``nan_guard`` checks every
+    chunk for NaN/inf before folding (:class:`ChunkCorruption`).
     """
     global _LAST_BACKEND
     backend = resolve_backend(backend, use_jax)
@@ -1239,12 +1500,29 @@ def stream_networks(grid: ConfigGrid,
     n = int(next(iter(fields.values())).shape[0])
     chunk = max(1, min(chunk_size, n))
     n_dev = host_device_count() if (shard and use_jax) else 1
+    n_chunks = -(-n // chunk)
+    ihash = stream_input_hash(fields, networks, kind="networks",
+                              metric=metric, bound=bound, topk=topk,
+                              chunk=chunk)
 
     state = (np.full(n_net, np.inf), np.full(n_net, np.inf),
              np.full(n_net, np.inf), np.full(n_net, -1, np.int64),
              np.full((topk, n_net), np.inf),
              np.full((topk, n_net), -1, np.int64))
     cand: Dict[str, list] = {nm: [] for nm in names}
+    done = 0
+    if resume_from is not None:
+        state, cand, done = _resume_fold(resume_from, kind="networks",
+                                         ihash=ihash, names=names)
+
+    def emit(ci):
+        if on_chunk is None:
+            return
+        on_chunk(StreamFoldState(
+            kind="networks", input_hash=ihash, next_chunk=ci + 1,
+            n_chunks=n_chunks, chunk_size=chunk, n_cfg=n, networks=names,
+            metric=metric, bound=bound, topk=topk, state=state,
+            cand={nm: list(v) for nm, v in cand.items()}))
 
     def collect(mask, e, t, start):
         rows_i, cols_i = np.nonzero(mask)
@@ -1255,20 +1533,26 @@ def stream_networks(grid: ConfigGrid,
 
     def chunks():
         for ci, start in enumerate(range(0, n, chunk)):
+            if ci < done:
+                continue
             stop = min(start + chunk, n)
             fc = {k: _pad_rows(v[start:stop], chunk)
                   for k, v in fields.items()}
             yield ci, start, stop, fc
 
     if not use_jax:
-        for _, start, stop, fc in chunks():
+        for ci, start, stop, fc in chunks():
             cfg_m, cfg_u, inv_m, inv, coefs = _prepare_fields(
                 fc, _UNIQUE_BUCKET, _MAPPING_BUCKET)
             e, t = _np_grid_kernel(segments, cfg_m, cfg_u, lay, inv_m,
                                    inv, coefs)
+            e, t = _apply_chunk_hook(ci, e, t)
+            if nan_guard:
+                _guard_chunk(ci, start, stop, e, t, names)
             state, mask = _stream_reduce_body(
                 np, metric, topk, e, t, start, stop - start, bound, state)
             collect(mask, e, t, start)
+            emit(ci)
     else:
         # Round-robin the chunk kernels across devices (async dispatch);
         # the cheap stateful reduction runs in chunk order on device 0.
@@ -1280,10 +1564,13 @@ def stream_networks(grid: ConfigGrid,
         with enable_x64():
             def reduce_one(item):
                 nonlocal state
-                start, stop, e_d, t_d = item
+                ci, start, stop, e_d, t_d = item
                 if n_dev > 1:
                     e_d = jax.device_put(e_d, devs[0])
                     t_d = jax.device_put(t_d, devs[0])
+                e_d, t_d = _apply_chunk_hook(ci, e_d, t_d)
+                if nan_guard:
+                    _guard_chunk(ci, start, stop, e_d, t_d, names)
                 _JIT_STATS["calls"] += 1
                 state, mask = _jax_reduce_step()(
                     metric, topk, e_d, t_d, state, np.int64(start),
@@ -1302,11 +1589,12 @@ def stream_networks(grid: ConfigGrid,
                             cand[names[j]].append(
                                 (start + rows_i[m], e_h[pos[m], j],
                                  t_h[pos[m], j]))
+                emit(ci)
 
             for ci, start, stop, fc in chunks():
                 dev = devs[ci % n_dev] if n_dev > 1 else None
                 e_d, t_d = _dispatch_chunk(fc, lay, segments, dev, backend)
-                pending.append((start, stop, e_d, t_d))
+                pending.append((ci, start, stop, e_d, t_d))
                 if len(pending) > 2 * n_dev:
                     reduce_one(pending.pop(0))
             for item in pending:
@@ -1480,7 +1768,10 @@ def stream_layer_topk(grid: ConfigGrid,
                       backend: str | None = None,
                       shard: bool = False,
                       metric: str = "edp",
-                      bound: float | None = None) -> LayerTopK:
+                      bound: float | None = None,
+                      resume_from: "StreamFoldState | Mapping | None" = None,
+                      on_chunk=None,
+                      nan_guard: bool = True) -> LayerTopK:
     """Streamed per-layer sweep: one pass, every co-design reduction.
 
     Equivalent to ``evaluate_networks(..., per_layer=True)`` followed by
@@ -1495,7 +1786,15 @@ def stream_layer_topk(grid: ConfigGrid,
     pool inputs :func:`repro.core.hetero.codesign_problems_streaming`
     consumes, so a 49,000-point mega grid feeds the co-design search
     without materialising ``[n_cfg, n_net, n_layer]``.  Ties rank by
-    lower flat grid index everywhere (chunk-size-invariant)."""
+    lower flat grid index everywhere (chunk-size-invariant).
+
+    Crash-safety: ``on_chunk`` receives a :class:`StreamFoldState` after
+    every folded chunk; pass one back as ``resume_from=`` to restart from
+    the first unfolded chunk — the resumed result is bit-identical to an
+    uninterrupted run, and a state exported from different inputs is
+    rejected (:class:`StreamStateError`).  ``nan_guard`` checks every
+    chunk's layer-summed aggregates for NaN/inf before the fold commits
+    (:class:`ChunkCorruption` with chunk provenance)."""
     global _LAST_BACKEND
     backend = resolve_backend(backend, use_jax)
     _LAST_BACKEND = backend
@@ -1524,6 +1823,23 @@ def stream_layer_topk(grid: ConfigGrid,
              np.full((n_net, n_layer), -1, np.int64))  # layer_argmin
     b = 0.0 if bound is None else float(bound)
     cand: Dict[str, list] = {nm: [] for nm in names}
+    n_chunks = -(-n // chunk)
+    ihash = stream_input_hash(fields, networks, kind="layer_topk",
+                              metric=metric, bound=bound, topk=k,
+                              chunk=chunk)
+    done = 0
+    if resume_from is not None:
+        state, cand, done = _resume_fold(resume_from, kind="layer_topk",
+                                         ihash=ihash, names=names)
+
+    def emit(ci):
+        if on_chunk is None:
+            return
+        on_chunk(StreamFoldState(
+            kind="layer_topk", input_hash=ihash, next_chunk=ci + 1,
+            n_chunks=n_chunks, chunk_size=chunk, n_cfg=n, networks=names,
+            metric=metric, bound=bound, topk=k, state=state,
+            cand={nm: list(v) for nm, v in cand.items()}))
 
     def collect(mask, es, ts, start):
         if bound is None:
@@ -1540,20 +1856,27 @@ def stream_layer_topk(grid: ConfigGrid,
 
     def chunks():
         for ci, start in enumerate(range(0, n, chunk)):
+            if ci < done:
+                continue
             stop = min(start + chunk, n)
             fc = {k_: _pad_rows(v[start:stop], chunk)
                   for k_, v in fields.items()}
             yield ci, start, stop, fc
 
     if backend == "numpy":
-        for _, start, stop, fc in chunks():
+        for ci, start, stop, fc in chunks():
             ec, tc = _eval_fields(fc, lay, segments, "numpy", False,
                                   _UNIQUE_BUCKET, _MAPPING_BUCKET,
                                   per_layer=True)
-            state, mask, es, ts = _layer_reduce_body(
+            ec, tc = _apply_chunk_hook(ci, ec, tc)
+            new_state, mask, es, ts = _layer_reduce_body(
                 np, metric, k, ec, tc, start, stop - start, b,
                 lay_valid, state)
+            if nan_guard:     # raises BEFORE the fold commits
+                _guard_chunk(ci, start, stop, es, ts, names)
+            state = new_state
             collect(mask, es, ts, start)
+            emit(ci)
     else:
         import jax
         from jax.experimental import enable_x64
@@ -1563,21 +1886,26 @@ def stream_layer_topk(grid: ConfigGrid,
         with enable_x64():
             def reduce_one(item):
                 nonlocal state
-                start, stop, e_d, t_d = item
+                ci, start, stop, e_d, t_d = item
                 if n_dev > 1:
                     e_d = jax.device_put(e_d, devs[0])
                     t_d = jax.device_put(t_d, devs[0])
+                e_d, t_d = _apply_chunk_hook(ci, e_d, t_d)
                 _JIT_STATS["calls"] += 1
-                state, mask, es, ts = _jax_layer_reduce_step()(
+                new_state, mask, es, ts = _jax_layer_reduce_step()(
                     metric, k, e_d, t_d, state, np.int64(start),
                     np.int64(stop - start), float(b), lay_valid)
+                if nan_guard:     # raises BEFORE the fold commits
+                    _guard_chunk(ci, start, stop, es, ts, names)
+                state = new_state
                 collect(mask, es, ts, start)
+                emit(ci)
 
             for ci, start, stop, fc in chunks():
                 dev = devs[ci % n_dev] if n_dev > 1 else None
                 ec, tc = _dispatch_chunk(fc, lay, segments, dev, backend,
                                          per_layer=True)
-                pending.append((start, stop, ec, tc))
+                pending.append((ci, start, stop, ec, tc))
                 if len(pending) > 2 * n_dev:
                     reduce_one(pending.pop(0))
             for item in pending:

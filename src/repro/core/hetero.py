@@ -451,6 +451,9 @@ def codesign_problems_streaming(grid: ConfigGrid,
                                 shard: bool = False,
                                 topk: int | None = None,
                                 stream: "energymodel.LayerTopK | None" = None,
+                                resume_from=None,
+                                on_chunk=None,
+                                nan_guard: bool = True,
                                 ) -> CoDesignProblems:
     """Streamed twin of :func:`codesign_problems`: the candidate pool and
     the scoring references come from ONE chunked
@@ -471,7 +474,14 @@ def codesign_problems_streaming(grid: ConfigGrid,
     warns whenever a network's top-k holds fewer distinct config rows
     than the pool needs (pass a larger ``topk=`` then).
     Pass ``stream=`` to reuse an existing sweep (it must cover the same
-    grid with the same bound/metric and ``topk ≥ pool_size``)."""
+    grid with the same bound/metric and ``topk ≥ pool_size``).
+
+    ``resume_from`` / ``on_chunk`` / ``nan_guard`` forward to the
+    underlying :func:`repro.core.energymodel.stream_layer_topk` pass
+    (ignored when ``stream=`` is supplied), so a pool build killed
+    mid-sweep restarts from its last exported
+    :class:`repro.core.energymodel.StreamFoldState` and yields the same
+    pool bit-for-bit."""
     names = list(networks)
     n_net = len(names)
     if stream is None:
@@ -479,7 +489,9 @@ def codesign_problems_streaming(grid: ConfigGrid,
             grid, networks,
             topk=max(int(pool_size if topk is None else topk), 1),
             bound=bound, metric=metric, chunk_size=chunk_size,
-            shard=shard, backend=backend, use_jax=use_jax)
+            shard=shard, backend=backend, use_jax=use_jax,
+            resume_from=resume_from, on_chunk=on_chunk,
+            nan_guard=nan_guard)
     if stream.n_cfg != grid.n:
         raise ValueError(
             f"stream was built over a {stream.n_cfg}-point grid but the "

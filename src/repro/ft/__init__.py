@@ -1,1 +1,3 @@
 from .supervisor import Supervisor, FaultInjector  # noqa: F401
+from .faults import (BackendFault, FaultPlan, StreamKill,  # noqa: F401
+                     inject_chunk_faults)

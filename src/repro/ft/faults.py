@@ -1,0 +1,103 @@
+"""Deterministic fault injection for the streamed DSE engine.
+
+:class:`FaultPlan` is the chunk-level analogue of
+:class:`repro.ft.supervisor.FaultInjector` (which drives the training-loop
+supervisor): it installs into the streaming engine's per-chunk seam
+(``repro.core.energymodel._CHUNK_HOOK``, applied to every chunk's raw
+``(e, t)`` evaluation right before the fold) and fires three fault kinds at
+chosen chunk indices:
+
+* ``fail_at``   — raise :class:`BackendFault` (a transient backend death;
+  the service layer's retry/backoff path rides this),
+* ``corrupt_at`` — overwrite one seeded-random element of the chunk's
+  energies with NaN or +inf (silent data corruption; the engine's NaN/inf
+  guard must detect it BEFORE the fold commits and raise
+  :class:`repro.core.energymodel.ChunkCorruption` with chunk provenance),
+* ``kill_at``   — raise :class:`StreamKill` (a simulated process death
+  mid-stream; recovery resumes from the last exported
+  :class:`repro.core.energymodel.StreamFoldState` and must be bit-exact).
+
+Everything is deterministic given (plan, seed): ``FaultPlan.random`` builds
+a reproducible plan from a seed, and corruption positions derive from
+``(seed, chunk_index)`` — the CI chaos job replays a fixed seed matrix.
+``fail_at`` counts down (a chunk can fail N times then succeed) and
+``corrupt_at``/``kill_at`` fire once, so retry loops terminate; ``fired``
+records every injection for assertions.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core import energymodel
+
+
+class BackendFault(RuntimeError):
+    """Injected transient backend failure (retryable)."""
+
+
+class StreamKill(RuntimeError):
+    """Injected mid-stream kill (simulated process death)."""
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Seeded, chunk-indexed fault schedule; callable as the chunk hook."""
+
+    fail_at: Dict[int, int] = dataclasses.field(default_factory=dict)
+    corrupt_at: Dict[int, str] = dataclasses.field(default_factory=dict)
+    kill_at: Optional[int] = None
+    seed: int = 0
+    fired: List[Tuple[int, str]] = dataclasses.field(default_factory=list)
+
+    @classmethod
+    def random(cls, seed: int, n_chunks: int, *, p_fail: float = 0.2,
+               p_corrupt: float = 0.1, max_fails: int = 2) -> "FaultPlan":
+        """Reproducible random plan over ``n_chunks`` chunk indices.
+
+        Per-chunk fail counts stay ≤ ``max_fails`` so any retry budget
+        > ``max_fails`` is guaranteed to converge."""
+        rng = np.random.default_rng(seed)
+        fail_at = {ci: int(rng.integers(1, max_fails + 1))
+                   for ci in range(n_chunks) if rng.random() < p_fail}
+        corrupt_at = {ci: ("nan" if rng.random() < 0.5 else "inf")
+                      for ci in range(n_chunks)
+                      if rng.random() < p_corrupt}
+        return cls(fail_at=fail_at, corrupt_at=corrupt_at, seed=seed)
+
+    def __call__(self, ci: int, e, t):
+        if self.kill_at is not None and ci == self.kill_at:
+            self.kill_at = None
+            self.fired.append((ci, "kill"))
+            raise StreamKill(f"injected kill at chunk {ci}")
+        left = self.fail_at.get(ci, 0)
+        if left > 0:
+            self.fail_at[ci] = left - 1
+            self.fired.append((ci, "fail"))
+            raise BackendFault(f"injected backend failure at chunk {ci}")
+        kind = self.corrupt_at.pop(ci, None)
+        if kind is not None:
+            self.fired.append((ci, kind))
+            e = np.array(np.asarray(e), dtype=np.float64, copy=True)
+            rng = np.random.default_rng(self.seed * 1_000_003 + ci)
+            flat = int(rng.integers(e.size))
+            e.reshape(-1)[flat] = np.nan if kind == "nan" else np.inf
+        return e, t
+
+
+@contextlib.contextmanager
+def inject_chunk_faults(plan: FaultPlan):
+    """Install ``plan`` as the streaming engine's chunk hook for the block.
+
+    Nesting restores the previous hook on exit, so a test can layer a kill
+    plan over a service's own instrumentation."""
+    prev = energymodel._CHUNK_HOOK
+    energymodel._CHUNK_HOOK = plan
+    try:
+        yield plan
+    finally:
+        energymodel._CHUNK_HOOK = prev

@@ -1,0 +1,86 @@
+"""DSE-service launcher: drive the fault-tolerant co-design query server.
+
+Builds a :class:`repro.serving.dse_service.DSEService` over a design space
+(paper 150-point grid by default), submits a seeded synthetic mix of
+best-config / best-chip / Pareto queries, drains the queue, and prints the
+health snapshot.  ``--chaos SEED`` overlays a deterministic
+:class:`repro.ft.faults.FaultPlan` on the streaming engine while serving —
+the service must still answer everything (exactly or degraded).
+
+    PYTHONPATH=src python -m repro.launch.serve_dse --requests 12
+    PYTHONPATH=src python -m repro.launch.serve_dse --chaos 0 --deadline-s 5
+"""
+
+from __future__ import annotations
+
+import argparse
+import contextlib
+import json
+import time
+
+import numpy as np
+
+from repro.core import topology
+from repro.core.accelerator import ConfigGrid, extended_grid
+from repro.ft.faults import FaultPlan, inject_chunk_faults
+from repro.serving.dse_service import DSEService
+
+KINDS = ("best_config", "best_chip", "pareto")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--networks", nargs="*",
+                    default=["AlexNet", "VGG16", "MobileNet", "ResNet50"])
+    ap.add_argument("--extended", action="store_true",
+                    help="5,400-point extended grid (default: paper 150)")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-queue", type=int, default=32)
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall budget (default: unbounded)")
+    ap.add_argument("--chunk-size", type=int, default=64)
+    ap.add_argument("--degrade-stride", type=int, default=8)
+    ap.add_argument("--backend", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chaos", type=int, default=None,
+                    help="inject a seeded fault plan while serving")
+    args = ap.parse_args(argv)
+
+    grid = extended_grid() if args.extended else ConfigGrid.product()
+    nets = {n: topology.get_network(n) for n in args.networks}
+    svc = DSEService(grid, nets, max_queue=args.max_queue,
+                     chunk_size=args.chunk_size,
+                     degrade_stride=args.degrade_stride,
+                     backend=args.backend)
+
+    rng = np.random.default_rng(args.seed)
+    names = list(nets)
+    rejected = 0
+    for _ in range(args.requests):
+        kind = KINDS[int(rng.integers(len(KINDS)))]
+        sub = svc.submit(
+            kind,
+            network=(names[int(rng.integers(len(names)))]
+                     if kind != "best_config" else None),
+            deadline=float(rng.choice([1.2, 1.5, 2.0, 3.0])),
+            deadline_s=args.deadline_s)
+        rejected += int(not sub.accepted)
+
+    n_chunks = -(-grid.n // max(1, min(args.chunk_size, grid.n)))
+    chaos = (inject_chunk_faults(FaultPlan.random(args.chaos, n_chunks))
+             if args.chaos is not None else contextlib.nullcontext())
+    t0 = time.time()
+    with chaos:
+        responses, drained = svc.run_until_drained()
+    dt = time.time() - t0
+
+    n_deg = sum(r.degraded for r in responses)
+    print(f"served {len(responses)} responses in {dt:.2f}s "
+          f"({len(responses) / max(dt, 1e-9):.1f} q/s), "
+          f"{n_deg} degraded, {rejected} rejected, drained={drained}")
+    print(json.dumps(svc.health(), indent=2, default=str))
+    return responses
+
+
+if __name__ == "__main__":
+    main()

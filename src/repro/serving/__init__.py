@@ -1,1 +1,2 @@
 from .engine import ServeEngine  # noqa: F401
+from .dse_service import DSEService  # noqa: F401

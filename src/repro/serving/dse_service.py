@@ -1,0 +1,513 @@
+"""DSE-as-a-service: a long-lived, fault-tolerant co-design query server.
+
+ROADMAP item 1 made the case: the DSE engine's costs are front-loaded (jit
+traces, streamed mega-grid folds, candidate pools), so amortising them
+demands a resident process answering many queries — and a resident process
+must bound its queue, meet deadlines, and survive backend faults.
+:class:`DSEService` is that process's core, deliberately step-driven (no
+threads — like :class:`repro.serving.engine.ServeEngine`'s lock-step decode
+loop) so every fault-injection test is deterministic.
+
+**Query model.**  Three kinds, submitted via :meth:`DSEService.submit`:
+``best_config`` (per-network sweep argmin under a metric), ``best_chip``
+(best heterogeneous chip under a relative latency deadline ``d``), and
+``pareto`` (one network's non-dominated (chip, latency, energy) front).
+:meth:`DSEService.step` pops every queued request of the head request's
+family (config-family vs. chip-family) and metric and serves them from ONE
+shared computation — concurrent deadline queries coalesce into a single
+``pareto_codesign(points=...)`` call scoring all their deadlines at once.
+
+**Robustness ladder** (each rung independently testable):
+
+1. *Bounded admission*: the queue holds ``max_queue`` requests; overflow is
+   rejected immediately with a ``retry_after_s`` estimate — never unbounded
+   growth.
+2. *Deadlines degrade, never hang*: each request carries a wall-clock
+   budget ``deadline_s``.  A request whose remaining budget cannot cover
+   the projected exact sweep (calibrated from a measured subsampled-grid
+   sweep, extrapolated by point count) — or whose exact sweep runs out of
+   budget mid-stream — is answered from the subsampled grid and flagged
+   ``degraded=True``.
+3. *Retry with exponential backoff*: transient backend failures re-run the
+   computation after ``backoff_s · 2^attempt``, walking down the engine's
+   pallas → jax → numpy fallback chain after repeated failures.
+4. *Checkpoint/resume*: every streamed sweep exports its
+   :class:`repro.core.energymodel.StreamFoldState` after each chunk; a
+   retry resumes from the last folded chunk instead of restarting, and a
+   budget-aborted exact sweep leaves its checkpoint behind for the next
+   query with budget to finish.
+5. *Observability*: :meth:`DSEService.health` snapshots queue depth, cache
+   hits, fault/retry/fallback/resume counters, and p50/p99 latency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import energymodel, hetero
+from ..core.accelerator import ConfigGrid
+from ..core.topology import Layer
+
+
+class ServiceFault(RuntimeError):
+    """A computation failed after exhausting every retry and backend."""
+
+
+class _BudgetExhausted(RuntimeError):
+    """Internal: the wall-clock budget ran out mid-computation."""
+
+
+@dataclasses.dataclass
+class DSERequest:
+    rid: int
+    kind: str                       # "best_config" | "best_chip" | "pareto"
+    metric: str = "edp"
+    network: Optional[str] = None   # best_config: None = all networks
+    deadline: float = 2.0           # relative latency deadline (chip family)
+    deadline_s: Optional[float] = None   # wall-clock answer budget
+    submitted_at: float = 0.0
+
+
+@dataclasses.dataclass
+class DSEResponse:
+    rid: int
+    kind: str
+    ok: bool
+    degraded: bool
+    deadline_missed: bool
+    answer: Dict[str, Any]
+    error: Optional[str]
+    latency_s: float
+    backend: Optional[str]
+
+
+@dataclasses.dataclass
+class SubmitResult:
+    accepted: bool
+    rid: Optional[int]
+    queue_depth: int
+    retry_after_s: Optional[float] = None
+
+
+class DSEService:
+    """Step-driven DSE query server over one (grid, networks) design space.
+
+    All heavy state is lazy and cached per metric: the streamed per-layer
+    sweep (:func:`repro.core.energymodel.stream_layer_topk` with boundary
+    sets), the co-design problem set built on it, and the solved raw
+    (energy, latency) chip points that make every later deadline re-sweep
+    a compiled-scoring-only call.  A parallel set of caches covers the
+    ``degrade_stride``-subsampled grid — the degraded-answer tier, and the
+    calibration source for projecting exact-sweep cost."""
+
+    def __init__(self, grid: ConfigGrid,
+                 networks: Mapping[str, Sequence[Layer]], *,
+                 metric_bound: float = 0.05,
+                 pool_size: int = 4,
+                 m_cores: int = 4,
+                 max_types: int = 2,
+                 topk: int = 8,
+                 chunk_size: int = 1024,
+                 max_queue: int = 64,
+                 degrade_stride: int = 8,
+                 backend: str | None = None,
+                 max_retries: int = 3,
+                 backoff_s: float = 0.05,
+                 safety_factor: float = 2.0,
+                 clock=time.monotonic,
+                 sleep=time.sleep):
+        self.grid = grid
+        self.networks = dict(networks)
+        self.names = tuple(self.networks)
+        self.bound = float(metric_bound)
+        self.pool_size = int(pool_size)
+        self.m_cores = int(m_cores)
+        self.max_types = int(max_types)
+        self.topk = max(int(topk), int(pool_size))
+        self.chunk_size = int(chunk_size)
+        self.max_queue = int(max_queue)
+        self.backend = backend
+        self.max_retries = int(max_retries)
+        self.backoff_s = float(backoff_s)
+        self.safety = float(safety_factor)
+        self._clock = clock
+        self._sleep = sleep
+        stride = max(1, min(int(degrade_stride), grid.n))
+        self._sub_idx = np.arange(0, grid.n, stride)
+        self._sub_grid = grid.take(self._sub_idx)
+
+        self._queue: List[DSERequest] = []
+        self.responses: List[DSEResponse] = []
+        self._next_rid = 0
+        self._t0 = self._clock()
+        # tier ("exact"|"sub") × metric caches
+        self._streams: Dict[Tuple[str, str], energymodel.LayerTopK] = {}
+        self._points: Dict[Tuple[str, str], tuple] = {}
+        self._ckpt: Dict[tuple, energymodel.StreamFoldState] = {}
+        self._cost: Dict[tuple, float] = {}     # measured seconds, EMA
+        self._lat: List[float] = []
+        self.stats: Dict[str, int] = dict(
+            submitted=0, accepted=0, rejected=0, completed=0, degraded=0,
+            deadline_missed=0, errors=0, faults=0, retries=0,
+            backend_fallbacks=0, resumes=0, budget_aborts=0,
+            sweep_cache_hits=0, sweep_cache_misses=0,
+            points_cache_hits=0, points_cache_misses=0,
+            coalesced_batches=0)
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, kind: str, *, network: Optional[str] = None,
+               metric: str = "edp", deadline: float = 2.0,
+               deadline_s: Optional[float] = None) -> SubmitResult:
+        """Enqueue a query; reject-with-retry-after when the queue is full."""
+        if kind not in ("best_config", "best_chip", "pareto"):
+            raise ValueError(f"unknown query kind {kind!r}")
+        if network is not None and network not in self.networks:
+            raise ValueError(f"unknown network {network!r}")
+        if kind == "pareto" and network is None:
+            raise ValueError("pareto queries name one network")
+        self.stats["submitted"] += 1
+        if len(self._queue) >= self.max_queue:
+            self.stats["rejected"] += 1
+            return SubmitResult(accepted=False, rid=None,
+                                queue_depth=len(self._queue),
+                                retry_after_s=self._drain_estimate())
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(DSERequest(
+            rid=rid, kind=kind, metric=metric, network=network,
+            deadline=float(deadline), deadline_s=deadline_s,
+            submitted_at=self._clock()))
+        self.stats["accepted"] += 1
+        return SubmitResult(accepted=True, rid=rid,
+                            queue_depth=len(self._queue))
+
+    def _drain_estimate(self) -> float:
+        per = self._cost.get(("request",), 0.5)
+        return max(per * (len(self._queue) + 1), 0.1)
+
+    # -- retry / backoff / resume core ------------------------------------
+    def _backend_ladder(self) -> List[str | None]:
+        resolved = energymodel.resolve_backend(self.backend)
+        chain = list(energymodel.BACKENDS)
+        return chain[chain.index(resolved):] or ["numpy"]
+
+    def _with_retries(self, run, *, key: tuple,
+                      budget_end: Optional[float]):
+        """``run(backend, resume_from)`` with exponential backoff, backend
+        fallback, and checkpoint-resume.  ``_BudgetExhausted`` (raised by
+        the budget watchdog inside ``run``) propagates — it is a deadline,
+        not a fault."""
+        ladder = self._backend_ladder()
+        bi = 0
+        attempt = 0
+        while True:
+            resume = self._ckpt.get(key)
+            if resume is not None:
+                self.stats["resumes"] += 1
+            try:
+                return run(ladder[bi], resume)
+            except _BudgetExhausted:
+                self.stats["budget_aborts"] += 1
+                raise
+            except energymodel.StreamStateError:
+                # stale checkpoint (inputs changed) — drop it, count the
+                # wasted attempt, start the stream over
+                self._ckpt.pop(key, None)
+                attempt += 1
+            except Exception as e:
+                self.stats["faults"] += 1
+                attempt += 1
+                if attempt > self.max_retries:
+                    raise ServiceFault(
+                        f"{key} failed after {attempt} attempts across "
+                        f"backends {ladder[:bi + 1]}: {e}") from e
+                if attempt >= 2 and bi + 1 < len(ladder):
+                    bi += 1
+                    self.stats["backend_fallbacks"] += 1
+                delay = self.backoff_s * (2.0 ** (attempt - 1))
+                if (budget_end is not None
+                        and self._clock() + delay > budget_end):
+                    raise _BudgetExhausted(
+                        f"{key}: backoff would exceed the request budget")
+                self.stats["retries"] += 1
+                self._sleep(delay)
+
+    # -- cached artifacts --------------------------------------------------
+    def _tier(self, exact: bool):
+        if exact:
+            return "exact", self.grid, np.arange(self.grid.n)
+        return "sub", self._sub_grid, self._sub_idx
+
+    def _get_stream(self, metric: str, *, exact: bool,
+                    budget_end: Optional[float] = None
+                    ) -> energymodel.LayerTopK:
+        tier, grid, _ = self._tier(exact)
+        ck = (tier, metric)
+        if ck in self._streams:
+            self.stats["sweep_cache_hits"] += 1
+            return self._streams[ck]
+        self.stats["sweep_cache_misses"] += 1
+        key = ("stream", tier, metric)
+
+        def on_chunk(fs):
+            self._ckpt[key] = fs
+            if budget_end is not None and self._clock() > budget_end:
+                raise _BudgetExhausted(
+                    f"stream {key} out of budget at chunk {fs.next_chunk}"
+                    f"/{fs.n_chunks}; checkpoint retained")
+
+        def run(backend, resume):
+            t0 = self._clock()
+            st = energymodel.stream_layer_topk(
+                grid, self.networks, topk=self.topk, bound=self.bound,
+                metric=metric, chunk_size=self.chunk_size, backend=backend,
+                resume_from=resume, on_chunk=on_chunk)
+            if resume is None:
+                self._record_cost(key, self._clock() - t0)
+            return st
+
+        st = self._with_retries(run, key=key, budget_end=budget_end)
+        self._ckpt.pop(key, None)
+        self._streams[ck] = st
+        return st
+
+    def _get_points(self, metric: str, *, exact: bool,
+                    budget_end: Optional[float] = None) -> tuple:
+        """(problems, raw energy [n_chips, n_net], raw latency) for one
+        tier — the solved chip points every deadline re-sweep reuses."""
+        tier, grid, _ = self._tier(exact)
+        ck = (tier, metric)
+        if ck in self._points:
+            self.stats["points_cache_hits"] += 1
+            return self._points[ck]
+        self.stats["points_cache_misses"] += 1
+        stream = self._get_stream(metric, exact=exact,
+                                  budget_end=budget_end)
+        key = ("points", tier, metric)
+
+        def run(backend, resume):
+            t0 = self._clock()
+            probs = hetero.codesign_problems_streaming(
+                grid, self.networks, self.m_cores,
+                max_types=self.max_types,
+                pool_size=min(self.pool_size, grid.n), bound=self.bound,
+                metric=metric, backend=backend, stream=stream)
+            base = hetero.pareto_codesign(probs, n_deadlines=2)
+            self._record_cost(key, self._clock() - t0)
+            return probs, base.energy, base.latency
+
+        out = self._with_retries(run, key=key, budget_end=budget_end)
+        self._points[ck] = out
+        return out
+
+    def _record_cost(self, key: tuple, dt: float):
+        prev = self._cost.get(key)
+        self._cost[key] = dt if prev is None else 0.5 * prev + 0.5 * dt
+
+    def _projected_exact_cost(self, metric: str, chip_family: bool
+                              ) -> Optional[float]:
+        """Projected seconds for the exact artifact: measured cost if
+        known, else the subsampled tier's measured cost scaled by point
+        ratio — None when neither has run yet."""
+        scale = self.grid.n / max(self._sub_grid.n, 1)
+        total = 0.0
+        known = False
+        stages = ["stream", "points"] if chip_family else ["stream"]
+        for stage in stages:
+            k_ex = (stage, "exact", metric)
+            k_sub = (stage, "sub", metric)
+            if k_ex in self._cost:
+                total += self._cost[k_ex]
+                known = True
+            elif k_sub in self._cost:
+                total += self._cost[k_sub] * scale * self.safety
+                known = True
+        return total if known else None
+
+    # -- serving -----------------------------------------------------------
+    def step(self) -> List[DSEResponse]:
+        """Serve ONE coalesced batch: every queued request sharing the
+        head request's family and metric."""
+        if not self._queue:
+            return []
+        head = self._queue[0]
+        chip_family = head.kind in ("best_chip", "pareto")
+        batch = [r for r in self._queue
+                 if (r.kind in ("best_chip", "pareto")) == chip_family
+                 and r.metric == head.metric]
+        ids = {id(r) for r in batch}
+        self._queue = [r for r in self._queue if id(r) not in ids]
+        if len(batch) > 1:
+            self.stats["coalesced_batches"] += 1
+        t0 = self._clock()
+        out = self._serve_batch(batch, head.metric, chip_family)
+        self._record_cost(("request",),
+                          (self._clock() - t0) / max(len(batch), 1))
+        self.responses.extend(out)
+        return out
+
+    def _serve_batch(self, batch, metric, chip_family):
+        now = self._clock()
+
+        def rem(r):
+            if r.deadline_s is None:
+                return None
+            return r.deadline_s - (now - r.submitted_at)
+
+        exact_ready = (("exact", metric) in
+                       (self._points if chip_family else self._streams))
+        if exact_ready:
+            exact_grp, degraded_grp = list(batch), []
+        else:
+            # the sub tier is cheap, always useful (degraded answers) and
+            # calibrates the exact-cost projection — build it first
+            try:
+                self._ensure_tier(metric, chip_family, exact=False,
+                                  budget_end=None)
+            except ServiceFault as e:
+                return [self._respond(r, ok=False, degraded=True,
+                                      answer={}, error=str(e))
+                        for r in batch]
+            proj = self._projected_exact_cost(metric, chip_family)
+            exact_grp, degraded_grp = [], []
+            for r in batch:
+                budget = rem(r)
+                if budget is not None and (
+                        budget <= 0 or (proj is not None and budget < proj)):
+                    degraded_grp.append(r)
+                else:
+                    exact_grp.append(r)
+        if exact_grp and not exact_ready:
+            ends = [r.submitted_at + r.deadline_s for r in exact_grp
+                    if r.deadline_s is not None]
+            budget_end = (None if len(ends) < len(exact_grp)
+                          else max(ends))
+            try:
+                self._ensure_tier(metric, chip_family, exact=True,
+                                  budget_end=budget_end)
+            except (_BudgetExhausted, ServiceFault):
+                # budget ran out mid-stream (checkpoint retained for the
+                # next caller) or the backend chain is exhausted — degrade
+                degraded_grp.extend(exact_grp)
+                exact_grp = []
+        out = []
+        for grp, degraded in ((exact_grp, False), (degraded_grp, True)):
+            if not grp:
+                continue
+            try:
+                out.extend(self._answer_group(grp, metric, chip_family,
+                                              degraded=degraded))
+            except ServiceFault as e:        # pragma: no cover
+                out.extend(self._respond(r, ok=False, degraded=degraded,
+                                         answer={}, error=str(e))
+                           for r in grp)
+        return out
+
+    def _ensure_tier(self, metric, chip_family, *, exact, budget_end):
+        if chip_family:
+            self._get_points(metric, exact=exact, budget_end=budget_end)
+        else:
+            self._get_stream(metric, exact=exact, budget_end=budget_end)
+
+    def _answer_group(self, grp, metric, chip_family, *, degraded):
+        tier_exact = not degraded
+        _, _, idx_map = self._tier(tier_exact)
+        if not chip_family:
+            stream = self._get_stream(metric, exact=tier_exact)
+            return [self._respond(r, ok=True, degraded=degraded,
+                                  answer=self._config_answer(
+                                      r, stream, idx_map))
+                    for r in grp]
+        probs, pts_e, pts_l = self._get_points(metric, exact=tier_exact)
+        deadlines = sorted({float(r.deadline) for r in grp})
+        par = hetero.pareto_codesign(probs,
+                                     deadlines=np.asarray(deadlines),
+                                     points=(pts_e, pts_l))
+        out = []
+        for r in grp:
+            di = deadlines.index(float(r.deadline))
+            if r.kind == "best_chip":
+                ans = self._chip_answer(par, probs, di, idx_map)
+            else:
+                ans = dict(network=r.network,
+                           frontier=par.frontier(r.network),
+                           pool=[int(idx_map[p]) for p in probs.pool])
+            out.append(self._respond(r, ok=True, degraded=degraded,
+                                     answer=ans))
+        return out
+
+    def _config_answer(self, r, stream, idx_map):
+        def one(j):
+            return dict(
+                idx=int(idx_map[stream.argmin[j]]),
+                metric=float(stream.min_metric[j]),
+                energy=float(stream.min_energy[j]),
+                latency=float(stream.min_latency[j]))
+        if r.network is not None:
+            return one(self.names.index(r.network))
+        return {nm: one(j) for j, nm in enumerate(self.names)}
+
+    def _chip_answer(self, par, probs, di, idx_map):
+        ci = int(par.best_chip[di])
+        if ci < 0:
+            return dict(feasible=False, deadline=float(par.deadlines[di]))
+        return dict(
+            feasible=True, deadline=float(par.deadlines[di]),
+            chip_types=[int(idx_map[probs.pool[p]])
+                        for p in par.chip_types[ci]],
+            chip_counts=[int(c) for c in par.chip_counts[ci]],
+            score=float(par.scores[ci, di]))
+
+    def _respond(self, r, *, ok, degraded, answer, error=None):
+        lat = self._clock() - r.submitted_at
+        missed = r.deadline_s is not None and lat > r.deadline_s
+        self.stats["completed"] += 1
+        self.stats["degraded"] += int(degraded and ok)
+        self.stats["deadline_missed"] += int(missed)
+        self.stats["errors"] += int(not ok)
+        self._lat.append(lat)
+        if len(self._lat) > 4096:
+            del self._lat[:2048]
+        return DSEResponse(rid=r.rid, kind=r.kind, ok=ok,
+                           degraded=degraded, deadline_missed=missed,
+                           answer=answer, error=error, latency_s=lat,
+                           backend=energymodel.last_backend())
+
+    def run_until_drained(self, max_steps: int = 1000,
+                          timeout_s: Optional[float] = None
+                          ) -> Tuple[List[DSEResponse], bool]:
+        """Step until the queue empties; ``(responses, drained)`` where
+        ``drained=False`` means max_steps/timeout stopped it early."""
+        out: List[DSEResponse] = []
+        t0 = self._clock()
+        for _ in range(max_steps):
+            if not self._queue:
+                return out, True
+            if timeout_s is not None and self._clock() - t0 > timeout_s:
+                return out, False
+            out.extend(self.step())
+        return out, not self._queue
+
+    # -- observability -----------------------------------------------------
+    def health(self) -> Dict[str, Any]:
+        lat = sorted(self._lat)
+
+        def pct(p):
+            if not lat:
+                return 0.0
+            return float(lat[min(int(p * (len(lat) - 1)), len(lat) - 1)])
+        return dict(
+            uptime_s=self._clock() - self._t0,
+            queue_depth=len(self._queue),
+            max_queue=self.max_queue,
+            n_cfg=self.grid.n,
+            n_cfg_degraded=self._sub_grid.n,
+            checkpoints=len(self._ckpt),
+            last_backend=energymodel.last_backend(),
+            jit=energymodel.jit_cache_stats(),
+            p50_s=pct(0.50), p99_s=pct(0.99), n_lat=len(lat),
+            **self.stats)

@@ -15,6 +15,7 @@ a scan over the prompt (state carried) — same engine API.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -102,11 +103,35 @@ class ServeEngine:
                 self.active[s] = None       # slot freed → continuous batching
         return emitted
 
-    finished: List[Request]
+    def run_until_drained(self, max_steps: int = 1000,
+                          timeout_s: Optional[float] = None
+                          ) -> "DrainResult":
+        """Step until queue and slots empty; never silently truncates.
 
-    def run_until_drained(self, max_steps: int = 1000) -> List[Request]:
+        Stops early at ``max_steps`` or after ``timeout_s`` seconds of
+        wall clock; either way the return value is the list of finished
+        requests SO FAR with ``drained`` telling whether the engine
+        actually emptied — callers that previously assumed a plain list
+        still work (DrainResult is one)."""
+        t0 = time.monotonic()
+        drained = False
         for _ in range(max_steps):
-            self.step()
             if not self.queue and all(a is None for a in self.active):
+                drained = True
                 break
-        return self.finished
+            if timeout_s is not None and time.monotonic() - t0 > timeout_s:
+                break
+            self.step()
+        else:
+            drained = (not self.queue
+                       and all(a is None for a in self.active))
+        return DrainResult(self.finished, drained)
+
+
+class DrainResult(List[Request]):
+    """``run_until_drained``'s finished requests + a ``drained`` flag
+    (False: stopped at max_steps/timeout with work still queued)."""
+
+    def __init__(self, finished: List[Request], drained: bool):
+        super().__init__(finished)
+        self.drained = drained

@@ -73,6 +73,10 @@ def test_referenced_paths_exist(doc):
     for p in sorted(set(_PATH_RE.findall(doc.read_text()))):
         if "*" in p or "<" in p:
             continue
+        # CI-regenerated artifacts (BENCH_*.quick.json) are legitimately
+        # absent in a fresh checkout — the docs may still describe them
+        if p.endswith(".quick.json"):
+            continue
         if not ((ROOT / p).exists() or (doc.parent / p).exists()):
             missing.append(p)
     assert not missing, (

@@ -1,0 +1,99 @@
+"""Engine-boundary validation: poisoned ConfigGrid columns and broken
+layer shapes are rejected with errors naming the exact column/field and
+row/layer index — they never reach the reductions, where a NaN would
+silently lose every (value, index) comparison and vanish."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import energymodel, topology
+from repro.core.accelerator import ConfigGrid
+
+
+def _grid():
+    return ConfigGrid.product(arrays=((16, 16), (32, 32), (64, 64)),
+                              gb_psum_kb=(13, 54, 216))
+
+
+def _poison(grid, column, row, value):
+    fields = {k: v.copy() for k, v in grid.fields.items()}
+    fields[column][row] = value
+    return ConfigGrid(fields=fields)
+
+
+def test_nan_grid_row_names_column_and_row():
+    with pytest.raises(ValueError,
+                       match=r"column 'gb_psum_kb' row 4 is non-finite"):
+        _poison(_grid(), "gb_psum_kb", 4, np.nan)
+
+
+def test_inf_grid_row_names_column_and_row():
+    with pytest.raises(ValueError,
+                       match=r"column 'e_mac' row 2 is non-finite"):
+        _poison(_grid(), "e_mac", 2, np.inf)
+
+
+def test_zero_rows_rejected():
+    with pytest.raises(ValueError,
+                       match=r"column 'rows' row 3 must be > 0"):
+        _poison(_grid(), "rows", 3, 0.0)
+
+
+def test_negative_energy_coefficient_rejected():
+    with pytest.raises(ValueError,
+                       match=r"column 'e_mac' row 0 must be >= 0"):
+        _poison(_grid(), "e_mac", 0, -1.0)
+
+
+def test_zero_energy_coefficient_allowed():
+    # e_* are scale factors, not divisors: zero is a legal ablation
+    g = _poison(_grid(), "e_pe_idle", 0, 0.0)
+    assert g.n == _grid().n
+
+
+def test_poisoned_grid_never_reaches_stream():
+    """Regression: the old behavior let a NaN row flow into the fold and
+    silently drop out of the top-k; now construction itself fails."""
+    grid = _grid()
+    nets = {"AlexNet": topology.get_network("AlexNet")}
+    fields = {k: v.copy() for k, v in grid.fields.items()}
+    fields["gb_ifmap_kb"][1] = np.nan
+    with pytest.raises(ValueError, match=r"'gb_ifmap_kb' row 1"):
+        bad = ConfigGrid(fields=fields)
+        energymodel.stream_layer_topk(bad, nets, topk=2, chunk_size=3)
+
+
+def _nets_with(layer):
+    base = topology.get_network("AlexNet")
+    return {"Broken": list(base[:1]) + [layer]}
+
+
+def test_zero_channel_layer_names_network_layer_field():
+    bad = dataclasses.replace(topology.get_network("AlexNet")[1], c_in=0)
+    with pytest.raises(ValueError,
+                       match=r"network 'Broken': layer \d+ field 'c_ch'"):
+        energymodel.evaluate_networks(_grid(), _nets_with(bad))
+
+
+def test_nan_layer_shape_rejected():
+    bad = dataclasses.replace(topology.get_network("AlexNet")[1],
+                              h_in=np.nan)
+    with pytest.raises(ValueError, match=r"network 'Broken':.*non-finite"):
+        energymodel.evaluate_networks(_grid(), _nets_with(bad))
+
+
+def test_zero_kernel_rejected():
+    # stride=0 already dies in Layer.h_out; k=0 survives shape derivation
+    # and must be stopped by the boundary validator instead
+    bad = dataclasses.replace(topology.get_network("AlexNet")[1], k=0)
+    with pytest.raises(ValueError,
+                       match=r"field '(ky|kx)' must be >= 1"):
+        energymodel.evaluate_networks(_grid(), _nets_with(bad))
+
+
+def test_good_inputs_still_pass():
+    energy, latency = energymodel.evaluate_networks(
+        _grid(), {"AlexNet": topology.get_network("AlexNet")})
+    assert np.isfinite(energy).all() and np.isfinite(latency).all()

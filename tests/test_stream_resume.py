@@ -1,0 +1,181 @@
+"""Crash-safe resumable streaming: bit-exact resume across kill points ×
+chunk sizes × backends, input-hash rejection, and npz round-trips.
+
+The contract under test: a stream killed after any chunk and resumed from
+the exported :class:`repro.core.energymodel.StreamFoldState` produces
+results BIT-identical to the uninterrupted run — the (value, flat index)
+tie-break discipline makes the fold independent of where it was split."""
+
+import numpy as np
+import pytest
+
+from repro.core import energymodel, hetero, topology
+from repro.core.accelerator import ConfigGrid
+from repro.ft.faults import FaultPlan, StreamKill, inject_chunk_faults
+
+NETS = ("AlexNet", "MobileNet")
+CHUNKS = (3, 5, 7)              # 18 points -> 6 / 4 / 3 chunks
+BACKENDS = ("numpy", "jax")
+
+
+@pytest.fixture(scope="module")
+def networks():
+    return {n: topology.get_network(n) for n in NETS}
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return ConfigGrid.product(arrays=((16, 16), (32, 32), (64, 64)),
+                              gb_psum_kb=(13, 54, 216),
+                              gb_ifmap_kb=(27, 108))
+
+
+def _run(grid, networks, *, chunk, backend, **kw):
+    return energymodel.stream_layer_topk(
+        grid, networks, topk=4, bound=0.05, chunk_size=chunk,
+        backend=backend, **kw)
+
+
+def _assert_same(res, ref, networks):
+    np.testing.assert_array_equal(res.topk_idx, ref.topk_idx)
+    np.testing.assert_array_equal(res.topk_metric, ref.topk_metric)
+    np.testing.assert_array_equal(res.layer_energy, ref.layer_energy)
+    np.testing.assert_array_equal(res.layer_latency, ref.layer_latency)
+    np.testing.assert_array_equal(res.min_energy, ref.min_energy)
+    np.testing.assert_array_equal(res.min_latency, ref.min_latency)
+    np.testing.assert_array_equal(res.min_metric, ref.min_metric)
+    np.testing.assert_array_equal(res.argmin, ref.argmin)
+    np.testing.assert_array_equal(res.layer_min_metric,
+                                  ref.layer_min_metric)
+    np.testing.assert_array_equal(res.layer_argmin, ref.layer_argmin)
+    for nm in networks:
+        np.testing.assert_array_equal(res.boundary_idx[nm],
+                                      ref.boundary_idx[nm])
+        np.testing.assert_array_equal(res.boundary_energy[nm],
+                                      ref.boundary_energy[nm])
+        np.testing.assert_array_equal(res.boundary_latency[nm],
+                                      ref.boundary_latency[nm])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_resume_bit_exact_every_kill_point(grid, networks, backend, chunk):
+    """Kill after EVERY chunk boundary; each resume must be bit-exact
+    (covers >= 3 kill points x >= 3 chunk sizes x both backends)."""
+    ref = _run(grid, networks, chunk=chunk, backend=backend)
+    states = []
+    _run(grid, networks, chunk=chunk, backend=backend,
+         on_chunk=states.append)
+    assert len(states) == -(-grid.n // chunk)
+    assert states[-1].complete
+    for fs in states:
+        # resume through the serialized export, not the live object
+        res = _run(grid, networks, chunk=chunk, backend=backend,
+                   resume_from=fs.export_state())
+        _assert_same(res, ref, networks)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_killed_stream_resumes_exactly(grid, networks, backend):
+    """A FaultPlan mid-stream kill loses nothing: resume from the last
+    on_chunk export reproduces the uninterrupted result bit-for-bit."""
+    chunk = 5
+    ref = _run(grid, networks, chunk=chunk, backend=backend)
+    states = []
+    plan = FaultPlan(kill_at=2)
+    with inject_chunk_faults(plan):
+        with pytest.raises(StreamKill):
+            _run(grid, networks, chunk=chunk, backend=backend,
+                 on_chunk=states.append)
+    assert plan.fired == [(2, "kill")]
+    assert len(states) == 2                 # chunks 0,1 folded before kill
+    res = _run(grid, networks, chunk=chunk, backend=backend,
+               resume_from=states[-1])
+    _assert_same(res, ref, networks)
+
+
+def test_resume_rejects_changed_inputs(grid, networks):
+    states = []
+    _run(grid, networks, chunk=5, backend="numpy", on_chunk=states.append)
+    fs = states[0]
+    with pytest.raises(energymodel.StreamStateError):
+        _run(grid, networks, chunk=7, backend="numpy", resume_from=fs)
+    with pytest.raises(energymodel.StreamStateError):
+        _run(grid.take(np.arange(grid.n - 1)), networks, chunk=5,
+             backend="numpy", resume_from=fs)
+    with pytest.raises(energymodel.StreamStateError):
+        energymodel.stream_layer_topk(
+            grid, networks, topk=4, bound=0.10, chunk_size=5,
+            backend="numpy", resume_from=fs)
+    with pytest.raises(energymodel.StreamStateError):
+        energymodel.stream_layer_topk(
+            grid, networks, topk=4, bound=0.05, metric="energy",
+            chunk_size=5, backend="numpy", resume_from=fs)
+    # wrong stream kind
+    with pytest.raises(energymodel.StreamStateError):
+        energymodel.stream_networks(grid, networks, chunk_size=5,
+                                    backend="numpy", resume_from=fs)
+
+
+def test_export_npz_roundtrip(tmp_path, grid, networks):
+    states = []
+    ref = _run(grid, networks, chunk=5, backend="numpy",
+               on_chunk=states.append)
+    path = tmp_path / "fold.npz"
+    states[1].save(path)
+    assert path.exists() and not (tmp_path / "fold.npz.tmp").exists()
+    fs = energymodel.StreamFoldState.load(path)
+    assert fs.next_chunk == 2 and fs.input_hash == states[1].input_hash
+    res = _run(grid, networks, chunk=5, backend="numpy", resume_from=fs)
+    _assert_same(res, ref, networks)
+
+
+def test_resume_from_complete_state(grid, networks):
+    states = []
+    ref = _run(grid, networks, chunk=5, backend="numpy",
+               on_chunk=states.append)
+    res = _run(grid, networks, chunk=5, backend="numpy",
+               resume_from=states[-1])
+    _assert_same(res, ref, networks)
+
+
+@pytest.mark.parametrize("kill_at", (1, 2))
+def test_stream_networks_resume(grid, networks, kill_at):
+    ref = energymodel.stream_networks(grid, networks, chunk_size=5,
+                                      backend="numpy")
+    states = []
+    with inject_chunk_faults(FaultPlan(kill_at=kill_at)):
+        with pytest.raises(StreamKill):
+            energymodel.stream_networks(grid, networks, chunk_size=5,
+                                        backend="numpy",
+                                        on_chunk=states.append)
+    res = energymodel.stream_networks(grid, networks, chunk_size=5,
+                                      backend="numpy",
+                                      resume_from=states[-1])
+    np.testing.assert_array_equal(res.topk_idx, ref.topk_idx)
+    np.testing.assert_array_equal(res.topk_metric, ref.topk_metric)
+    np.testing.assert_array_equal(res.argmin, ref.argmin)
+    np.testing.assert_array_equal(res.min_metric, ref.min_metric)
+    for nm in networks:
+        np.testing.assert_array_equal(res.boundary_idx[nm],
+                                      ref.boundary_idx[nm])
+
+
+def test_codesign_pool_survives_kill(grid, networks):
+    """hetero.codesign_problems_streaming passthrough: a pool build killed
+    mid-sweep and resumed yields the identical pool and problem set."""
+    kw = dict(m_cores=3, max_types=2, pool_size=3, chunk_size=5,
+              backend="numpy")
+    ref = hetero.codesign_problems_streaming(grid, networks, **kw)
+    states = []
+    with inject_chunk_faults(FaultPlan(kill_at=2)):
+        with pytest.raises(StreamKill):
+            hetero.codesign_problems_streaming(
+                grid, networks, on_chunk=states.append, **kw)
+    res = hetero.codesign_problems_streaming(
+        grid, networks, resume_from=states[-1], **kw)
+    assert res.pool == ref.pool
+    assert res.chips == ref.chips
+    np.testing.assert_array_equal(res.lat_dense, ref.lat_dense)
+    np.testing.assert_array_equal(res.e_layer, ref.e_layer)
+    np.testing.assert_array_equal(res.min_energy, ref.min_energy)

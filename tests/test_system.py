@@ -44,7 +44,14 @@ def test_serving_engine_continuous_batching():
                            prompt=np.array([1, 2, 3 + rid]),
                            max_new_tokens=4))
     done = eng.run_until_drained(max_steps=60)
+    assert done.drained is True
     assert len(done) == 4
     for r in done:
         assert len(r.out_tokens) == 4
         assert all(0 <= t < cfg.vocab for t in r.out_tokens)
+
+    # truncation is reported, not silent: one step can't finish a request
+    eng.submit(Request(rid=99, prompt=np.array([1, 2]), max_new_tokens=4))
+    partial = eng.run_until_drained(max_steps=1)
+    assert partial.drained is False
+    assert eng.run_until_drained(max_steps=60).drained is True
