@@ -109,6 +109,8 @@ def main() -> None:
     ap.add_argument("--committed", default="BENCH_dse.json")
     ap.add_argument("--serve-quick-json", default="BENCH_serve.quick.json")
     ap.add_argument("--serve-committed", default="BENCH_serve.json")
+    ap.add_argument("--resil-quick-json", default="BENCH_resil.quick.json")
+    ap.add_argument("--resil-committed", default="BENCH_resil.json")
     ap.add_argument("--floors", default="benchmarks/floors.json")
     ap.add_argument("--report", default=None,
                     help="also write the pass/fail lines to this file "
@@ -147,6 +149,22 @@ def main() -> None:
             problems.append(
                 f"serve quick payload {serve_quick_path} not found "
                 "(run `python -m benchmarks.serve_bench --quick` first)")
+
+    resil_floors = floors.get("resil", {})
+    if resil_floors:
+        resil = json.loads(Path(args.resil_committed).read_text())
+        problems += check_serve(resil, resil_floors.get("committed", {}),
+                                "resil committed")
+        resil_quick_path = Path(args.resil_quick_json)
+        if resil_quick_path.exists():
+            resil_quick = json.loads(resil_quick_path.read_text())
+            problems += check_serve(resil_quick,
+                                    resil_floors.get("quick", {}),
+                                    "resil quick")
+        else:
+            problems.append(
+                f"resil quick payload {resil_quick_path} not found "
+                "(run `python -m benchmarks.resil_bench --quick` first)")
 
     lines = ([f"FLOOR CHECK FAILED: {p}" for p in problems]
              or ["floor checks passed "

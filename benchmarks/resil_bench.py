@@ -1,0 +1,226 @@
+"""Resilience benchmark: writes BENCH_resil[.quick].json.
+
+    PYTHONPATH=src python -m benchmarks.resil_bench [--quick]
+
+Three measurements, mirroring the fault-aware resilience layer the test
+suite proves functionally (tests/test_resilience.py):
+
+* ``batch`` — the scenario-batched re-schedule solver: every
+  (chip × network × fault-scenario) problem of a sampled chip set is
+  solved by ONE ``batch_schedule_hetero(strict=False)`` call and by the
+  per-scenario ``schedule_hetero_oracle`` python loop.  ``speedup`` is
+  the loop/batch time ratio (floor-checked ≥ 10× on full runs) and
+  ``max_rel_err_resil`` MUST stay at 0.0 — the batch is bit-exact,
+  including +inf bottlenecks on scenarios that kill every core;
+* ``codesign`` — :func:`repro.core.hetero.resilience_codesign` over the
+  candidate-chip enumeration: ``front_contains_nominal`` (the
+  (nominal, worst-case) dominance front must contain the nominal-only
+  winner — floor-checked ≥ 1), front size, and the worst-case overhead
+  the robust pick saves vs the nominal pick;
+* ``chaos`` — a :class:`repro.serving.dse_service.DSEService` under the
+  CI seed matrix of chunk-fault plans, each seed ending in a
+  :meth:`fault_event` re-schedule: every query answered, zero errors.
+
+``benchmarks/check_floors.py`` asserts the guardrails in
+``benchmarks/floors.json`` (``resil`` section; ``*_max`` keys are
+ceilings).  Schema documented in docs/bench_schema.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import energymodel, hetero, partition, topology
+from repro.core.accelerator import ConfigGrid, extended_grid
+from repro.ft import hw_faults
+from repro.ft.faults import FaultPlan, inject_chunk_faults
+from repro.serving.dse_service import DSEService
+
+BENCH_RESIL_JSON = Path("BENCH_resil.json")
+BENCH_RESIL_QUICK_JSON = Path("BENCH_resil.quick.json")
+
+QUICK_NETS = ("AlexNet", "MobileNet", "ResNet50")
+FULL_NETS = ("AlexNet", "VGG16", "GoogleNet", "MobileNet", "ResNet50",
+             "MobileNetV2")
+CHAOS_SEEDS = (0, 1, 2)
+
+
+def _build_problems(grid, networks, chips, *, seed: int):
+    """Sampled chips × {nominal, core losses, degradations} × networks
+    as ONE stacked (lat, counts, n_layers) problem block plus the
+    per-problem metadata the oracle loop needs."""
+    lens = energymodel.network_layer_counts(networks)
+    n_net = len(networks)
+    per_chip = []
+    for ci, (ty, cn) in enumerate(chips):
+        scens = hw_faults.all_single_core_failures(cn)
+        scens += hw_faults.random_degradations(seed + ci, grid, ty,
+                                               n_scenarios=2)
+        # one scenario that kills the whole chip — the infeasible path
+        # must round-trip through the batch as +inf, not an exception
+        scens.append(hw_faults.FaultScenario(
+            "chip_dead", tuple(hw_faults.CoreFailure(t, n=int(c))
+                               for t, c in enumerate(cn) if c)))
+        batch = hw_faults.expand_scenarios(grid, ty, cn, scens)
+        e_l, t_l = energymodel.evaluate_networks(batch.grid, networks,
+                                                 per_layer=True)
+        per_chip.append(hw_faults.scenario_problems(batch, e_l, t_l, lens))
+    t_max = max(p[0].shape[1] for p in per_chip)
+    lats, cnts, nls = [], [], []
+    for lat, cnt, nl, _en in per_chip:
+        pad = t_max - lat.shape[1]
+        if pad:
+            lat = np.pad(lat, ((0, 0), (0, pad), (0, 0)))
+            cnt = np.pad(cnt, ((0, 0), (0, pad)))
+        lats.append(lat)
+        cnts.append(cnt)
+        nls.append(nl)
+    return (np.concatenate(lats), np.concatenate(cnts),
+            np.concatenate(nls), n_net)
+
+
+def _batch_metrics(grid, networks, *, n_chips: int, max_types: int,
+                   pool_size: int, repeats: int = 3) -> dict:
+    probs = hetero.codesign_problems(grid, networks, 4,
+                                     max_types=max_types,
+                                     pool_size=pool_size)
+    rng = np.random.default_rng(0)
+    pick = rng.choice(len(probs.chips),
+                      size=min(n_chips, len(probs.chips)), replace=False)
+    chips = [probs.chips[i] for i in sorted(pick)]
+    lat, counts, n_layers, _ = _build_problems(grid, networks, chips,
+                                               seed=0)
+    n_problems = lat.shape[0]
+
+    partition.batch_schedule_hetero(lat, counts, n_layers=n_layers,
+                                    strict=False)          # warm jit
+    t_batch = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = partition.batch_schedule_hetero(lat, counts,
+                                              n_layers=n_layers,
+                                              strict=False)
+        t_batch = min(t_batch, time.perf_counter() - t0)
+
+    t0 = time.perf_counter()
+    ref = np.empty(n_problems)
+    for i in range(n_problems):
+        if not (counts[i] > 0).any():
+            ref[i] = np.inf
+            continue
+        ref[i] = partition.schedule_hetero_oracle(
+            lat[i, :, :n_layers[i]], counts[i])["bottleneck"]
+    t_oracle = time.perf_counter() - t0
+
+    feas = np.isfinite(ref)
+    assert (res.feasible == feas).all()
+    err = float(np.max(np.abs(res.bottleneck[feas] - ref[feas])
+                       / np.maximum(np.abs(ref[feas]), 1e-30),
+                       initial=0.0))
+    n_exact = int((res.bottleneck[feas] == ref[feas]).sum())
+    return dict(n_chips=len(chips), n_problems=n_problems,
+                n_infeasible=int((~feas).sum()),
+                t_batch_s=t_batch, t_oracle_s=t_oracle,
+                speedup=t_oracle / t_batch,
+                max_rel_err_resil=err,
+                n_exact=n_exact, n_feasible=int(feas.sum()))
+
+
+def _codesign_metrics(grid, networks, *, max_types: int,
+                      pool_size: int) -> dict:
+    t0 = time.perf_counter()
+    res = hetero.resilience_codesign(grid, networks,
+                                     max_types=max_types,
+                                     pool_size=pool_size,
+                                     degradations=((2, 2), (4, 4)))
+    elapsed = time.perf_counter() - t0
+    bn, br = res.best_nominal, res.best_robust
+    return dict(n_chips=res.n_chips,
+                n_scenarios=len(res.scenario_names),
+                elapsed_s=elapsed,
+                front_size=int(res.front.sum()),
+                front_contains_nominal=int(bool(res.front[bn])),
+                front_contains_robust=int(bool(res.front[br])),
+                best_nominal_score=float(res.nominal_score[bn]),
+                best_nominal_worst=float(res.worst_score[bn]),
+                best_robust_score=float(res.nominal_score[br]),
+                best_robust_worst=float(res.worst_score[br]),
+                robust_worst_gain=float(res.worst_score[bn]
+                                        / res.worst_score[br]))
+
+
+def _chaos_metrics(grid, networks, *, chunk_size: int) -> dict:
+    """Chunk faults while serving, then a fault_event re-schedule per
+    seed — the service must answer everything, zero errors."""
+    n_chunks = -(-grid.n // chunk_size)
+    served = errors = degraded = reschedules = 0
+    for seed in CHAOS_SEEDS:
+        svc = DSEService(grid, networks, chunk_size=chunk_size,
+                         max_retries=30, backoff_s=1e-4)
+        plan = FaultPlan.random(seed, n_chunks, p_fail=0.3, p_corrupt=0.2)
+        with inject_chunk_faults(plan):
+            svc.submit("best_chip", deadline=2.0)
+            out, drained = svc.run_until_drained(max_steps=100)
+            assert drained
+            chip = out[0].answer
+            if out[0].ok and chip.get("feasible"):
+                scen = hw_faults.all_single_core_failures(
+                    chip["chip_counts"])[seed % len(chip["chip_counts"])]
+                svc.fault_event(chip["chip_types"], chip["chip_counts"],
+                                scen)
+                more, drained = svc.run_until_drained(max_steps=100)
+                assert drained
+                out += more
+                reschedules += svc.stats["reschedules"]
+        served += len(out)
+        errors += sum(not r.ok for r in out)
+        degraded += sum(r.degraded for r in out)
+    return dict(seeds=list(CHAOS_SEEDS), served=served, errors=errors,
+                degraded=degraded, reschedules=reschedules)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small grid + fewer chips (CI guardrail mode)")
+    args = ap.parse_args()
+
+    if args.quick:
+        grid = ConfigGrid.product()                       # 150 points
+        nets = {n: topology.get_network(n) for n in QUICK_NETS}
+        n_chips, max_types, pool, chunk = 8, 2, 4, 16
+        out_path = BENCH_RESIL_QUICK_JSON
+    else:
+        grid = extended_grid()                            # 5,400 points
+        nets = {n: topology.get_network(n) for n in FULL_NETS}
+        n_chips, max_types, pool, chunk = 24, 3, 6, 256
+        out_path = BENCH_RESIL_JSON
+
+    payload = dict(
+        schema=1,
+        quick=bool(args.quick),
+        host=platform.node(),
+        python=platform.python_version(),
+        batch=_batch_metrics(grid, nets, n_chips=n_chips,
+                             max_types=max_types, pool_size=pool),
+        codesign=_codesign_metrics(grid, nets, max_types=max_types,
+                                   pool_size=pool),
+        chaos=_chaos_metrics(grid, nets, chunk_size=chunk),
+    )
+    out_path.write_text(json.dumps(payload, indent=2) + "\n")
+    b, c = payload["batch"], payload["codesign"]
+    print(f"{out_path}: {b['n_problems']} problems, batch speedup "
+          f"{b['speedup']:.1f}x (err {b['max_rel_err_resil']:.1e}), "
+          f"front {c['front_size']} chips "
+          f"(nominal in front: {c['front_contains_nominal']}), "
+          f"chaos errors={payload['chaos']['errors']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -266,6 +266,33 @@ class ConfigGrid:
         """Contiguous [start:stop) slice (no copy of untouched columns)."""
         return ConfigGrid({k: v[start:stop] for k, v in self.fields.items()})
 
+    def with_columns(self, **cols) -> "ConfigGrid":
+        """Copy of the grid with the named columns replaced (scalar or
+        full-length array values).  The fault-scenario layer builds
+        degraded core types through this — e.g. a PE array with disabled
+        rows is the same config row with a shrunk ``rows`` column — and
+        the constructor re-validates, so a transform can never smuggle a
+        zero/NaN geometry past the engine boundary."""
+        unknown = set(cols) - set(GRID_COLUMNS)
+        if unknown:
+            raise ValueError(f"unknown ConfigGrid columns: {sorted(unknown)}")
+        fields = dict(self.fields)
+        for k, v in cols.items():
+            fields[k] = np.broadcast_to(
+                np.asarray(v, dtype=np.float64), (self.n,)).copy()
+        return ConfigGrid(fields)
+
+    @staticmethod
+    def concat(grids: Sequence["ConfigGrid"]) -> "ConfigGrid":
+        """Row-wise concatenation (column order preserved) — the scenario
+        expansion glues nominal chip rows and their degraded variants into
+        one union grid so a single engine call evaluates them all."""
+        grids = list(grids)
+        if not grids:
+            raise ValueError("ConfigGrid.concat needs >= 1 grid")
+        return ConfigGrid({k: np.concatenate(
+            [g.fields[k] for g in grids]) for k in GRID_COLUMNS})
+
     @classmethod
     def from_configs(cls, configs: Sequence[AcceleratorConfig]
                      ) -> "ConfigGrid":

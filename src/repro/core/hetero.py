@@ -809,6 +809,195 @@ def pareto_codesign(probs: CoDesignProblems,
         chip_counts=[c[1] for c in probs.chips])
 
 
+# ---------------------------------------------------------------------------
+# Resilience-aware co-design: the same candidate-chip enumeration, scored by
+# nominal metric AND by what happens when the hardware breaks.  Every chip ×
+# network × fault-scenario re-schedule is solved by ONE
+# batch_schedule_hetero(strict=False) call over a 4-D [B, S, T, L] block —
+# scenario 0 is the fault-free chip, the rest are slot-parameterised faults
+# (core loss / degraded PE arrays per type slot), so the whole resilience
+# picture costs one compiled solve instead of a chips × scenarios python
+# loop.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ResilienceCoDesign:
+    """Result of :func:`resilience_codesign`.
+
+    Scores follow :func:`score_codesign`'s convention (per-network
+    scheduled metric normalised by the sweep minimum, averaged over
+    networks); ``+inf`` marks a scenario that killed every core of a
+    chip (infeasible — reported, never raised).  The ``front`` is the
+    weak-dominance front on the (nominal, worst-case) plane: it always
+    contains the nominal-only winner, and typically also chips that give
+    up a little nominal score for a much better worst case."""
+
+    names: List[str]
+    pool: List[int]
+    chip_types: List[Tuple[int, ...]]
+    chip_counts: List[Tuple[int, ...]]
+    scenario_names: List[str]          # [S], "nominal" first
+    degradations: List[Tuple[int, int]]
+    valid: np.ndarray                  # [n_chips, S] scenario applies
+    feasible: np.ndarray               # [n_chips, n_net, S]
+    bottleneck: np.ndarray             # [n_chips, n_net, S] (+inf dead)
+    energy: np.ndarray                 # [n_chips, n_net, S] (+inf dead)
+    scores: np.ndarray                 # [n_chips, S] mean norm metric
+    nominal_score: np.ndarray          # [n_chips] == scores[:, 0]
+    worst_score: np.ndarray            # [n_chips] max over valid faults
+    expected_score: np.ndarray         # [n_chips] mean over valid faults
+    front: np.ndarray                  # [n_chips] bool (nominal, worst)
+    best_nominal: int                  # argmin nominal_score
+    best_robust: int                   # lexicographic (worst, nominal) min
+    metric: str
+
+    @property
+    def n_chips(self) -> int:
+        return len(self.chip_types)
+
+    @property
+    def worst_overhead(self) -> np.ndarray:
+        """[n_chips] worst-case score relative to the chip's own nominal."""
+        return self.worst_score / self.nominal_score
+
+    def frontier(self) -> List[Tuple[int, float, float]]:
+        """Front chips as ``(chip index, nominal, worst)``, best nominal
+        first."""
+        idx = np.flatnonzero(self.front)
+        order = np.lexsort((self.worst_score[idx],
+                            self.nominal_score[idx]))
+        return [(int(c), float(self.nominal_score[c]),
+                 float(self.worst_score[c])) for c in idx[order]]
+
+
+def resilience_codesign(grid: ConfigGrid,
+                        networks: Mapping[str, Sequence[Layer]],
+                        m_cores: int = 4,
+                        *,
+                        max_types: int = 3,
+                        pool_size: int = 6,
+                        bound: float = 0.05,
+                        metric: str = "edp",
+                        backend: str | None = None,
+                        use_jax: bool | None = None,
+                        degradations: Sequence[Tuple[int, int]] = ((4, 4),),
+                        probs: CoDesignProblems | None = None,
+                        ) -> ResilienceCoDesign:
+    """Co-design under hardware faults: every candidate chip is scored by
+    its nominal metric AND by its worst-case / expected metric when a
+    core dies or a PE array degrades.
+
+    The scenario set is slot-parameterised so all chips share one
+    scenario axis: scenario 0 is nominal; then one whole-core-loss
+    scenario per type slot (that slot's count decrements — a single-core
+    single-type chip becomes INFEASIBLE, scored +inf); then, for each
+    ``(rows_lost, cols_lost)`` in ``degradations``, one scenario per
+    type slot where that slot's pool row is replaced by its degraded
+    variant (shrunk ``rows``/``cols``, re-evaluated per layer — the
+    layers re-balance onto the slower arrays).  Scenarios that name a
+    slot a chip does not use are marked invalid for that chip and
+    excluded from its worst/expected reductions.
+
+    ONE ``batch_schedule_hetero(strict=False)`` call solves the whole
+    ``[chips · networks, scenarios]`` block; the returned
+    :class:`ResilienceCoDesign` carries the (nominal, worst-case)
+    weak-dominance front, which by construction contains the
+    nominal-only winner (nothing can dominate it on the nominal axis).
+    Pass ``probs=`` to reuse an existing problem set (e.g. the service's
+    cached one); it must come from this ``grid``/``networks``."""
+    from ..ft import hw_faults
+
+    if probs is None:
+        probs = codesign_problems(grid, networks, m_cores,
+                                  max_types=max_types, pool_size=pool_size,
+                                  bound=bound, metric=metric,
+                                  backend=backend, use_jax=use_jax)
+    names, chips = probs.names, probs.chips
+    n_net, n_chips = len(names), len(chips)
+    B = n_chips * n_net
+    t_max = probs.counts.shape[1]
+    n_layer = probs.lat_dense.shape[2]
+    degradations = [(int(r), int(c)) for r, c in degradations]
+    n_deg = len(degradations)
+    S = 1 + t_max * (1 + n_deg)
+
+    lat4 = np.repeat(probs.lat_dense[:, None], S, axis=1)
+    e4 = np.repeat(
+        _expand_pool_tensor(probs.e_layer, chips, n_net,
+                            t_max)[:, None], S, axis=1)
+    counts4 = np.repeat(probs.counts[:, None], S, axis=1)
+
+    scen_names = ["nominal"]
+    n_used = np.asarray([len(ty) for ty, _ in chips])
+    valid = np.zeros((n_chips, S), dtype=bool)
+    slot_valid = (np.arange(t_max)[None, :] < n_used[:, None])
+    for s in range(t_max):
+        scen_names.append(f"core_loss@slot{s}")
+        counts4[:, 1 + s, s] = np.maximum(counts4[:, 1 + s, s] - 1, 0)
+        valid[:, 1 + s] = slot_valid[:, s]
+    for di, (r, c) in enumerate(degradations):
+        deg_grid = hw_faults.degrade_rows(grid.take(probs.pool), r, c)
+        e_d, t_d = energymodel.evaluate_networks(
+            deg_grid, networks, use_jax=use_jax, backend=backend,
+            per_layer=True)
+        lat_deg = _expand_pool_tensor(t_d, chips, n_net, t_max)
+        en_deg = _expand_pool_tensor(e_d, chips, n_net, t_max)
+        for s in range(t_max):
+            sidx = 1 + t_max * (1 + di) + s
+            scen_names.append(f"degrade_r{r}c{c}@slot{s}")
+            lat4[:, sidx, s, :] = lat_deg[:, s, :]
+            e4[:, sidx, s, :] = en_deg[:, s, :]
+            valid[:, sidx] = slot_valid[:, s]
+
+    labels = [f"{names[b % n_net]}@chip{b // n_net}:{scen_names[s]}"
+              for b in range(B) for s in range(S)]
+    res = partition.batch_schedule_hetero(
+        lat4, counts4, n_layers=probs.n_layers_b, use_jax=use_jax,
+        strict=False, labels=labels)
+
+    tt = res.layer_type[:, :n_layer]
+    energy = np.take_along_axis(
+        e4.reshape(B * S, t_max, n_layer),
+        tt[:, None, :], axis=1)[:, 0, :].sum(-1)
+    feas = res.feasible.reshape(n_chips, n_net, S)
+    bott = res.bottleneck.reshape(n_chips, n_net, S)
+    energy = np.where(feas, energy.reshape(n_chips, n_net, S), np.inf)
+
+    if metric == "energy":
+        cell, ref = energy, probs.min_energy
+    elif metric == "latency":
+        cell, ref = bott, probs.min_latency
+    else:
+        cell, ref = energy * np.where(feas, bott, 1.0), probs.min_edp
+    scores = (cell / ref[None, :, None]).mean(axis=1)       # [n_chips, S]
+
+    fault = valid.copy()
+    fault[:, 0] = False
+    worst = np.where(fault, scores, -np.inf).max(axis=1)
+    with np.errstate(invalid="ignore"):
+        expected = (np.where(fault, scores, 0.0).sum(axis=1)
+                    / np.maximum(fault.sum(axis=1), 1))
+    nominal = scores[:, 0]
+
+    a1, a2 = nominal[:, None], nominal[None, :]
+    b1, b2 = worst[:, None], worst[None, :]
+    dom = (a2 <= a1) & (b2 <= b1) & ((a2 < a1) | (b2 < b1))
+    front = ~dom.any(axis=1)
+    best_nominal = int(np.argmin(nominal))
+    best_robust = int(np.lexsort((nominal, worst))[0])
+    return ResilienceCoDesign(
+        names=list(names), pool=list(probs.pool),
+        chip_types=[c[0] for c in chips],
+        chip_counts=[c[1] for c in chips],
+        scenario_names=scen_names, degradations=degradations,
+        valid=valid, feasible=feas, bottleneck=bott, energy=energy,
+        scores=scores, nominal_score=nominal, worst_score=worst,
+        expected_score=expected, front=front,
+        best_nominal=best_nominal, best_robust=best_robust,
+        metric=metric)
+
+
 def savings_summary(chip: HeteroChip) -> Dict[str, Dict[str, float]]:
     """Per-network savings of the heterogeneous assignment vs. the worst
     single-core-type choice (the paper's headline: up to 36% energy / 67%

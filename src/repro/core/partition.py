@@ -594,8 +594,10 @@ class BatchHeteroResult:
     starts: np.ndarray            # [B, T, k_max] full-axis segment starts
     seg_counts: np.ndarray        # [B, T] segments actually opened
     loads: np.ndarray             # [B, T, k_max] per-segment latency sums
-    bottleneck: np.ndarray        # [B]
+    bottleneck: np.ndarray        # [B] (+inf: infeasible, strict=False)
     total: np.ndarray             # [B] Σ assigned layer latency
+    feasible: np.ndarray | None = None   # [B] False → no core available
+    labels: Tuple[str, ...] | None = None   # per-problem names for errors
 
     def __len__(self) -> int:
         return int(self.bottleneck.shape[0])
@@ -607,6 +609,13 @@ class BatchHeteroResult:
                             self.total / self.bottleneck, np.inf)
 
     def schedule(self, i: int) -> HeteroSchedule:
+        if self.feasible is not None and not self.feasible[i]:
+            lab = (self.labels[i] if self.labels is not None
+                   else f"problem {i}")
+            raise ValueError(
+                f"{lab}: infeasible — every core type has count 0 (the "
+                "fault scenario killed the whole chip); bottleneck is "
+                "+inf and no schedule exists")
         n_t = self.counts.shape[1]
         L = int(self.n_layers[i])
         tt = self.layer_type[i, :L]
@@ -712,6 +721,9 @@ def _jax_hetero_stage1():
 def batch_schedule_hetero(latencies, counts,
                           n_layers=None,
                           use_jax: bool | None = None,
+                          *,
+                          strict: bool = True,
+                          labels=None,
                           ) -> BatchHeteroResult:
     """Solve every heterogeneous (chip, network) schedule in one call.
 
@@ -728,7 +740,35 @@ def batch_schedule_hetero(latencies, counts,
     ulp-tight bisection).  With jax available the bisection +
     segmentation run as ONE jitted dispatch over all (problem × type)
     rows; the numpy body is the reference fallback.
+
+    **Fault-scenario axis.**  A dense ``[B, S, T, L]`` array adds a
+    scenario axis (per-problem perturbed latencies — e.g. degraded PE
+    arrays swap in slower type rows): scenarios are just more problem
+    rows, flattened scenario-minor to ``B·S`` problems solved in the
+    same single call.  ``counts`` may then be ``[B, S, T]`` (scenarios
+    with killed cores), ``[B, T]`` (same counts every scenario) or
+    ``[T]``; ``n_layers`` ``[B]`` or ``[B, S]``.  Problem ``b``'s
+    scenario ``s`` is flat row ``b·S + s`` of the result.
+
+    **Infeasibility.**  ``strict=True`` (default) raises when any
+    problem's counts are all zero.  ``strict=False`` reports such
+    problems (a scenario that killed every core) per-problem instead:
+    ``bottleneck`` is +inf, ``feasible`` is False, and
+    :meth:`BatchHeteroResult.schedule` raises naming the problem via
+    ``labels`` (one string per flattened problem row).
     """
+    if isinstance(latencies, np.ndarray) and latencies.ndim == 4:
+        b0, n_s = latencies.shape[:2]
+        latencies = latencies.reshape(b0 * n_s, *latencies.shape[2:])
+        cnts_in = np.asarray(counts)
+        if cnts_in.ndim == 3:
+            counts = cnts_in.reshape(b0 * n_s, cnts_in.shape[2])
+        elif cnts_in.ndim == 2:
+            counts = np.repeat(cnts_in, n_s, axis=0)
+        if n_layers is not None:
+            nl = np.asarray(n_layers, dtype=np.int64)
+            n_layers = (np.repeat(nl, n_s) if nl.ndim == 1
+                        else nl.reshape(b0 * n_s))
     dense = isinstance(latencies, np.ndarray) and latencies.ndim == 3
     if dense:
         n_b, in_types, n_max = latencies.shape
@@ -751,9 +791,14 @@ def batch_schedule_hetero(latencies, counts,
             starts=np.zeros((0, 0, _K_MAX), np.int64),
             seg_counts=np.zeros((0, 0), np.int64),
             loads=np.zeros((0, 0, _K_MAX)), bottleneck=np.zeros(0),
-            total=np.zeros(0))
+            total=np.zeros(0), feasible=np.zeros(0, bool))
     if cnts.shape[0] != n_b:
         raise ValueError(f"counts rows {cnts.shape[0]} != problems {n_b}")
+    if labels is not None:
+        labels = tuple(str(x) for x in labels)
+        if len(labels) != n_b:
+            raise ValueError(
+                f"labels has {len(labels)} entries for {n_b} problems")
     n_types = max(in_types, cnts.shape[1])
     if (n_lens == 0).any():
         raise ValueError("every problem needs ≥ 1 layer")
@@ -783,8 +828,16 @@ def batch_schedule_hetero(latencies, counts,
     counts_p[:n_b] = 0
     counts_p[:n_b, :cnts.shape[1]] = cnts
     avail = counts_p > 0
-    if not avail[:n_b].any(axis=1).all():
-        raise ValueError("every problem needs ≥ 1 core (counts all zero)")
+    feas_b = avail[:n_b].any(axis=1)
+    if not feas_b.all():
+        if strict:
+            raise ValueError(
+                "every problem needs ≥ 1 core (counts all zero); pass "
+                "strict=False to report per-problem infeasibility instead")
+        # all-types-dead problems (a scenario that killed every core)
+        # solve as benign single-core rows like the padding, then report
+        # +inf below — the rest of the batch is unaffected
+        avail[np.flatnonzero(~feas_b), 0] = True
     avail[n_b:] = False
     avail[n_b:, 0] = True                  # padded problems: 1 trivial core
     n_lens_p = np.concatenate([n_lens, np.ones(b_pad - n_b, np.int64)])
@@ -925,9 +978,13 @@ def batch_schedule_hetero(latencies, counts,
 
     loads = loads_r.reshape(b_pad, n_types, k_out)[:n_b]
     bottleneck = loads.max(axis=(1, 2))
+    if not feas_b.all():
+        loads = np.where(feas_b[:, None, None], loads, 0.0)
+        bottleneck = np.where(feas_b, bottleneck, np.inf)
     return BatchHeteroResult(
         counts=np.asarray(cnts), n_layers=n_lens,
         layer_type=tt[:n_b], starts=starts_r.reshape(
             b_pad, n_types, k_out)[:n_b],
         seg_counts=kk[:n_b], loads=loads,
-        bottleneck=bottleneck, total=total_t[:n_b].sum(axis=1))
+        bottleneck=bottleneck, total=total_t[:n_b].sum(axis=1),
+        feasible=feas_b.copy(), labels=labels)

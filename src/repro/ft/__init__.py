@@ -1,3 +1,8 @@
 from .supervisor import Supervisor, FaultInjector  # noqa: F401
 from .faults import (BackendFault, FaultPlan, StreamKill,  # noqa: F401
                      inject_chunk_faults)
+from .hw_faults import (CoreFailure, DegradedArray,  # noqa: F401
+                        FaultScenario, ScenarioBatch,
+                        all_single_core_failures, apply_counts,
+                        degrade_rows, expand_scenarios,
+                        random_degradations, scenario_problems)

@@ -10,8 +10,9 @@ chosen chunk indices:
 * ``fail_at``   — raise :class:`BackendFault` (a transient backend death;
   the service layer's retry/backoff path rides this),
 * ``corrupt_at`` — overwrite one seeded-random element of the chunk's
-  energies with NaN or +inf (silent data corruption; the engine's NaN/inf
-  guard must detect it BEFORE the fold commits and raise
+  energies (``target="e"``) or latencies (``target="t"``) with NaN or
+  +inf (silent data corruption; the engine's NaN/inf guard checks BOTH
+  tensors and must detect it BEFORE the fold commits, raising
   :class:`repro.core.energymodel.ChunkCorruption` with chunk provenance),
 * ``kill_at``   — raise :class:`StreamKill` (a simulated process death
   mid-stream; recovery resumes from the last exported
@@ -52,7 +53,13 @@ class FaultPlan:
     corrupt_at: Dict[int, str] = dataclasses.field(default_factory=dict)
     kill_at: Optional[int] = None
     seed: int = 0
+    target: str = "e"              # corruption tensor: "e" | "t"
     fired: List[Tuple[int, str]] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if self.target not in ("e", "t"):
+            raise ValueError(f"FaultPlan.target must be 'e' or 't', got "
+                             f"{self.target!r}")
 
     @classmethod
     def random(cls, seed: int, n_chunks: int, *, p_fail: float = 0.2,
@@ -60,14 +67,18 @@ class FaultPlan:
         """Reproducible random plan over ``n_chunks`` chunk indices.
 
         Per-chunk fail counts stay ≤ ``max_fails`` so any retry budget
-        > ``max_fails`` is guaranteed to converge."""
+        > ``max_fails`` is guaranteed to converge.  The corruption target
+        is a seeded coin flip between the energy and latency tensors, so
+        the chaos matrix exercises the latency-side guard path too."""
         rng = np.random.default_rng(seed)
+        target = "e" if rng.random() < 0.5 else "t"
         fail_at = {ci: int(rng.integers(1, max_fails + 1))
                    for ci in range(n_chunks) if rng.random() < p_fail}
         corrupt_at = {ci: ("nan" if rng.random() < 0.5 else "inf")
                       for ci in range(n_chunks)
                       if rng.random() < p_corrupt}
-        return cls(fail_at=fail_at, corrupt_at=corrupt_at, seed=seed)
+        return cls(fail_at=fail_at, corrupt_at=corrupt_at, seed=seed,
+                   target=target)
 
     def __call__(self, ci: int, e, t):
         if self.kill_at is not None and ci == self.kill_at:
@@ -82,10 +93,16 @@ class FaultPlan:
         kind = self.corrupt_at.pop(ci, None)
         if kind is not None:
             self.fired.append((ci, kind))
-            e = np.array(np.asarray(e), dtype=np.float64, copy=True)
+            victim = e if self.target == "e" else t
+            victim = np.array(np.asarray(victim), dtype=np.float64,
+                              copy=True)
             rng = np.random.default_rng(self.seed * 1_000_003 + ci)
-            flat = int(rng.integers(e.size))
-            e.reshape(-1)[flat] = np.nan if kind == "nan" else np.inf
+            flat = int(rng.integers(victim.size))
+            victim.reshape(-1)[flat] = np.nan if kind == "nan" else np.inf
+            if self.target == "e":
+                e = victim
+            else:
+                t = victim
         return e, t
 
 

@@ -6,9 +6,14 @@ best-config / best-chip / Pareto queries, drains the queue, and prints the
 health snapshot.  ``--chaos SEED`` overlays a deterministic
 :class:`repro.ft.faults.FaultPlan` on the streaming engine while serving —
 the service must still answer everything (exactly or degraded).
+``--fault-event`` then reports a hardware fault (one core lost) on the
+first served best-chip answer and drains the resulting re-schedule query
+through the same loop — the chip's layers re-map across the survivors
+without a service restart.
 
     PYTHONPATH=src python -m repro.launch.serve_dse --requests 12
     PYTHONPATH=src python -m repro.launch.serve_dse --chaos 0 --deadline-s 5
+    PYTHONPATH=src python -m repro.launch.serve_dse --fault-event
 """
 
 from __future__ import annotations
@@ -23,12 +28,13 @@ import numpy as np
 from repro.core import topology
 from repro.core.accelerator import ConfigGrid, extended_grid
 from repro.ft.faults import FaultPlan, inject_chunk_faults
+from repro.ft.hw_faults import all_single_core_failures
 from repro.serving.dse_service import DSEService
 
 KINDS = ("best_config", "best_chip", "pareto")
 
 
-def main(argv=None):
+def main(argv=None, *, clock=None, sleep=None, grid=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--networks", nargs="*",
                     default=["AlexNet", "VGG16", "MobileNet", "ResNet50"])
@@ -44,14 +50,23 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--chaos", type=int, default=None,
                     help="inject a seeded fault plan while serving")
+    ap.add_argument("--fault-event", action="store_true",
+                    help="after draining, report a single-core loss on "
+                    "the first best-chip answer and re-schedule")
     args = ap.parse_args(argv)
 
-    grid = extended_grid() if args.extended else ConfigGrid.product()
+    if grid is None:
+        grid = extended_grid() if args.extended else ConfigGrid.product()
     nets = {n: topology.get_network(n) for n in args.networks}
+    extra = {}
+    if clock is not None:
+        extra["clock"] = clock
+    if sleep is not None:
+        extra["sleep"] = sleep
     svc = DSEService(grid, nets, max_queue=args.max_queue,
                      chunk_size=args.chunk_size,
                      degrade_stride=args.degrade_stride,
-                     backend=args.backend)
+                     backend=args.backend, **extra)
 
     rng = np.random.default_rng(args.seed)
     names = list(nets)
@@ -67,10 +82,14 @@ def main(argv=None):
         rejected += int(not sub.accepted)
 
     n_chunks = -(-grid.n // max(1, min(args.chunk_size, grid.n)))
-    chaos = (inject_chunk_faults(FaultPlan.random(args.chaos, n_chunks))
-             if args.chaos is not None else contextlib.nullcontext())
+
+    def chaos():
+        if args.chaos is None:
+            return contextlib.nullcontext()
+        return inject_chunk_faults(FaultPlan.random(args.chaos, n_chunks))
+
     t0 = time.time()
-    with chaos:
+    with chaos():
         responses, drained = svc.run_until_drained()
     dt = time.time() - t0
 
@@ -78,6 +97,36 @@ def main(argv=None):
     print(f"served {len(responses)} responses in {dt:.2f}s "
           f"({len(responses) / max(dt, 1e-9):.1f} q/s), "
           f"{n_deg} degraded, {rejected} rejected, drained={drained}")
+
+    if args.fault_event:
+        chip = next((r.answer for r in responses
+                     if r.kind == "best_chip" and r.ok
+                     and r.answer.get("feasible")), None)
+        if chip is None:
+            # the seeded mix served no feasible chip — ask for one
+            svc.submit("best_chip", deadline=2.0)
+            with chaos():
+                extra, _ = svc.run_until_drained()
+            responses.extend(extra)
+            chip = next((r.answer for r in extra
+                         if r.ok and r.answer.get("feasible")), None)
+        if chip is None:
+            print("fault-event: no feasible best-chip answer to break")
+        else:
+            scen = all_single_core_failures(chip["chip_counts"])[0]
+            svc.fault_event(chip["chip_types"], chip["chip_counts"],
+                            scen, deadline_s=args.deadline_s)
+            with chaos():
+                resched, _ = svc.run_until_drained()
+            responses.extend(resched)
+            for r in resched:
+                a = r.answer
+                print(f"fault-event {scen.name} on chip "
+                      f"{chip['chip_types']}×{chip['chip_counts']}: "
+                      f"ok={r.ok} degraded={r.degraded} "
+                      f"feasible={a.get('feasible')} "
+                      f"counts_after={a.get('counts_after')}")
+
     print(json.dumps(svc.health(), indent=2, default=str))
     return responses
 

@@ -8,14 +8,27 @@ must bound its queue, meet deadlines, and survive backend faults.
 threads — like :class:`repro.serving.engine.ServeEngine`'s lock-step decode
 loop) so every fault-injection test is deterministic.
 
-**Query model.**  Three kinds, submitted via :meth:`DSEService.submit`:
+**Query model.**  Four kinds, submitted via :meth:`DSEService.submit`:
 ``best_config`` (per-network sweep argmin under a metric), ``best_chip``
-(best heterogeneous chip under a relative latency deadline ``d``), and
-``pareto`` (one network's non-dominated (chip, latency, energy) front).
-:meth:`DSEService.step` pops every queued request of the head request's
-family (config-family vs. chip-family) and metric and serves them from ONE
-shared computation — concurrent deadline queries coalesce into a single
-``pareto_codesign(points=...)`` call scoring all their deadlines at once.
+(best heterogeneous chip under a relative latency deadline ``d``),
+``pareto`` (one network's non-dominated (chip, latency, energy) front),
+and ``reschedule`` (a deployed chip suffered a hardware fault — a
+:class:`repro.ft.hw_faults.FaultScenario` — and every network's layers
+must be re-mapped across the survivors).  :meth:`DSEService.step` pops
+every queued request of the head request's family (config / chip /
+resched) and metric and serves them from ONE shared computation —
+concurrent deadline queries coalesce into a single
+``pareto_codesign(points=...)`` call scoring all their deadlines at once,
+and concurrent reschedule queries coalesce into ONE union-grid engine
+evaluation + ONE ``batch_schedule_hetero(strict=False)`` solve over all
+their (chip, scenario, network) problems.
+
+**Fault events.**  :meth:`DSEService.fault_event` is the push path: a
+hardware fault report invalidates every cached schedule of the affected
+chip and enqueues the re-schedule query — the service answers it through
+the same coalescing / retry / budget machinery, without a restart.
+Scenarios that kill every core come back ``feasible=False`` per network
+(the solver reports +inf bottlenecks instead of raising).
 
 **Robustness ladder** (each rung independently testable):
 
@@ -48,9 +61,10 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core import energymodel, hetero
+from ..core import energymodel, hetero, partition
 from ..core.accelerator import ConfigGrid
 from ..core.topology import Layer
+from ..ft import hw_faults
 
 
 class ServiceFault(RuntimeError):
@@ -64,12 +78,16 @@ class _BudgetExhausted(RuntimeError):
 @dataclasses.dataclass
 class DSERequest:
     rid: int
-    kind: str                       # "best_config" | "best_chip" | "pareto"
+    kind: str     # "best_config" | "best_chip" | "pareto" | "reschedule"
     metric: str = "edp"
     network: Optional[str] = None   # best_config: None = all networks
     deadline: float = 2.0           # relative latency deadline (chip family)
     deadline_s: Optional[float] = None   # wall-clock answer budget
     submitted_at: float = 0.0
+    # reschedule family: the deployed chip and what broke on it
+    chip_types: Optional[Tuple[int, ...]] = None   # flat grid rows
+    chip_counts: Optional[Tuple[int, ...]] = None
+    scenario: Optional[hw_faults.FaultScenario] = None
 
 
 @dataclasses.dataclass
@@ -156,19 +174,55 @@ class DSEService:
             backend_fallbacks=0, resumes=0, budget_aborts=0,
             sweep_cache_hits=0, sweep_cache_misses=0,
             points_cache_hits=0, points_cache_misses=0,
-            coalesced_batches=0)
+            coalesced_batches=0,
+            fault_events=0, reschedules=0, schedule_invalidations=0,
+            resched_cache_hits=0, resched_cache_misses=0)
+        # (chip_types, chip_counts, scenario.key(), metric) → answer dict
+        self._resched: Dict[tuple, Dict[str, Any]] = {}
 
     # -- admission ---------------------------------------------------------
+    @staticmethod
+    def _family(kind: str) -> str:
+        if kind == "reschedule":
+            return "resched"
+        return "chip" if kind in ("best_chip", "pareto") else "config"
+
     def submit(self, kind: str, *, network: Optional[str] = None,
                metric: str = "edp", deadline: float = 2.0,
-               deadline_s: Optional[float] = None) -> SubmitResult:
+               deadline_s: Optional[float] = None,
+               chip_types: Optional[Sequence[int]] = None,
+               chip_counts: Optional[Sequence[int]] = None,
+               scenario: Optional[hw_faults.FaultScenario] = None
+               ) -> SubmitResult:
         """Enqueue a query; reject-with-retry-after when the queue is full."""
-        if kind not in ("best_config", "best_chip", "pareto"):
+        if kind not in ("best_config", "best_chip", "pareto", "reschedule"):
             raise ValueError(f"unknown query kind {kind!r}")
         if network is not None and network not in self.networks:
             raise ValueError(f"unknown network {network!r}")
         if kind == "pareto" and network is None:
             raise ValueError("pareto queries name one network")
+        if kind == "reschedule":
+            if chip_types is None or chip_counts is None:
+                raise ValueError(
+                    "reschedule queries name the chip: chip_types "
+                    "(flat grid rows) and chip_counts")
+            if scenario is None:
+                raise ValueError("reschedule queries carry a FaultScenario")
+            chip_types = tuple(int(t) for t in chip_types)
+            chip_counts = tuple(int(c) for c in chip_counts)
+            if len(chip_types) != len(chip_counts):
+                raise ValueError(
+                    f"{len(chip_types)} chip types but "
+                    f"{len(chip_counts)} counts")
+            bad = [t for t in chip_types if not 0 <= t < self.grid.n]
+            if bad:
+                raise ValueError(
+                    f"chip_types {bad} out of range for a "
+                    f"{self.grid.n}-row grid")
+            if any(c < 0 for c in chip_counts):
+                raise ValueError("chip_counts must be >= 0")
+            # range-check the scenario's type indices up front
+            hw_faults.apply_counts(chip_counts, scenario)
         self.stats["submitted"] += 1
         if len(self._queue) >= self.max_queue:
             self.stats["rejected"] += 1
@@ -180,7 +234,8 @@ class DSEService:
         self._queue.append(DSERequest(
             rid=rid, kind=kind, metric=metric, network=network,
             deadline=float(deadline), deadline_s=deadline_s,
-            submitted_at=self._clock()))
+            submitted_at=self._clock(), chip_types=chip_types,
+            chip_counts=chip_counts, scenario=scenario))
         self.stats["accepted"] += 1
         return SubmitResult(accepted=True, rid=rid,
                             queue_depth=len(self._queue))
@@ -335,16 +390,19 @@ class DSEService:
         if not self._queue:
             return []
         head = self._queue[0]
-        chip_family = head.kind in ("best_chip", "pareto")
+        family = self._family(head.kind)
         batch = [r for r in self._queue
-                 if (r.kind in ("best_chip", "pareto")) == chip_family
+                 if self._family(r.kind) == family
                  and r.metric == head.metric]
         ids = {id(r) for r in batch}
         self._queue = [r for r in self._queue if id(r) not in ids]
         if len(batch) > 1:
             self.stats["coalesced_batches"] += 1
         t0 = self._clock()
-        out = self._serve_batch(batch, head.metric, chip_family)
+        if family == "resched":
+            out = self._serve_resched(batch, head.metric)
+        else:
+            out = self._serve_batch(batch, head.metric, family == "chip")
         self._record_cost(("request",),
                           (self._clock() - t0) / max(len(batch), 1))
         self.responses.extend(out)
@@ -405,6 +463,176 @@ class DSEService:
                 out.extend(self._respond(r, ok=False, degraded=degraded,
                                          answer={}, error=str(e))
                            for r in grp)
+        return out
+
+    # -- hardware-fault re-scheduling --------------------------------------
+    def fault_event(self, chip_types: Sequence[int],
+                    chip_counts: Sequence[int],
+                    scenario: hw_faults.FaultScenario, *,
+                    metric: str = "edp",
+                    deadline_s: Optional[float] = None) -> SubmitResult:
+        """A hardware fault was reported on a deployed chip: invalidate
+        every cached schedule of that chip (nominal included — its
+        hardware is no longer what those schedules assumed) and enqueue
+        the re-schedule query.  Returns the :class:`SubmitResult`; the
+        answer arrives through the normal :meth:`step` loop."""
+        self.stats["fault_events"] += 1
+        ct = tuple(int(t) for t in chip_types)
+        cc = tuple(int(c) for c in chip_counts)
+        stale = [k for k in self._resched if k[0] == ct and k[1] == cc]
+        for k in stale:
+            del self._resched[k]
+        self.stats["schedule_invalidations"] += len(stale)
+        return self.submit("reschedule", metric=metric,
+                           deadline_s=deadline_s, chip_types=ct,
+                           chip_counts=cc, scenario=scenario)
+
+    @staticmethod
+    def _resched_key(r: DSERequest, metric: str) -> tuple:
+        return (r.chip_types, r.chip_counts, r.scenario.key(), metric)
+
+    def _serve_resched(self, batch, metric):
+        now = self._clock()
+        out, misses = [], []
+        for r in batch:
+            ans = self._resched.get(self._resched_key(r, metric))
+            if ans is not None:
+                self.stats["resched_cache_hits"] += 1
+                out.append(self._respond(r, ok=True, degraded=False,
+                                         answer=ans))
+            else:
+                self.stats["resched_cache_misses"] += 1
+                misses.append(r)
+        if not misses:
+            return out
+        # degradation rung: a request whose remaining budget cannot cover
+        # the projected solve is answered from the chip's cached NOMINAL
+        # schedule (flagged degraded) when one exists; with no fallback it
+        # computes anyway and the deadline_missed flag tells the story.
+        proj = self._cost.get(("resched", metric))
+        compute, late = [], set()
+        for r in misses:
+            budget = (None if r.deadline_s is None
+                      else r.deadline_s - (now - r.submitted_at))
+            if budget is not None and (
+                    budget <= 0 or (proj is not None and budget < proj)):
+                nom = self._resched.get(
+                    (r.chip_types, r.chip_counts, (), metric))
+                if nom is not None:
+                    out.append(self._respond(
+                        r, ok=True, degraded=True,
+                        answer=dict(nom, scenario=r.scenario.name,
+                                    nominal_only=True)))
+                    continue
+                late.add(r.rid)
+            compute.append(r)
+        if not compute:
+            return out
+        ends = [r.submitted_at + r.deadline_s for r in compute
+                if r.deadline_s is not None]
+        budget_end = max(ends) if len(ends) == len(compute) else None
+        key = ("resched", metric)
+
+        def run(backend, resume):
+            t0 = self._clock()
+            answers = self._solve_resched(compute, metric, backend)
+            self._record_cost(key,
+                              (self._clock() - t0) / len(compute))
+            return answers
+
+        try:
+            answers = self._with_retries(run, key=key,
+                                         budget_end=budget_end)
+        except (_BudgetExhausted, ServiceFault) as e:
+            out.extend(self._respond(r, ok=False, degraded=True,
+                                     answer={}, error=str(e))
+                       for r in compute)
+            return out
+        for r, (nom_ans, ans) in zip(compute, answers):
+            self._resched[(r.chip_types, r.chip_counts, (),
+                           metric)] = nom_ans
+            self._resched[self._resched_key(r, metric)] = ans
+            self.stats["reschedules"] += 1
+            out.append(self._respond(r, ok=True,
+                                     degraded=r.rid in late, answer=ans))
+        return out
+
+    def _solve_resched(self, reqs, metric, backend):
+        """Coalesced fault re-schedule: ONE union-grid engine evaluation
+        and ONE ``batch_schedule_hetero(strict=False)`` call cover every
+        (request, {nominal, fault}, network) problem; returns one
+        ``(nominal answer, fault answer)`` pair per request."""
+        batches = [hw_faults.expand_scenarios(
+            self.grid, r.chip_types, r.chip_counts, [r.scenario],
+            include_nominal=True) for r in reqs]
+        union = ConfigGrid.concat([b.grid for b in batches])
+        e_l, t_l = energymodel.evaluate_networks(
+            union, self.networks, backend=backend, per_layer=True)
+        lens = energymodel.network_layer_counts(self.networks)
+        n_net = len(self.names)
+        t_max = max(b.n_types for b in batches)
+        lats, cnts, nls, ens, labels = [], [], [], [], []
+        off = 0
+        for r, b in zip(reqs, batches):
+            lat, cnt, nl, en = hw_faults.scenario_problems(
+                b, e_l[off:off + b.grid.n], t_l[off:off + b.grid.n], lens)
+            off += b.grid.n
+            pad = t_max - lat.shape[1]
+            if pad:
+                lat = np.pad(lat, ((0, 0), (0, pad), (0, 0)))
+                en = np.pad(en, ((0, 0), (0, pad), (0, 0)))
+                cnt = np.pad(cnt, ((0, 0), (0, pad)))
+            lats.append(lat)
+            cnts.append(cnt)
+            nls.append(nl)
+            ens.append(en)
+            labels.extend(f"rid{r.rid}:{sn}:{nm}"
+                          for sn in b.names for nm in self.names)
+        res = partition.batch_schedule_hetero(
+            np.concatenate(lats), np.concatenate(cnts),
+            n_layers=np.concatenate(nls), strict=False,
+            labels=labels)
+        en_all = np.concatenate(ens)
+
+        def one(i, nl_i):
+            feas = bool(res.feasible[i])
+            tt = res.layer_type[i, :nl_i]
+            energy = float(np.take_along_axis(
+                en_all[i][:, :nl_i], tt[None, :],
+                axis=0)[0].sum()) if feas else float("inf")
+            return dict(feasible=feas,
+                        bottleneck=float(res.bottleneck[i]),
+                        energy=energy,
+                        layer_type=tt.tolist() if feas else None)
+
+        out = []
+        ro = 0
+        for r, b in zip(reqs, batches):
+            nets_nom, nets_f = {}, {}
+            for j, nm in enumerate(self.names):
+                nl_i = int(lens[j])
+                nom = one(ro + j, nl_i)
+                fl = one(ro + n_net + j, nl_i)
+                nom["overhead"] = 1.0 if nom["feasible"] else float("inf")
+                fl["overhead"] = (
+                    fl["bottleneck"] / nom["bottleneck"]
+                    if fl["feasible"] and nom["bottleneck"] > 0
+                    else float("inf"))
+                nets_nom[nm], nets_f[nm] = nom, fl
+            base = dict(chip_types=list(r.chip_types),
+                        chip_counts=list(r.chip_counts))
+            nom_ans = dict(base, scenario="nominal",
+                           counts_after=list(r.chip_counts),
+                           feasible=all(v["feasible"]
+                                        for v in nets_nom.values()),
+                           networks=nets_nom)
+            ans = dict(base, scenario=r.scenario.name,
+                       counts_after=[int(c) for c in b.counts[1]],
+                       feasible=all(v["feasible"]
+                                    for v in nets_f.values()),
+                       networks=nets_f)
+            out.append((nom_ans, ans))
+            ro += 2 * n_net
         return out
 
     def _ensure_tier(self, metric, chip_family, *, exact, budget_end):

@@ -1,0 +1,537 @@
+"""Fault-aware resilience layer: hardware-fault scenario expansion
+(`repro.ft.hw_faults`), per-problem infeasibility in the batched solver
+(`batch_schedule_hetero(strict=False)` + the 4-D scenario axis),
+`hetero.resilience_codesign`'s (nominal, worst-case) front, and the DSE
+service's `fault_event` re-schedule path.
+
+The CI chaos job replays the service tests over a fixed seed matrix via
+``REPRO_CHAOS_SEEDS`` (comma-separated; default "0,1,2")."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import energymodel, hetero, partition, topology
+from repro.core.accelerator import ConfigGrid
+from repro.ft import hw_faults
+from repro.ft.faults import FaultPlan, inject_chunk_faults
+from repro.serving.dse_service import DSEService
+
+# Guarded per-test (not module-level importorskip) so the deterministic
+# tests below always run.
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAS_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    _HAS_HYPOTHESIS = False
+
+    def _skip_property(f):
+        return pytest.mark.skip(
+            reason="property test needs hypothesis "
+            "(pip install -r requirements-dev.txt)")(f)
+
+
+SEEDS = tuple(int(s) for s in
+              os.environ.get("REPRO_CHAOS_SEEDS", "0,1,2").split(","))
+NETS = ("AlexNet", "MobileNet")
+
+
+@pytest.fixture(scope="module")
+def networks():
+    return {n: topology.get_network(n) for n in NETS}
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return ConfigGrid.product(arrays=((16, 16), (32, 32), (64, 64)),
+                              gb_psum_kb=(13, 54, 216),
+                              gb_ifmap_kb=(27, 108))
+
+
+class FakeClock:
+    """Deterministic service time: advances only when told to."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, dt):
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# hw_faults: scenario declaration and expansion
+# ---------------------------------------------------------------------------
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        hw_faults.CoreFailure(0, n=0)
+    with pytest.raises(ValueError):
+        hw_faults.DegradedArray(0)                 # disables nothing
+    with pytest.raises(ValueError):
+        hw_faults.DegradedArray(0, rows_lost=-1, cols_lost=2)
+    # valid forms construct fine
+    hw_faults.CoreFailure(1, n=2)
+    hw_faults.DegradedArray(0, rows_lost=1)
+    hw_faults.DegradedArray(0, cols_lost=3)
+
+
+def test_apply_counts_clamps_and_range_checks():
+    sc = hw_faults.FaultScenario(
+        "s", (hw_faults.CoreFailure(0, n=5), hw_faults.CoreFailure(1)))
+    out = hw_faults.apply_counts([2, 3], sc)
+    assert out.tolist() == [0, 2]                  # clamped at 0
+    bad = hw_faults.FaultScenario("b", (hw_faults.CoreFailure(7),))
+    with pytest.raises(ValueError, match="out of range"):
+        hw_faults.apply_counts([2, 3], bad)
+
+
+def test_degrade_rows_clamps_and_preserves_other_columns(grid):
+    deg = hw_faults.degrade_rows(grid, 10_000, 3)
+    assert (deg.fields["rows"] == 1.0).all()       # clamped at 1
+    np.testing.assert_array_equal(
+        deg.fields["cols"], np.maximum(grid.fields["cols"] - 3, 1.0))
+    for k, v in grid.fields.items():
+        if k not in ("rows", "cols"):
+            np.testing.assert_array_equal(deg.fields[k], v)
+
+
+def test_scenario_key_is_hashable_identity():
+    a = hw_faults.FaultScenario("a", (hw_faults.CoreFailure(0),))
+    b = hw_faults.FaultScenario("b", (hw_faults.CoreFailure(0),))
+    c = hw_faults.FaultScenario("c", (hw_faults.CoreFailure(1),))
+    assert a.key() == b.key()                      # name-independent
+    assert a.key() != c.key()
+    assert len({a.key(), b.key(), c.key()}) == 2
+
+
+def test_expand_scenarios_union_grid_and_dedup(grid):
+    ct, cc = [0, 5], [2, 1]
+    scens = [
+        hw_faults.FaultScenario("loss0", (hw_faults.CoreFailure(0),)),
+        hw_faults.FaultScenario(
+            "deg1", (hw_faults.DegradedArray(1, rows_lost=2),)),
+        hw_faults.FaultScenario(          # same degradation → same row
+            "deg1b", (hw_faults.DegradedArray(1, rows_lost=2),)),
+    ]
+    b = hw_faults.expand_scenarios(grid, ct, cc, scens)
+    assert b.names == ("nominal", "loss0", "deg1", "deg1b")
+    assert b.nominal_first and b.n_scenarios == 4 and b.n_types == 2
+    assert b.grid.n == 3                  # 2 nominal rows + ONE degraded
+    np.testing.assert_array_equal(b.type_rows[0], [0, 1])
+    np.testing.assert_array_equal(b.type_rows[1], [0, 1])
+    np.testing.assert_array_equal(b.type_rows[2], [0, 2])
+    np.testing.assert_array_equal(b.type_rows[3], [0, 2])
+    np.testing.assert_array_equal(b.counts[0], cc)
+    np.testing.assert_array_equal(b.counts[1], [1, 1])
+    assert b.grid.fields["rows"][2] == grid.fields["rows"][5] - 2
+
+
+def test_expand_scenarios_validates_chip():
+    g = ConfigGrid.product()
+    with pytest.raises(ValueError, match="counts"):
+        hw_faults.expand_scenarios(g, [0, 1], [2], [])
+    sc = hw_faults.FaultScenario(
+        "d", (hw_faults.DegradedArray(5, rows_lost=1),))
+    with pytest.raises(ValueError, match="out of range"):
+        hw_faults.expand_scenarios(g, [0, 1], [2, 2], [sc])
+
+
+def test_generators_are_seeded_and_bounded(grid):
+    assert [s.name for s in
+            hw_faults.all_single_core_failures([2, 0, 1])] == \
+        ["core_loss_t0", "core_loss_t2"]
+    a = hw_faults.random_degradations(7, grid, [0, 5], n_scenarios=6)
+    b = hw_faults.random_degradations(7, grid, [0, 5], n_scenarios=6)
+    assert [s.name for s in a] == [s.name for s in b]   # deterministic
+    assert a != hw_faults.random_degradations(8, grid, [0, 5])
+    for s in a:
+        (ev,) = s.events
+        ty = [0, 5][ev.type_idx]
+        assert ev.rows_lost + ev.cols_lost >= 1
+        assert ev.rows_lost <= grid.fields["rows"][ty] * 0.5
+        assert ev.cols_lost <= grid.fields["cols"][ty] * 0.5
+
+
+# ---------------------------------------------------------------------------
+# batch_schedule_hetero: strict=False infeasibility + the scenario axis
+# ---------------------------------------------------------------------------
+
+def test_strict_default_still_raises():
+    lat = np.ones((2, 2, 3))
+    with pytest.raises(ValueError, match="strict=False"):
+        partition.batch_schedule_hetero(lat, [[1, 1], [0, 0]])
+
+
+def test_strict_false_reports_per_problem_infeasibility():
+    rng = np.random.default_rng(0)
+    lat = rng.uniform(0.1, 10.0, size=(3, 2, 4))
+    counts = np.asarray([[1, 2], [0, 0], [2, 1]])
+    res = partition.batch_schedule_hetero(
+        lat, counts, strict=False, labels=["a", "b", "c"])
+    assert res.feasible.tolist() == [True, False, True]
+    assert np.isinf(res.bottleneck[1]) and (res.loads[1] == 0).all()
+    for i in (0, 2):                      # feasible rows are unperturbed
+        ref = partition.schedule_hetero_oracle(lat[i], counts[i])
+        assert res.bottleneck[i] == ref["bottleneck"]
+        res.schedule(i)                   # still constructible
+    with pytest.raises(ValueError, match="b.*infeasible"):
+        res.schedule(1)
+
+
+def test_labels_length_validated():
+    with pytest.raises(ValueError, match="labels"):
+        partition.batch_schedule_hetero(
+            np.ones((2, 1, 3)), [[1], [1]], strict=False, labels=["x"])
+
+
+def test_4d_scenario_axis_equals_flattened():
+    rng = np.random.default_rng(1)
+    lat4 = rng.uniform(0.1, 10.0, size=(2, 3, 2, 5))
+    counts3 = rng.integers(0, 3, size=(2, 3, 2))
+    counts3[0, 0] = [1, 1]                # ≥ 1 feasible problem
+    a = partition.batch_schedule_hetero(lat4, counts3, strict=False)
+    b = partition.batch_schedule_hetero(
+        lat4.reshape(6, 2, 5), counts3.reshape(6, 2), strict=False)
+    np.testing.assert_array_equal(a.bottleneck, b.bottleneck)
+    np.testing.assert_array_equal(a.feasible, b.feasible)
+    np.testing.assert_array_equal(a.layer_type, b.layer_type)
+    # 2-D counts broadcast across the scenario axis
+    c = partition.batch_schedule_hetero(
+        lat4, counts3[:, 0], strict=False)
+    d = partition.batch_schedule_hetero(
+        lat4.reshape(6, 2, 5), np.repeat(counts3[:, 0], 3, axis=0),
+        strict=False)
+    np.testing.assert_array_equal(c.bottleneck, d.bottleneck)
+
+
+def _random_scenario_instance(rng):
+    t = int(rng.integers(1, 4))
+    n = int(rng.integers(1, 9))
+    lat = rng.uniform(0.01, 100.0, size=(t, n))
+    counts = rng.integers(0, 4, size=t)
+    if counts.sum() == 0:
+        counts[int(rng.integers(t))] = 1
+    # random fault scenarios = perturbed (lat, counts) rows; always keep
+    # the all-dead case in the mix so infeasibility round-trips
+    S = int(rng.integers(2, 5))
+    lat_s = np.repeat(lat[None], S, axis=0)
+    cnt_s = np.repeat(counts[None], S, axis=0)
+    for s in range(1, S):
+        if rng.random() < 0.5:            # core loss
+            cnt_s[s, int(rng.integers(t))] -= 1
+        else:                             # degraded array: slower rows
+            lat_s[s, int(rng.integers(t))] *= rng.uniform(1.0, 3.0)
+    cnt_s = np.maximum(cnt_s, 0)
+    if S > 2:
+        cnt_s[S - 1] = 0                  # whole chip dead
+    return lat_s, cnt_s
+
+
+def _check_scenario_batch(lat_s, cnt_s, use_jax):
+    res = partition.batch_schedule_hetero(lat_s[None], cnt_s[None],
+                                          use_jax=use_jax, strict=False)
+    for s in range(lat_s.shape[0]):
+        if not (cnt_s[s] > 0).any():
+            assert not res.feasible[s]
+            assert np.isinf(res.bottleneck[s])
+            continue
+        ref = partition.schedule_hetero_oracle(lat_s[s], cnt_s[s])
+        assert res.feasible[s]
+        assert res.bottleneck[s] == ref["bottleneck"], (s, use_jax)
+
+
+if _HAS_HYPOTHESIS:
+    def _scenario_property(f):
+        return settings(max_examples=80, deadline=None)(
+            given(st.integers(0, 2**32 - 1), st.booleans())(f))
+else:                                                  # pragma: no cover
+    _scenario_property = _skip_property
+
+
+@_scenario_property
+def test_scenario_batch_matches_oracle_property(seed, use_jax):
+    """Batched fault re-scheduling == the per-scenario oracle loop on
+    random ≤(3 types × 8 layers) instances × random fault scenarios,
+    numpy and jax backends — bit-exact, infeasible rows as +inf."""
+    lat_s, cnt_s = _random_scenario_instance(np.random.default_rng(seed))
+    _check_scenario_batch(lat_s, cnt_s, use_jax)
+
+
+def test_scenario_batch_matches_oracle_seeded():
+    """Non-hypothesis twin (always runs): 60 seeded instances."""
+    rng = np.random.default_rng(42)
+    for _ in range(60):
+        lat_s, cnt_s = _random_scenario_instance(rng)
+        for use_jax in (False, True):
+            _check_scenario_batch(lat_s, cnt_s, use_jax)
+
+
+def test_duplicated_degraded_row_tie_breaks_to_lower_type():
+    """Regression: a degradation can make two type rows IDENTICAL — the
+    per-layer argmin must still deterministically pick the lower type
+    index (batch == oracle, and the schedule only uses type 0)."""
+    lat = np.asarray([[2.0, 3.0, 4.0],
+                      [2.0, 3.0, 4.0]])   # duplicated rows, exact ties
+    counts = np.asarray([2, 2])
+    for use_jax in (False, True):
+        res = partition.batch_schedule_hetero([lat], [counts],
+                                              use_jax=use_jax,
+                                              strict=False)
+        ref = partition.schedule_hetero_oracle(lat, counts)
+        assert res.bottleneck[0] == ref["bottleneck"]
+        assert (res.layer_type[0, :3] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# resilience_codesign
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def resil(grid, networks):
+    return hetero.resilience_codesign(grid, networks, 4, max_types=2,
+                                      pool_size=4,
+                                      degradations=((2, 2),))
+
+
+def test_resilience_front_contains_nominal_winner(resil):
+    """The (nominal, worst-case) weak-dominance front must contain the
+    nominal-only winner — the resilience view strictly ADDS information,
+    it never loses the nominal choice."""
+    assert resil.front[resil.best_nominal]
+    assert resil.front[resil.best_robust]
+    assert resil.nominal_score[resil.best_nominal] == \
+        resil.nominal_score.min()
+    # the robust pick's worst case is the best achievable
+    assert resil.worst_score[resil.best_robust] == pytest.approx(
+        resil.worst_score.min())
+    # every front member is genuinely non-dominated
+    n, w = resil.nominal_score, resil.worst_score
+    for i in np.flatnonzero(resil.front):
+        dominated = ((n <= n[i]) & (w <= w[i])
+                     & ((n < n[i]) | (w < w[i]))).any()
+        assert not dominated
+
+
+def test_resilience_scenario_axis(resil):
+    S = len(resil.scenario_names)
+    assert resil.scenario_names[0] == "nominal"
+    assert resil.valid.shape == (resil.n_chips, S)
+    assert not resil.valid[:, 0].any()    # nominal is not a fault
+    np.testing.assert_array_equal(resil.nominal_score, resil.scores[:, 0])
+    # fault slots beyond a chip's type count are invalid for it
+    for c, ty in enumerate(resil.chip_types):
+        for s, nm in enumerate(resil.scenario_names[1:], start=1):
+            slot = int(nm.split("slot")[1])
+            assert resil.valid[c, s] == (slot < len(ty))
+    # worst/expected reduce over the valid fault slots only
+    fault = resil.valid.copy()
+    want_worst = np.where(fault, resil.scores, -np.inf).max(axis=1)
+    np.testing.assert_array_equal(resil.worst_score, want_worst)
+
+
+def test_resilience_matches_per_scenario_oracle(grid, networks, resil):
+    """Spot-check: the batched scenario solve is bit-exact against the
+    per-(chip, network, scenario) oracle loop, rebuilt independently via
+    the hw_faults expansion path."""
+    probs = hetero.codesign_problems(grid, networks, 4, max_types=2,
+                                     pool_size=4)
+    lens = energymodel.network_layer_counts(networks)
+    rng = np.random.default_rng(0)
+    for c in rng.choice(resil.n_chips, size=min(4, resil.n_chips),
+                        replace=False):
+        ty, cn = resil.chip_types[c], resil.chip_counts[c]
+        pool_rows = [probs.pool[p] for p in ty]
+        scens = []
+        for s, nm in enumerate(resil.scenario_names[1:], start=1):
+            if not resil.valid[c, s]:
+                continue
+            slot = int(nm.split("slot")[1])
+            if nm.startswith("core_loss"):
+                scens.append((s, hw_faults.FaultScenario(
+                    nm, (hw_faults.CoreFailure(slot),))))
+            else:
+                scens.append((s, hw_faults.FaultScenario(
+                    nm, (hw_faults.DegradedArray(slot, 2, 2),))))
+        b = hw_faults.expand_scenarios(grid, pool_rows, cn,
+                                       [sc for _, sc in scens])
+        e_l, t_l = energymodel.evaluate_networks(b.grid, networks,
+                                                 per_layer=True)
+        lat, cnt, nl, _en = hw_faults.scenario_problems(b, e_l, t_l, lens)
+        n_net = len(networks)
+        for k, (s, _sc) in enumerate([(0, None)] + scens):
+            for j in range(n_net):
+                i = k * n_net + j
+                if not (cnt[i] > 0).any():
+                    assert not resil.feasible[c, j, s]
+                    continue
+                ref = partition.schedule_hetero_oracle(
+                    lat[i, :, :nl[i]], cnt[i])
+                assert resil.bottleneck[c, j, s] == ref["bottleneck"], \
+                    (c, j, s)
+
+
+def test_resilience_all_types_dead_is_infeasible(grid, networks):
+    """A 1-type 1-core chip dies entirely under core loss: reported as
+    +inf, never raised."""
+    res = hetero.resilience_codesign(grid, networks, 1, max_types=1,
+                                     pool_size=2, degradations=())
+    one_core = [c for c in range(res.n_chips)
+                if sum(res.chip_counts[c]) == 1]
+    assert one_core                        # m_cores=1 ⇒ all single-core
+    for c in one_core:
+        s = 1 + 0                          # core_loss@slot0
+        assert res.valid[c, s]
+        assert not res.feasible[c, :, s].any()
+        assert np.isinf(res.scores[c, s])
+        assert np.isinf(res.worst_score[c])
+
+
+# ---------------------------------------------------------------------------
+# DSEService.fault_event
+# ---------------------------------------------------------------------------
+
+def _serve_chip(svc):
+    svc.submit("best_chip", deadline=2.0)
+    out, drained = svc.run_until_drained()
+    assert drained and out[0].ok and out[0].answer["feasible"]
+    return out[0].answer
+
+
+def test_fault_event_reschedules_without_restart(grid, networks):
+    clk = FakeClock()
+    svc = DSEService(grid, networks, chunk_size=5, clock=clk,
+                     sleep=clk.sleep)
+    chip = _serve_chip(svc)
+    sc = hw_faults.FaultScenario("t0_loss", (hw_faults.CoreFailure(0),))
+    sub = svc.fault_event(chip["chip_types"], chip["chip_counts"], sc)
+    assert sub.accepted
+    (r,), drained = svc.run_until_drained()
+    assert drained and r.ok and r.kind == "reschedule"
+    a = r.answer
+    assert a["scenario"] == "t0_loss"
+    assert a["counts_after"][0] == chip["chip_counts"][0] - 1
+    assert svc.stats["fault_events"] == 1
+    assert svc.stats["reschedules"] == 1
+
+    # the answer is bit-exact vs the direct expansion + oracle loop
+    b = hw_faults.expand_scenarios(grid, chip["chip_types"],
+                                   chip["chip_counts"], [sc])
+    e_l, t_l = energymodel.evaluate_networks(b.grid, networks,
+                                             per_layer=True)
+    lens = energymodel.network_layer_counts(networks)
+    lat, cnt, nl, _ = hw_faults.scenario_problems(b, e_l, t_l, lens)
+    for j, nm in enumerate(NETS):
+        i = len(NETS) + j                  # scenario row 1 = the fault
+        d = a["networks"][nm]
+        if not (cnt[i] > 0).any():
+            assert not d["feasible"]
+            continue
+        ref = partition.schedule_hetero_oracle(lat[i, :, :nl[i]], cnt[i])
+        assert d["bottleneck"] == ref["bottleneck"]
+        nom = partition.schedule_hetero_oracle(
+            lat[j, :, :nl[j]], cnt[j])
+        assert d["overhead"] == pytest.approx(
+            ref["bottleneck"] / nom["bottleneck"])
+
+
+def test_fault_event_invalidates_cached_schedules(grid, networks):
+    clk = FakeClock()
+    svc = DSEService(grid, networks, chunk_size=5, clock=clk,
+                     sleep=clk.sleep)
+    chip = _serve_chip(svc)
+    ct, cc = chip["chip_types"], chip["chip_counts"]
+    sc = hw_faults.FaultScenario("t0_loss", (hw_faults.CoreFailure(0),))
+    svc.submit("reschedule", chip_types=ct, chip_counts=cc, scenario=sc)
+    svc.run_until_drained()
+    assert svc.stats["resched_cache_misses"] == 1
+    # same query again: served from cache
+    svc.submit("reschedule", chip_types=ct, chip_counts=cc, scenario=sc)
+    svc.run_until_drained()
+    assert svc.stats["resched_cache_hits"] == 1
+    # a fault event on that chip invalidates its cached schedules
+    # (nominal + fault = 2 entries), so the re-query recomputes
+    svc.fault_event(ct, cc, sc)
+    assert svc.stats["schedule_invalidations"] == 2
+    svc.run_until_drained()
+    assert svc.stats["resched_cache_misses"] == 2
+    assert svc.stats["resched_cache_hits"] == 1
+
+
+def test_fault_event_chip_killed_still_answers(grid, networks):
+    clk = FakeClock()
+    svc = DSEService(grid, networks, chunk_size=5, clock=clk,
+                     sleep=clk.sleep)
+    chip = _serve_chip(svc)
+    kill = hw_faults.FaultScenario("all_dead", tuple(
+        hw_faults.CoreFailure(t, n=int(c))
+        for t, c in enumerate(chip["chip_counts"]) if c))
+    svc.fault_event(chip["chip_types"], chip["chip_counts"], kill)
+    (r,), drained = svc.run_until_drained()
+    assert drained and r.ok
+    assert not r.answer["feasible"]
+    assert all(np.isinf(d["bottleneck"]) and not d["feasible"]
+               for d in r.answer["networks"].values())
+    # the service is still alive and serving
+    svc.submit("best_chip", deadline=2.0)
+    (r2,), drained = svc.run_until_drained()
+    assert drained and r2.ok
+
+
+def test_reschedule_submit_validation(grid, networks):
+    svc = DSEService(grid, networks, chunk_size=5)
+    sc = hw_faults.FaultScenario("s", (hw_faults.CoreFailure(0),))
+    with pytest.raises(ValueError, match="chip_types"):
+        svc.submit("reschedule", scenario=sc)
+    with pytest.raises(ValueError, match="FaultScenario"):
+        svc.submit("reschedule", chip_types=[0], chip_counts=[2])
+    with pytest.raises(ValueError, match="counts"):
+        svc.submit("reschedule", chip_types=[0, 1], chip_counts=[2],
+                   scenario=sc)
+    with pytest.raises(ValueError, match="out of range"):
+        svc.submit("reschedule", chip_types=[grid.n], chip_counts=[2],
+                   scenario=sc)
+    with pytest.raises(ValueError, match="out of range"):
+        svc.submit("reschedule", chip_types=[0], chip_counts=[2],
+                   scenario=hw_faults.FaultScenario(
+                       "bad", (hw_faults.CoreFailure(3),)))
+
+
+def test_reschedule_queries_coalesce(grid, networks):
+    clk = FakeClock()
+    svc = DSEService(grid, networks, chunk_size=5, clock=clk,
+                     sleep=clk.sleep)
+    chip = _serve_chip(svc)
+    ct, cc = chip["chip_types"], chip["chip_counts"]
+    for t in range(len(ct)):
+        svc.submit("reschedule", chip_types=ct, chip_counts=cc,
+                   scenario=hw_faults.FaultScenario(
+                       f"loss{t}", (hw_faults.CoreFailure(t),)))
+    before = svc.stats["coalesced_batches"]
+    out = svc.step()                       # ONE step serves the family
+    assert len(out) == len(ct) and all(r.ok for r in out)
+    assert svc.stats["coalesced_batches"] == before + (len(ct) > 1)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fault_event_survives_chunk_chaos(grid, networks, seed):
+    """Chaos replay: chunk faults rain on the streamed sweep, then a
+    hardware fault event forces a re-schedule — the service answers
+    everything without a restart."""
+    clk = FakeClock()
+    svc = DSEService(grid, networks, chunk_size=5, max_retries=30,
+                     backoff_s=1e-4, clock=clk, sleep=clk.sleep)
+    n_chunks = -(-grid.n // 5)
+    plan = FaultPlan.random(seed, n_chunks, p_fail=0.3, p_corrupt=0.2)
+    with inject_chunk_faults(plan):
+        chip = _serve_chip(svc)
+        scen = hw_faults.all_single_core_failures(
+            chip["chip_counts"])[seed % len(chip["chip_counts"])]
+        svc.fault_event(chip["chip_types"], chip["chip_counts"], scen)
+        out, drained = svc.run_until_drained()
+    assert drained and all(r.ok for r in out)
+    assert svc.stats["reschedules"] == 1
+    assert svc.health()["errors"] == 0

@@ -1,0 +1,97 @@
+"""`repro.launch.serve_dse` CLI: arg parsing, query-family routing, the
+health snapshot output, and the --fault-event re-schedule path — all on a
+tiny injected grid with a fake clock, so the launcher is testable without
+wall-clock time or the full design space."""
+
+import json
+
+import pytest
+
+from repro.core.accelerator import ConfigGrid
+from repro.launch import serve_dse
+
+
+@pytest.fixture(scope="module")
+def tiny_grid():
+    return ConfigGrid.product(arrays=((16, 16), (32, 32), (64, 64)),
+                              gb_psum_kb=(13, 54, 216),
+                              gb_ifmap_kb=(27, 108))
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, dt):
+        self.t += dt
+
+
+def _health_json(captured: str) -> dict:
+    """The CLI prints human lines then one indented JSON blob — parse it."""
+    return json.loads(captured[captured.index("{"):])
+
+
+def test_serves_seeded_mix_and_prints_health(tiny_grid, capsys):
+    clk = FakeClock()
+    responses = serve_dse.main(
+        ["--requests", "6", "--networks", "AlexNet", "MobileNet",
+         "--chunk-size", "5"],
+        clock=clk, sleep=clk.sleep, grid=tiny_grid)
+    out = capsys.readouterr().out
+    assert len(responses) == 6
+    assert all(r.ok for r in responses)
+    # the seeded mix routes through both query families
+    kinds = {r.kind for r in responses}
+    assert kinds <= {"best_config", "best_chip", "pareto"}
+    assert len(kinds) >= 2
+    assert "served 6 responses" in out
+    h = _health_json(out)
+    assert h["completed"] == 6 and h["errors"] == 0
+    assert h["n_cfg"] == tiny_grid.n
+    assert h["fault_events"] == 0
+
+
+def test_fault_event_flag_reschedules(tiny_grid, capsys):
+    clk = FakeClock()
+    responses = serve_dse.main(
+        ["--requests", "4", "--networks", "AlexNet", "MobileNet",
+         "--chunk-size", "5", "--fault-event"],
+        clock=clk, sleep=clk.sleep, grid=tiny_grid)
+    out = capsys.readouterr().out
+    resched = [r for r in responses if r.kind == "reschedule"]
+    assert len(resched) == 1 and resched[0].ok
+    assert "fault-event core_loss_t0" in out
+    h = _health_json(out)
+    assert h["fault_events"] == 1 and h["reschedules"] == 1
+    assert h["errors"] == 0
+
+
+def test_chaos_seed_still_answers_everything(tiny_grid, capsys):
+    clk = FakeClock()
+    responses = serve_dse.main(
+        ["--requests", "3", "--networks", "AlexNet", "MobileNet",
+         "--chunk-size", "5", "--chaos", "0", "--fault-event"],
+        clock=clk, sleep=clk.sleep, grid=tiny_grid)
+    out = capsys.readouterr().out
+    assert all(r.ok for r in responses)
+    h = _health_json(out)
+    assert h["errors"] == 0
+    assert h["fault_events"] == 1
+
+
+def test_deadline_s_flag_threads_through(tiny_grid):
+    clk = FakeClock()
+    responses = serve_dse.main(
+        ["--requests", "2", "--networks", "AlexNet", "MobileNet",
+         "--chunk-size", "5", "--deadline-s", "1e9"],
+        clock=clk, sleep=clk.sleep, grid=tiny_grid)
+    assert all(r.ok and not r.deadline_missed for r in responses)
+
+
+def test_unknown_network_errors(tiny_grid):
+    with pytest.raises(KeyError):
+        serve_dse.main(["--requests", "1", "--networks", "NoSuchNet"],
+                       grid=tiny_grid)
