@@ -30,7 +30,7 @@ def _level(payload: dict, name: str) -> dict | None:
 
 #: Top-level payload sections that carry their own floor dicts (the
 #: per-grid-size ``levels`` are handled separately by name).
-FLOOR_SECTIONS = ("codesign", "codesign_mega")
+FLOOR_SECTIONS = ("codesign", "codesign_mega", "slack")
 
 
 def check_payload(payload: dict, floors: dict, label: str) -> list:
@@ -72,6 +72,7 @@ def check_parity(payload: dict, ceiling: float, label: str) -> list:
     scan(payload.get("partition") or {}, "partition")
     scan(payload.get("codesign") or {}, "codesign")
     scan(payload.get("codesign_mega") or {}, "codesign_mega")
+    scan(payload.get("slack") or {}, "slack")
     return problems
 
 

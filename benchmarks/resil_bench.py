@@ -16,7 +16,11 @@ suite proves functionally (tests/test_resilience.py):
   candidate-chip enumeration: ``front_contains_nominal`` (the
   (nominal, worst-case) dominance front must contain the nominal-only
   winner — floor-checked ≥ 1), front size, and the worst-case overhead
-  the robust pick saves vs the nominal pick;
+  the robust pick saves vs the nominal pick; plus the deadline mode
+  (``deadline=2.0``) re-solving the same enumeration with the
+  energy-aware slack pass — ``slack_dominance_ok`` (floor-checked ≥ 1)
+  requires slack energy to weakly dominate the latency-argmin energy on
+  every cell both runs can schedule;
 * ``chaos`` — a :class:`repro.serving.dse_service.DSEService` under the
   CI seed matrix of chunk-fault plans, each seed ending in a
   :meth:`fault_event` re-schedule: every query answered, zero errors.
@@ -141,6 +145,20 @@ def _codesign_metrics(grid, networks, *, max_types: int,
                                      degradations=((2, 2), (4, 4)))
     elapsed = time.perf_counter() - t0
     bn, br = res.best_nominal, res.best_robust
+
+    # deadline mode: the same enumeration re-solved with the energy-aware
+    # slack pass at 2x each network's single-config minimum — across the
+    # cells both runs can schedule, slack energy must weakly dominate
+    t0 = time.perf_counter()
+    sla = hetero.resilience_codesign(grid, networks,
+                                     max_types=max_types,
+                                     pool_size=pool_size,
+                                     degradations=((2, 2), (4, 4)),
+                                     deadline=2.0)
+    slack_s = time.perf_counter() - t0
+    both = res.feasible & sla.feasible
+    with np.errstate(invalid="ignore"):
+        saved = 1.0 - sla.energy[both] / res.energy[both]
     return dict(n_chips=res.n_chips,
                 n_scenarios=len(res.scenario_names),
                 elapsed_s=elapsed,
@@ -152,7 +170,15 @@ def _codesign_metrics(grid, networks, *, max_types: int,
                 best_robust_score=float(res.nominal_score[br]),
                 best_robust_worst=float(res.worst_score[br]),
                 robust_worst_gain=float(res.worst_score[bn]
-                                        / res.worst_score[br]))
+                                        / res.worst_score[br]),
+                slack_deadline=2.0,
+                slack_elapsed_s=slack_s,
+                slack_moves_total=int(sla.slack_moves.sum()),
+                slack_energy_saved_mean_pct=float(100.0 * saved.mean()),
+                slack_energy_saved_max_pct=float(100.0 * saved.max()),
+                slack_dominance_ok=int(bool(
+                    (sla.energy[both]
+                     <= res.energy[both] * (1.0 + 1e-9)).all())))
 
 
 def _chaos_metrics(grid, networks, *, chunk_size: int) -> dict:

@@ -320,6 +320,14 @@ def _median_s(fn, reps: int = 3) -> float:
     return float(np.median([_timed(fn)[1] / 1e6 for _ in range(reps)]))
 
 
+def _warm_stat(fn, quick: bool, reps: int = 3) -> float:
+    """Floors-relevant warm timing: full runs keep the min-of-reps
+    steady-state number; ``--quick`` runs (small problems on noisy
+    shared CI runners) take the median-of-3 instead, which one
+    descheduled rep cannot drag around."""
+    return _median_s(fn, reps=reps) if quick else _warm_min(fn, reps=reps)
+
+
 def bench_partition_batch(nets) -> dict:
     """All (network × k∈2..8) pipeline splits: the looped bb/dp hot path
     that bench_table7_8 used per pair, vs ONE batch_partition call.
@@ -440,7 +448,7 @@ def bench_codesign(nets, quick: bool) -> dict:
         return partition.batch_schedule_hetero(
             probs.lat_dense, probs.counts, n_layers=probs.n_layers_b)
 
-    batch_s = _warm_min(batch, reps=2 if quick else 3)
+    batch_s = _warm_stat(batch, quick, reps=2 if quick else 3)
     res = batch()
 
     diffs = [abs(res.bottleneck[i] - oracle[i]["bottleneck"])
@@ -624,10 +632,10 @@ def bench_codesign_mega(nets, quick: bool) -> dict:
     # apples-to-apples twin of the loop baseline below, which consumes
     # the same precomputed (energy, latency) points
     points = (pc.energy, pc.latency)
-    pareto_s = _warm_min(
+    pareto_s = _warm_stat(
         lambda: hetero.pareto_codesign(probs, deadlines=deadlines,
                                        points=points),
-        reps=2 if quick else 3)
+        quick, reps=2 if quick else 3)
 
     dl_abs = probs.min_latency[:, None] * deadlines[None, :]
     loop_s = _median_s(
@@ -666,16 +674,159 @@ def bench_codesign_mega(nets, quick: bool) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# slack level (schema v6): the energy-aware deadline-slack pass — every
+# (chip candidate × network × deadline) cell re-scheduled toward cheaper
+# core types in ONE batch_slack_schedule call, vs the per-cell
+# slack_schedule_oracle loop it replaces.
+# ---------------------------------------------------------------------------
+
+#: Relative deadline grid (× the per-network single-config minimum
+#: latency) — the tightest column leaves real-but-thin slack, the widest
+#: is effectively energy-argmin.
+SLACK_DEADLINES = (1.05, 1.25, 2.0, 4.0)
+
+#: Warm-speedup floor of the batched slack solver vs the per-cell oracle
+#: loop (ISSUE 8 acceptance: ≥ 10× on full runs; quick runs solve a far
+#: smaller enumeration where fixed dispatch overhead dominates the
+#: batch kernel — benchmarks/floors.json keeps CI's copy).
+SLACK_SPEEDUP_FLOOR = 10.0
+SLACK_SPEEDUP_FLOOR_QUICK = 2.0
+
+
+def bench_slack(nets, quick: bool) -> dict:
+    """Schema-v6 `slack` level: every (chip, network, deadline) energy-
+    aware slack schedule in ONE batch_slack_schedule call, timed against
+    the per-cell `slack_schedule_oracle` loop, with bit-exactness, weak
+    energy-dominance and deadline-feasibility guardrails.
+
+    The full run enumerates a LARGER chip pool than the `codesign` level
+    (pool_size 8 vs 6): the depth-bucketed numpy kernel works on
+    [rows, deadlines, types] slices whose per-op cost is dispatch-bound
+    on small batches, so the solver's advantage is only honest at the
+    enumeration scale the DSE service actually sweeps."""
+    networks = {n: topology.get_network(n) for n in nets}
+    grid = accelerator.ConfigGrid.product()
+    pool_size, m_cores, max_types = (5, 4, 3) if quick else (8, 4, 3)
+    probs = hetero.codesign_problems(grid, networks, m_cores,
+                                     max_types=max_types,
+                                     pool_size=pool_size)
+    n_net = len(networks)
+    n_chips = probs.n_problems // n_net
+    t_max = probs.counts.shape[1]
+    en = hetero._expand_pool_tensor(probs.e_layer, probs.chips, n_net,
+                                    t_max)
+    rel = np.asarray(SLACK_DEADLINES)
+    dl = np.tile(probs.min_latency[:, None] * rel[None, :], (n_chips, 1))
+
+    base = partition.batch_schedule_hetero(
+        probs.lat_dense, probs.counts, n_layers=probs.n_layers_b)
+
+    def batch():
+        return partition.batch_slack_schedule(
+            probs.lat_dense, en, probs.counts, dl,
+            n_layers=probs.n_layers_b, use_jax=False, base=base)
+
+    batch_s = _warm_stat(batch, quick)
+    sl = batch()
+
+    def loop_oracle():
+        out = []
+        for i in range(probs.n_problems):
+            nl_i = int(probs.n_layers_b[i])
+            lat_i = probs.lat_dense[i, :, :nl_i]
+            e_i = en[i, :, :nl_i]
+            cnt_i = probs.counts[i]
+            for d in range(rel.size):
+                out.append(partition.slack_schedule_oracle(
+                    lat_i, e_i, cnt_i, dl[i, d]))
+        return out
+
+    # the oracle loop is timed ONCE — a median-of-reps treatment would
+    # quadruple a baseline already tens of seconds long for a ratio this
+    # lopsided; the timed run's outputs double as the parity reference
+    oracle, loop_us = _timed(loop_oracle)
+    loop_s = loop_us / 1e6
+
+    shape = (probs.n_problems, rel.size)
+    o_bott = np.array([o["bottleneck"] for o in oracle]).reshape(shape)
+    o_energy = np.array([o["energy"] for o in oracle]).reshape(shape)
+    o_moves = np.array([o["n_moves"] for o in oracle]).reshape(shape)
+    o_feas = np.array([o["feasible"] for o in oracle]).reshape(shape)
+    exact = (np.array_equal(sl.bottleneck, o_bott)
+             and np.array_equal(sl.energy, o_energy)
+             and np.array_equal(sl.n_moves, o_moves)
+             and np.array_equal(sl.feasible, o_feas))
+
+    def rel_diff(a, b):
+        fin = np.isfinite(b)
+        if not fin.any():
+            return 0.0
+        d = np.abs(a[fin] - b[fin])
+        return float((d / np.maximum(np.abs(b[fin]), 1e-300)).max(
+            initial=0.0))
+
+    max_rel = max(rel_diff(sl.bottleneck, o_bott),
+                  rel_diff(sl.energy, o_energy))
+
+    # energy of the UNmoved base assignment per problem: a deadline equal
+    # to the base bottleneck leaves zero slack, so the solver returns the
+    # base schedule (and its sequentially-summed energy) verbatim
+    base_e = partition.batch_slack_schedule(
+        probs.lat_dense, en, probs.counts, base.bottleneck[:, None],
+        n_layers=probs.n_layers_b, use_jax=False, base=base).energy[:, 0]
+    with np.errstate(invalid="ignore"):
+        saved_pct = 100.0 * (base_e[:, None] - sl.energy) / base_e[:, None]
+    dominance_ok = bool(
+        (sl.energy <= base_e[:, None] * (1.0 + 1e-9)).all())
+    # a weak chip candidate's latency-argmin bottleneck can genuinely
+    # exceed the tightest budget (deadlines are relative to the grid-wide
+    # single-config minimum), so infeasible cells are allowed — the
+    # guardrail is CONSISTENCY: the flag matches bottleneck <= deadline
+    # exactly, and every feasible cell's schedule fits its budget
+    deadline_met_ok = bool(
+        (sl.feasible == (sl.bottleneck <= dl)).all()
+        and (sl.bottleneck[sl.feasible] <= dl[sl.feasible]).all())
+
+    out = dict(
+        name="slack", points=grid.n, networks=len(networks),
+        pool_size=pool_size, m_cores=m_cores, max_types=max_types,
+        n_chips=n_chips, problems=probs.n_problems,
+        n_deadlines=int(rel.size),
+        deadlines_rel=[float(r) for r in rel],
+        slack_batch_s=round(batch_s, 4),
+        oracle_loop_s=round(loop_s, 3), baseline_reps=1,
+        speedup_warm=round(loop_s / batch_s, 2),
+        max_rel_diff_vs_oracle=max_rel,
+        exact_vs_oracle=bool(exact),
+        moves_total=int(sl.n_moves.sum()),
+        moved_cells_pct=round(
+            100.0 * float((sl.n_moves > 0).mean()), 2),
+        feasible_cells_pct=round(
+            100.0 * float(sl.feasible.mean()), 2),
+        energy_saved_mean_pct=round(float(saved_pct.mean()), 3),
+        energy_saved_max_pct=round(float(saved_pct.max()), 3),
+        dominance_ok=dominance_ok,
+        deadline_met_ok=deadline_met_ok)
+    _emit("slack", batch_s * 1e6,
+          f"{probs.n_problems}x{rel.size} (chip,net,deadline) cells: "
+          f"batch {batch_s * 1e3:.0f}ms vs oracle loop {loop_s:.1f}s → "
+          f"{out['speedup_warm']:.0f}x, exact={out['exact_vs_oracle']}, "
+          f"{out['moves_total']} moves save "
+          f"{out['energy_saved_mean_pct']:.1f}% energy on average")
+    return out
+
+
 def _check_bench_payload(payload: dict, quick: bool = False) -> list:
     """Schema/parity guardrails — CI fails on regressions here (documented
     in docs/bench_schema.md; keep the two in sync)."""
     problems = []
     for key in ("schema", "cpu_count", "n_devices", "backends", "levels",
-                "partition", "codesign", "codesign_mega",
+                "partition", "codesign", "codesign_mega", "slack",
                 "persistent_cache"):
         if key not in payload:
             problems.append(f"missing payload key {key!r}")
-    if payload.get("schema") != "bench_dse/v5":
+    if payload.get("schema") != "bench_dse/v6":
         problems.append(f"unexpected schema {payload.get('schema')!r}")
     for lv in payload.get("levels", []):
         for key in ("max_rel_err_energy", "max_rel_err_latency",
@@ -733,6 +884,26 @@ def _check_bench_payload(payload: dict, quick: bool = False) -> list:
         if mega.get("pool_matches_dense") is False:
             problems.append(
                 "codesign_mega: streamed pool != dense pool")
+    sla = payload.get("slack", {})
+    if sla:
+        if sla.get("max_rel_diff_vs_oracle", 1.0) > 1e-6:
+            problems.append(
+                "slack: max_rel_diff_vs_oracle "
+                f"{sla.get('max_rel_diff_vs_oracle'):.2e}")
+        floor = (SLACK_SPEEDUP_FLOOR_QUICK if quick
+                 else SLACK_SPEEDUP_FLOOR)
+        if sla.get("speedup_warm", 0.0) < floor:
+            problems.append(
+                f"slack: speedup_warm {sla.get('speedup_warm')} < "
+                f"{floor}x floor")
+        if not sla.get("dominance_ok", False):
+            problems.append(
+                "slack: an energy-aware schedule costs MORE energy than "
+                "its latency-argmin base (weak dominance broken)")
+        if not sla.get("deadline_met_ok", False):
+            problems.append(
+                "slack: a cell misses its deadline (infeasible or "
+                "bottleneck above the budget)")
     return problems
 
 
@@ -776,11 +947,11 @@ def _bench_warnings(payload: dict) -> list:
 
 
 def write_bench_json(levels: list, part: dict, codesign: dict,
-                     codesign_mega: dict, cache_info: dict,
+                     codesign_mega: dict, slack: dict, cache_info: dict,
                      quick: bool) -> None:
     use_jax = dse._use_jax_default()
     payload = dict(
-        schema="bench_dse/v5",
+        schema="bench_dse/v6",
         cpu_count=os.cpu_count(),
         n_devices=energymodel.host_device_count(),
         backends=dict(jax=use_jax,
@@ -790,7 +961,8 @@ def write_bench_json(levels: list, part: dict, codesign: dict,
         levels=levels,
         partition=part,
         codesign=codesign,
-        codesign_mega=codesign_mega)
+        codesign_mega=codesign_mega,
+        slack=slack)
     if use_jax:
         import jax
         payload["jax"] = jax.__version__
@@ -1078,6 +1250,7 @@ def main() -> None:
     part = bench_partition_batch(nets)
     codesign = bench_codesign(nets, quick=args.quick)
     codesign_mega = bench_codesign_mega(nets, quick=args.quick)
+    slack = bench_slack(nets, quick=args.quick)
     bench_table1_2(sweeps)
     bench_table3(sweeps)
     bench_table4(sweeps)
@@ -1088,8 +1261,8 @@ def main() -> None:
     bench_autoshard()
     bench_pipeline_stages()
     bench_roofline_table()
-    write_bench_json(levels, part, codesign, codesign_mega, cache_info,
-                     quick=args.quick)
+    write_bench_json(levels, part, codesign, codesign_mega, slack,
+                     cache_info, quick=args.quick)
 
 
 if __name__ == "__main__":

@@ -90,6 +90,27 @@ def main():
     for c, lat, en in pc.frontier(net)[:5]:
         print(f"  chip {c}: latency {lat:.3e}, energy {en:.3e}")
 
+    # --- energy-aware deadline slack: spend latency headroom on energy ---
+    # the same problem set re-scored with slack=True: layers migrate to
+    # lower-energy core types while the pipeline stays under each
+    # deadline (bit-exact vs partition.slack_schedule_oracle)
+    print("\n=== energy-aware deadline-slack scheduling ===")
+    ps = hetero.pareto_codesign(probs, n_deadlines=8, slack=True)
+    moved = int(ps.slack_moves.sum())
+    saved = 100.0 * (1.0 - np.nanmean(
+        np.where(np.isfinite(ps.slack_energy)
+                 & np.isfinite(ps.energy)[:, :, None],
+                 ps.slack_energy / ps.energy[:, :, None], np.nan)))
+    print(f"{moved} layer moves across "
+          f"{ps.n_chips} chips x {len(nets)} networks x "
+          f"{ps.deadlines.size} deadlines; mean energy saved {saved:.2f}% "
+          f"(never worse than the latency-argmin schedule)")
+    for di in (0, ps.deadlines.size - 1):
+        c = int(ps.best_chip_slack[di])
+        tag = (f"chip {c}, mean norm energy {ps.slack_scores[c, di]:.3f}"
+               if c >= 0 else "no chip feasible")
+        print(f"  deadline {ps.deadlines[di]:.2f}x: {tag}")
+
     # --- Algorithm II on each group's core type ---------------------------
     # one batch_partition call solves every (network, k) split at once
     print("\n=== model parallelism on homogeneous cores (§IV.B) ===")

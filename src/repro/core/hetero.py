@@ -647,28 +647,57 @@ def _scheduled_energy(probs: CoDesignProblems,
 
 def score_codesign(probs: CoDesignProblems,
                    res: "partition.BatchHeteroResult",
-                   *, metric: str = "edp", m_cores: int = 4) -> CoDesign:
+                   *, metric: str = "edp", m_cores: int = 4,
+                   deadline: float | None = None) -> CoDesign:
     """Step 4 of :func:`co_design`: fold a solved problem set into chip
-    scores and materialise the winning chip's schedules."""
+    scores and materialise the winning chip's schedules.
+
+    ``deadline`` (RELATIVE, in units of each network's sweep-minimum
+    latency, like :class:`ParetoCoDesign`) switches every schedule to
+    the energy-aware slack pass: layers migrate to lower-energy types as
+    long as the pipeline still meets ``deadline · min_latency[net]``,
+    chips that cannot meet it on every network score +inf, and the
+    winner's materialised schedules are the slack ones.  Raises if NO
+    chip meets the deadline on every network."""
     names, chips, pool = probs.names, probs.chips, probs.pool
     n_net, n_chips = len(names), len(chips)
 
     # ---- score chips ------------------------------------------------------
-    bott = res.bottleneck.reshape(n_chips, n_net)
-    energy = _scheduled_energy(probs, res).reshape(n_chips, n_net)
+    sl = None
+    if deadline is None:
+        bott = res.bottleneck.reshape(n_chips, n_net)
+        energy = _scheduled_energy(probs, res).reshape(n_chips, n_net)
+        feas_all = np.ones(n_chips, dtype=bool)
+    else:
+        t_max = probs.counts.shape[1]
+        en_dense = _expand_pool_tensor(probs.e_layer, chips, n_net, t_max)
+        dl_rows = np.tile(probs.min_latency * float(deadline),
+                          n_chips)[:, None]               # [B, 1]
+        sl = partition.batch_slack_schedule(
+            probs.lat_dense, en_dense, probs.counts, dl_rows,
+            n_layers=probs.n_layers_b, base=res)
+        bott = sl.bottleneck[:, 0].reshape(n_chips, n_net)
+        energy = sl.energy[:, 0].reshape(n_chips, n_net)
+        feas_all = sl.feasible[:, 0].reshape(n_chips, n_net).all(axis=1)
+        if not feas_all.any():
+            raise ValueError(
+                f"no candidate chip meets deadline {deadline} x "
+                "min_latency on every network — loosen the deadline")
     if metric == "energy":
         cell, ref = energy, probs.min_energy
     elif metric == "latency":
         cell, ref = bott, probs.min_latency
     else:
         cell, ref = energy * bott, probs.min_edp
-    chip_scores = (cell / ref[None, :]).mean(axis=1)      # [n_chips]
+    chip_scores = np.where(feas_all,
+                           (cell / ref[None, :]).mean(axis=1), np.inf)
     best = int(np.argmin(chip_scores))
     homog = min(chip_scores[ci] for ci, (ty, _) in enumerate(chips)
                 if len(ty) == 1)
 
     ty, cn = chips[best]
-    schedules = {nm: res.schedule(best * n_net + j)
+    schedules = {nm: (res.schedule(best * n_net + j) if sl is None
+                      else sl.schedule(best * n_net + j, 0))
                  for j, nm in enumerate(names)}
     return CoDesign(
         core_types=[pool[p] for p in ty],
@@ -718,10 +747,44 @@ class ParetoCoDesign:
     pool: List[int]
     chip_types: List[Tuple[int, ...]]
     chip_counts: List[Tuple[int, ...]]
+    # Energy-aware slack fields (pareto_codesign(slack=True); else None).
+    # Each (chip, net, deadline) cell is the energy-greedy re-assignment
+    # of partition.batch_slack_schedule — energy never above the
+    # latency-only point, bottleneck never above the deadline.
+    slack_energy: np.ndarray | None = None   # [n_chips, n_net, D] raw
+    slack_latency: np.ndarray | None = None  # [n_chips, n_net, D]
+    norm_slack_energy: np.ndarray | None = None  # / per-net min energy
+    slack_scores: np.ndarray | None = None   # [n_chips, D] mean, +inf
+    best_chip_slack: np.ndarray | None = None    # [D] argmin (-1: none)
+    slack_moves: np.ndarray | None = None    # [n_chips, n_net, D]
 
     @property
     def n_chips(self) -> int:
         return len(self.chip_types)
+
+    def slack_frontier(self, name: str) -> List[Tuple[int, float, float]]:
+        """One network's non-dominated ``(chip, latency, energy)`` points
+        over the UNION of the latency-only points and every deadline's
+        slack point — the widened front.  Falls back to :meth:`frontier`
+        when the sweep ran without ``slack=True``."""
+        if self.slack_energy is None:
+            return self.frontier(name)
+        j = self.names.index(name)
+        n_c, n_d = self.n_chips, self.slack_energy.shape[2]
+        lat = np.concatenate([self.latency[:, j],
+                              self.slack_latency[:, j, :].ravel()])
+        en = np.concatenate([self.energy[:, j],
+                             self.slack_energy[:, j, :].ravel()])
+        chip = np.concatenate([np.arange(n_c),
+                               np.repeat(np.arange(n_c), n_d)])
+        ok = np.isfinite(lat) & np.isfinite(en)
+        lat, en, chip = lat[ok], en[ok], chip[ok]
+        dom = ((lat[None, :] <= lat[:, None]) & (en[None, :] <= en[:, None])
+               & ((lat[None, :] < lat[:, None]) | (en[None, :] < en[:, None])))
+        keep = np.flatnonzero(~dom.any(axis=1))
+        pts = sorted({(float(lat[i]), float(en[i]), int(chip[i]))
+                      for i in keep})
+        return [(c, l, e) for l, e, c in pts]
 
     def frontier(self, name: str) -> List[Tuple[int, float, float]]:
         """One network's non-dominated ``(chip index, latency, energy)``
@@ -745,7 +808,8 @@ def pareto_codesign(probs: CoDesignProblems,
                     deadlines=None,
                     n_deadlines: int = 8,
                     points: Tuple[np.ndarray, np.ndarray] | None = None,
-                    use_jax: bool | None = None) -> ParetoCoDesign:
+                    use_jax: bool | None = None,
+                    slack: bool = False) -> ParetoCoDesign:
     """Latency-bound Pareto sweep over a co-design problem set.
 
     One :func:`repro.core.partition.batch_schedule_hetero` solve (reused
@@ -765,7 +829,16 @@ def pareto_codesign(probs: CoDesignProblems,
     hot re-run path: pass ``points=(energy, latency)`` from a previous
     :class:`ParetoCoDesign` (both [n_chips, n_net], raw) and the solve
     and energy attribution are skipped entirely — only the compiled
-    deadline scoring runs."""
+    deadline scoring runs (``slack=True`` still needs the solve, so it
+    re-solves when ``res`` is absent).
+
+    ``slack=True`` additionally runs the energy-aware deadline-slack
+    pass (:func:`repro.core.partition.batch_slack_schedule`) over the
+    SAME (chip × network × deadline) axes in one more jitted call and
+    fills the ``slack_*`` fields: per-deadline energy-optimal points
+    that weakly dominate the latency-only front (asserted — a slack
+    point can never cost more energy than its base point, nor exceed
+    its deadline)."""
     names = probs.names
     n_net, n_chips = len(names), len(probs.chips)
     if points is not None:
@@ -774,6 +847,10 @@ def pareto_codesign(probs: CoDesignProblems,
         if energy.shape != (n_chips, n_net):
             raise ValueError(f"points must be [{n_chips}, {n_net}], got "
                              f"{energy.shape}")
+        if slack and res is None:
+            res = partition.batch_schedule_hetero(
+                probs.lat_dense, probs.counts, n_layers=probs.n_layers_b,
+                use_jax=use_jax)
     else:
         if res is None:
             res = partition.batch_schedule_hetero(
@@ -798,6 +875,44 @@ def pareto_codesign(probs: CoDesignProblems,
     _, scores, best, best_net, net_front, chip_front = \
         partition.batch_pareto_scores(norm_e, lat, dl_abs,
                                       norm_latency=norm_l, use_jax=use_jax)
+
+    slack_kw: Dict[str, np.ndarray] = {}
+    if slack:
+        t_max = probs.counts.shape[1]
+        en_dense = _expand_pool_tensor(probs.e_layer, probs.chips, n_net,
+                                       t_max)
+        dl_prob = np.tile(dl_abs, (n_chips, 1))           # [B, D] rows
+        sl = partition.batch_slack_schedule(
+            probs.lat_dense, en_dense, probs.counts, dl_prob,
+            n_layers=probs.n_layers_b, use_jax=use_jax, base=res)
+        n_d = dl_prob.shape[1]
+        s_en = sl.energy.reshape(n_chips, n_net, n_d)
+        s_lat = sl.bottleneck.reshape(n_chips, n_net, n_d)
+        s_feas = sl.feasible.reshape(n_chips, n_net, n_d)
+        # guardrail (the frontier must WIDEN, never regress): each slack
+        # point spends no more energy than its latency-only base point
+        # (rtol: the sequential slack energy sum vs the pairwise base
+        # attribution differ by ulps) and meets its deadline bit-exactly
+        assert (s_en <= energy[:, :, None] * (1.0 + 1e-9)).all(), \
+            "slack pass increased energy — dominance guardrail violated"
+        assert np.where(s_feas, s_lat, 0.0).max() < np.inf and \
+            (np.where(s_feas, s_lat, -np.inf)
+             <= dl_abs[None, :, :]).all(), \
+            "slack schedule exceeds its deadline — guardrail violated"
+        norm_se = s_en / probs.min_energy[None, :, None]
+        feas_all = s_feas.all(axis=1)                     # [n_chips, D]
+        with np.errstate(invalid="ignore"):
+            s_scores = np.where(feas_all, norm_se.mean(axis=1), np.inf)
+        assert (s_scores <= scores * (1.0 + 1e-9)).all(), \
+            "slack scores regressed vs latency-only scores"
+        any_feas = np.isfinite(s_scores).any(axis=0)
+        s_best = np.where(any_feas, np.argmin(s_scores, axis=0), -1)
+        slack_kw = dict(
+            slack_energy=s_en, slack_latency=s_lat,
+            norm_slack_energy=norm_se, slack_scores=s_scores,
+            best_chip_slack=s_best,
+            slack_moves=sl.n_moves.reshape(n_chips, n_net, n_d))
+
     return ParetoCoDesign(
         names=list(names), deadlines=deadlines,
         energy=energy, latency=lat,
@@ -806,7 +921,8 @@ def pareto_codesign(probs: CoDesignProblems,
         net_frontier=net_front, chip_frontier=chip_front,
         pool=probs.pool,
         chip_types=[c[0] for c in probs.chips],
-        chip_counts=[c[1] for c in probs.chips])
+        chip_counts=[c[1] for c in probs.chips],
+        **slack_kw)
 
 
 # ---------------------------------------------------------------------------
@@ -851,6 +967,12 @@ class ResilienceCoDesign:
     best_nominal: int                  # argmin nominal_score
     best_robust: int                   # lexicographic (worst, nominal) min
     metric: str
+    # deadline mode (resilience_codesign(deadline=...)): every cell above
+    # reflects the ENERGY-AWARE slack schedule under that (relative)
+    # deadline — feasible means "meets the deadline", energy is +inf
+    # where it cannot, and slack_moves counts accepted energy moves
+    deadline: float | None = None
+    slack_moves: np.ndarray | None = None   # [n_chips, n_net, S]
 
     @property
     def n_chips(self) -> int:
@@ -883,6 +1005,7 @@ def resilience_codesign(grid: ConfigGrid,
                         use_jax: bool | None = None,
                         degradations: Sequence[Tuple[int, int]] = ((4, 4),),
                         probs: CoDesignProblems | None = None,
+                        deadline: float | None = None,
                         ) -> ResilienceCoDesign:
     """Co-design under hardware faults: every candidate chip is scored by
     its nominal metric AND by its worst-case / expected metric when a
@@ -905,7 +1028,13 @@ def resilience_codesign(grid: ConfigGrid,
     weak-dominance front, which by construction contains the
     nominal-only winner (nothing can dominate it on the nominal axis).
     Pass ``probs=`` to reuse an existing problem set (e.g. the service's
-    cached one); it must come from this ``grid``/``networks``."""
+    cached one); it must come from this ``grid``/``networks``.
+
+    ``deadline`` (RELATIVE, x each network's sweep-minimum latency)
+    switches every scenario cell to the energy-aware slack schedule of
+    :func:`repro.core.partition.batch_slack_schedule` — the energy the
+    chip spends under each fault while still meeting the deadline;
+    cells that cannot meet it are infeasible (+inf energy/score)."""
     from ..ft import hw_faults
 
     if probs is None:
@@ -956,18 +1085,33 @@ def resilience_codesign(grid: ConfigGrid,
         lat4, counts4, n_layers=probs.n_layers_b, use_jax=use_jax,
         strict=False, labels=labels)
 
-    tt = res.layer_type[:, :n_layer]
-    energy = np.take_along_axis(
-        e4.reshape(B * S, t_max, n_layer),
-        tt[:, None, :], axis=1)[:, 0, :].sum(-1)
-    feas = res.feasible.reshape(n_chips, n_net, S)
-    bott = res.bottleneck.reshape(n_chips, n_net, S)
-    energy = np.where(feas, energy.reshape(n_chips, n_net, S), np.inf)
+    slack_moves = None
+    if deadline is None:
+        tt = res.layer_type[:, :n_layer]
+        energy = np.take_along_axis(
+            e4.reshape(B * S, t_max, n_layer),
+            tt[:, None, :], axis=1)[:, 0, :].sum(-1)
+        feas = res.feasible.reshape(n_chips, n_net, S)
+        bott = res.bottleneck.reshape(n_chips, n_net, S)
+        energy = np.where(feas, energy.reshape(n_chips, n_net, S), np.inf)
+    else:
+        # per-row absolute deadline: flat row b·S + s belongs to network
+        # (row // S) % n_net
+        dl_rows = np.tile(np.repeat(probs.min_latency * float(deadline),
+                                    S), n_chips)[:, None]
+        sl = partition.batch_slack_schedule(
+            lat4, e4, counts4, dl_rows, n_layers=probs.n_layers_b,
+            use_jax=use_jax, base=res)
+        feas = sl.feasible[:, 0].reshape(n_chips, n_net, S)
+        bott = sl.bottleneck[:, 0].reshape(n_chips, n_net, S)
+        energy = np.where(feas, sl.energy[:, 0].reshape(n_chips, n_net, S),
+                          np.inf)
+        slack_moves = sl.n_moves[:, 0].reshape(n_chips, n_net, S)
 
     if metric == "energy":
         cell, ref = energy, probs.min_energy
     elif metric == "latency":
-        cell, ref = bott, probs.min_latency
+        cell, ref = np.where(feas, bott, np.inf), probs.min_latency
     else:
         cell, ref = energy * np.where(feas, bott, 1.0), probs.min_edp
     scores = (cell / ref[None, :, None]).mean(axis=1)       # [n_chips, S]
@@ -995,7 +1139,9 @@ def resilience_codesign(grid: ConfigGrid,
         scores=scores, nominal_score=nominal, worst_score=worst,
         expected_score=expected, front=front,
         best_nominal=best_nominal, best_robust=best_robust,
-        metric=metric)
+        metric=metric,
+        deadline=None if deadline is None else float(deadline),
+        slack_moves=slack_moves)
 
 
 def savings_summary(chip: HeteroChip) -> Dict[str, Dict[str, float]]:

@@ -988,3 +988,796 @@ def batch_schedule_hetero(latencies, counts,
         seg_counts=kk[:n_b], loads=loads,
         bottleneck=bottleneck, total=total_t[:n_b].sum(axis=1),
         feasible=feas_b.copy(), labels=labels)
+
+
+# ---------------------------------------------------------------------------
+# Energy-aware deadline-slack scheduling.
+#
+# Stage 1 of batch_schedule_hetero is latency-argmin only, so every
+# frontier built on it is latency-optimal.  The slack pass starts from
+# that schedule and greedily moves layers to LOWER-ENERGY types (largest
+# energy saving first) while the pipeline still meets a deadline.
+# Feasibility of a candidate assignment at a threshold is decided by a
+# sequential greedy-covering SCAN over the layer axis (open a new
+# segment when the running sum would exceed the threshold) — the same
+# arithmetic in the scalar oracle, the numpy batch kernel and the jitted
+# jax kernel, so the three stay bit-identical:
+#
+#     x    = lat[t, l] if tt[l] == t else 0.0     (exact zero-padding)
+#     nxt  = run + x                              (computed ONCE, reused)
+#     over = nxt > thr
+#     viol |= over & (x > thr)
+#     segs += over;  run = over ? x : nxt
+#
+# A type is coverable iff segs <= max(count, 1) and never viol.  After
+# the greedy move loop the true bottleneck of the final assignment is
+# recovered by bisecting the threshold (56 iterations, lo = 0, hi =
+# min(deadline, per-type scan totals max) — both endpoints verified
+# feasible, and hi is only ever replaced by a TESTED-feasible midpoint,
+# so extraction at hi always succeeds and bottleneck <= deadline holds
+# at the bit level).  Energy totals are summed by a SEQUENTIAL per-layer
+# loop in both paths (np.sum's pairwise tree would differ between the
+# oracle's [n_l] vector and the batch's padded rows).
+# ---------------------------------------------------------------------------
+
+
+def _oracle_slack_scan(lat, tt, thr, n_l):
+    """Scalar greedy-covering scan for ONE problem (python loop).
+
+    Returns (run [T] final running sums, segs [T], viol [T], peak [T]
+    max completed-segment sum incl. the final running one)."""
+    n_types = lat.shape[0]
+    run = np.zeros(n_types)
+    segs = np.ones(n_types, dtype=np.int64)
+    viol = np.zeros(n_types, dtype=bool)
+    peak = np.zeros(n_types)
+    for l in range(n_l):
+        t = int(tt[l])
+        x = float(lat[t, l])
+        nxt = run[t] + x
+        if nxt > thr:
+            if x > thr:
+                viol[t] = True
+            segs[t] += 1
+            peak[t] = max(peak[t], run[t])
+            run[t] = x
+        else:
+            run[t] = nxt
+    peak = np.maximum(peak, run)
+    return run, segs, viol, peak
+
+
+def slack_schedule_oracle(latencies, energies, counts, deadline
+                          ) -> Dict[str, Any]:
+    """Scalar reference for ONE energy-aware slack schedule.
+
+    ``latencies``/``energies``: [n_types, n_layers]; ``counts``:
+    [n_types] cores per type; ``deadline``: absolute pipeline-latency
+    budget.  Starts from :func:`schedule_hetero_oracle`'s latency-argmin
+    schedule; when ``deadline`` leaves slack (deadline > T*), greedily
+    re-assigns layers to the energy-argmin type (largest per-layer
+    saving first, ties -> lower layer index), accepting each move iff
+    the greedy-covering scan still fits every type's cores within the
+    deadline.  Returns dict(bottleneck, layer_type, energy, n_moves,
+    feasible) — the exact semantics :func:`batch_slack_schedule`
+    batches (bit-identical arithmetic)."""
+    lat = np.asarray(latencies, dtype=np.float64)
+    en = np.asarray(energies, dtype=np.float64)
+    base = schedule_hetero_oracle(lat, counts)
+    n_types, n_l = lat.shape
+    if en.shape != lat.shape:
+        raise ValueError(
+            f"energies shape {en.shape} != latencies shape {lat.shape}")
+    cnt = np.asarray(counts, dtype=np.int64)[:n_types]
+    deadline = float(deadline)
+    tt0 = np.asarray(base["layer_type"], dtype=np.int64)
+    t_star = float(base["bottleneck"])
+
+    def _energy(tt):
+        eng = 0.0                       # sequential: matches batch path
+        for l in range(n_l):
+            eng += en[tt[l], l]
+        return eng
+
+    def _base_copy():
+        return dict(bottleneck=t_star, layer_type=tt0.copy(),
+                    energy=_energy(tt0), n_moves=0,
+                    feasible=bool(t_star <= deadline))
+
+    if not (deadline > t_star):        # no slack (or infeasible): base
+        return _base_copy()
+
+    avail = cnt > 0
+    te = np.argmin(np.where(avail[:, None], en, np.inf), axis=0)
+    d_e = en[tt0, np.arange(n_l)] - en[te, np.arange(n_l)]
+    cand = (te != tt0) & (d_e > 0)
+    order = np.lexsort((np.arange(n_l), np.where(cand, -d_e, np.inf)))
+    moves = order[:int(cand.sum())]
+
+    kk = np.maximum(cnt, 1)
+    tt = tt0.copy()
+    n_moves = 0
+    for l in moves:
+        tt_try = tt.copy()
+        tt_try[l] = te[l]
+        _, segs, viol, _ = _oracle_slack_scan(lat, tt_try, deadline, n_l)
+        if ((segs <= kk) & ~viol).all():
+            tt = tt_try
+            n_moves += 1
+    if n_moves == 0:                   # ulp guard: keep the dp-exact T*
+        return _base_copy()
+
+    totals, _, _, _ = _oracle_slack_scan(lat, tt, np.inf, n_l)
+    lo, hi = 0.0, min(deadline, float(totals.max()))
+    for _ in range(_BISECT_ITERS):
+        mid = 0.5 * (lo + hi)
+        _, segs, viol, _ = _oracle_slack_scan(lat, tt, mid, n_l)
+        if ((segs <= kk) & ~viol).all():
+            hi = mid
+        else:
+            lo = mid
+    _, _, _, peak = _oracle_slack_scan(lat, tt, hi, n_l)
+    return dict(bottleneck=float(peak.max()), layer_type=tt,
+                energy=_energy(tt), n_moves=n_moves, feasible=True)
+
+
+def _slack_x_rows(lat, tt):
+    """Materialise every per-step scan input in ONE op: ``x_all[l]`` is
+    exactly the ``x`` the reference scan builds at step ``l`` (the
+    latency of layer ``l`` on its assigned type, 0.0 elsewhere).  Shape
+    [L, B, D, T] so each step reads a contiguous slice."""
+    t_ar = np.arange(lat.shape[1])
+    return np.where(np.transpose(tt, (2, 0, 1))[..., None] == t_ar,
+                    np.transpose(lat, (2, 0, 1))[:, :, None, :], 0.0)
+
+
+def _slack_scan_rows(lat, tt, kk, thr, x_all=None, x_max=None):
+    """Vectorised greedy-covering scan (numpy batch reference).
+
+    ``lat`` [B, T, L]; ``tt`` [B, D, L]; ``kk`` [B, T]; ``thr`` [B, D].
+    Returns (run [B, D, T] final running sums, feas [B, D]).  Element-
+    wise arithmetic identical to :func:`_oracle_slack_scan` (types other
+    than tt[l] add an exact 0.0; `over` can only fire for them once viol
+    is already set, which never changes the feasibility verdict).
+    ``x_all`` lets callers reuse :func:`_slack_x_rows` across scans that
+    share the same assignment (the bisection re-scans the SAME ``tt``
+    dozens of times with different thresholds)."""
+    n_b, n_d, n_pad = tt.shape
+    n_types = lat.shape[1]
+    if x_all is None:
+        x_all = _slack_x_rows(lat, tt)
+    if x_max is None:
+        x_max = x_all.max(axis=0)
+    run = np.zeros((n_b, n_d, n_types))
+    segs = np.ones((n_b, n_d, n_types), dtype=np.int64)
+    # x > th forces `over` at that step (run >= 0), so viol — "a single
+    # layer exceeds the threshold" — needs no scan state: it is just
+    # max_l(x_l) > th, and the max is threshold-independent (callers
+    # bisecting over thresholds pass it in once)
+    viol = x_max > thr[:, :, None]
+    th = np.broadcast_to(thr[:, :, None], run.shape)
+    over = np.empty(run.shape, dtype=bool)
+    for l in range(n_pad):
+        x = x_all[l]
+        np.add(run, x, out=run)
+        np.greater(run, th, out=over)
+        segs += over
+        np.copyto(run, x, where=over)
+    feas = ((segs <= kk[:, None, :]) & ~viol).all(axis=-1)
+    return run, feas
+
+
+def _np_slack_kernel(lat, tt0, kk, mv_layer, mv_to, mv_valid, gate, dl,
+                     n_lens, k_out):
+    """Numpy slack solver: greedy move loop + bisection + extraction.
+
+    Shapes: lat [B, T, L]; tt0 [B, L]; kk [B, T]; mv_layer/mv_to/
+    mv_valid [B, M]; gate/dl [B, D]; n_lens [B]; k_out static.  Returns
+    (tt [B, D, L], n_moves [B, D], starts [B, D, T, k_out], loads
+    [B, D, T, k_out], seg_counts [B, D, T], bottleneck [B, D]).
+
+    Rows are independent, so the batch is split into depth buckets
+    (power-of-two layer counts) and each bucket scans only its own
+    depth — padding columns past a problem's true layer count are exact
+    scan no-ops, so an 11-layer problem need not ride along through a
+    126-step loop sized by the deepest problem in the batch.  The move
+    loop also shrinks per bucket (shallow problems have few candidate
+    moves)."""
+    n_b, n_types, n_pad = lat.shape
+    n_d = dl.shape[1]
+    depth = np.maximum(n_lens, 1)
+    if np.unique(depth).size <= 8:     # few distinct depths: exact cut
+        buckets = depth
+    else:
+        buckets = 1 << np.ceil(np.log2(depth)).astype(np.int64)
+        buckets = np.minimum(np.maximum(buckets, 8), n_pad)
+    if n_b and buckets.min() < n_pad:
+        tt = np.broadcast_to(tt0[:, None, :], (n_b, n_d, n_pad)).copy()
+        n_moves = np.zeros((n_b, n_d), dtype=np.int64)
+        starts = np.broadcast_to(
+            n_lens[:, None, None, None],
+            (n_b, n_d, n_types, k_out)).copy()
+        starts[:, :, :, 0] = 0
+        loads = np.zeros((n_b, n_d, n_types, k_out))
+        segc = np.ones((n_b, n_d, n_types), dtype=np.int64)
+        bott = np.full((n_b, n_d), np.inf)
+        for bk in np.unique(buckets):
+            idx = np.flatnonzero(buckets == bk)
+            mv_v = mv_valid[idx]
+            m_hi = int(mv_v.sum(axis=1).max(initial=0))
+            out = _np_slack_rows(
+                np.ascontiguousarray(lat[idx, :, :bk]), tt0[idx, :bk],
+                kk[idx], mv_layer[idx, :m_hi], mv_to[idx, :m_hi],
+                mv_v[:, :m_hi], gate[idx], dl[idx], n_lens[idx], k_out)
+            tt[idx, :, :bk] = out[0]
+            n_moves[idx] = out[1]
+            starts[idx] = out[2]
+            loads[idx] = out[3]
+            segc[idx] = out[4]
+            bott[idx] = out[5]
+        return tt, n_moves, starts, loads, segc, bott
+    return _np_slack_rows(lat, tt0, kk, mv_layer, mv_to, mv_valid, gate,
+                          dl, n_lens, k_out)
+
+
+def _np_slack_rows(lat, tt0, kk, mv_layer, mv_to, mv_valid, gate, dl,
+                   n_lens, k_out):
+    """One depth bucket of :func:`_np_slack_kernel` (same contract; the
+    layer axis is the bucket depth, ``n_lens`` may be shorter)."""
+    n_b, n_types, n_pad = lat.shape
+    n_d = dl.shape[1]
+    n_m = mv_layer.shape[1]
+    tt = np.broadcast_to(tt0[:, None, :], (n_b, n_d, n_pad)).copy()
+    n_moves = np.zeros((n_b, n_d), dtype=np.int64)
+    x_cur = None
+    if n_m:
+        # The tentative scan per candidate runs on the DESTINATION lane
+        # only.  On gated cells (dl > base bottleneck) the current
+        # accepted assignment is always scan-feasible at the deadline
+        # with no layer exceeding it: the base split's bottleneck
+        # certifies it (greedy segment count is monotone in the
+        # threshold), and every accepted move preserves it by
+        # construction.  Greedy segment count is also monotone in the
+        # element values, so zeroing the moved layer can never break
+        # its OLD lane — both monotonicities hold exactly in float
+        # arithmetic (sequential nonnegative adds are order-preserving),
+        # so the full-assignment verdict the oracle computes reduces to
+        # [new-lane scan feasible] AND [lat_new <= dl].  Candidates are
+        # one per layer (its energy-argmin type), so a candidate layer
+        # still sits on its base type when tried.  The new-lane
+        # sequence is where-built per candidate in layer-major layout
+        # from the cell-major tt/lat (sources keep the layer axis
+        # contiguous, so the build streams), while x_cur [L, B, D, T]
+        # is maintained by tiny accept-scatters purely for the bisect
+        # stage below.  Every value written is a lat[] element or an
+        # exact 0.0, so downstream scan arithmetic is bit-identical to
+        # rebuilding x from the assignment.
+        x_cur = _slack_x_rows(lat, tt)
+        d_ar = np.arange(n_d)
+        # the move axis is padded to the WORST problem's candidate
+        # count — rows without move j (or without slack at all) are
+        # excluded, keeping tt/n_moves unchanged, exactly as the dense
+        # formulation would leave them
+        live = gate.any(axis=1)
+        for j in range(n_m):
+            sel = np.flatnonzero(live & mv_valid[:, j])
+            s = sel.size
+            if s == 0:
+                continue
+            r_ix = sel[:, None]
+            lyr = mv_layer[sel, j]
+            l_ix = lyr[:, None]
+            s_ar = np.arange(s)
+            nt = mv_to[sel, j]                                # [s]
+            nt_b = nt[:, None]                                # [s, 1]
+            ot1 = tt0[sel, lyr]                               # [s]
+            ot = ot1[:, None]
+            lat_new = lat[sel, nt, lyr][:, None]              # [s, 1]
+            x_old = lat[sel, ot1, lyr][:, None]               # [s, 1]
+            dl_s = dl[sel]                                    # [s, D]
+            cond = tt[sel] == nt[:, None, None]               # [s, D, L]
+            xs = np.where(cond.transpose(2, 0, 1),
+                          lat[sel, nt].T[:, :, None], 0.0)    # [L, s, D]
+            xs[lyr, s_ar, :] = lat_new
+            kk_nt = kk[sel, nt]                               # [s]
+            run = np.zeros((s, n_d))
+            segs = np.ones((s, n_d), dtype=np.int64)
+            over = np.empty(run.shape, dtype=bool)
+            for l in range(n_pad):
+                x = xs[l]
+                np.add(run, x, out=run)
+                np.greater(run, dl_s, out=over)
+                segs += over
+                np.copyto(run, x, where=over)
+            acc = ((segs <= kk_nt[:, None]) & (lat_new <= dl_s)
+                   & gate[sel])                               # [s, D]
+            x_cur[l_ix, r_ix, d_ar, ot] = np.where(acc, 0.0, x_old)
+            x_cur[l_ix, r_ix, d_ar, nt_b] = np.where(
+                acc, np.broadcast_to(lat_new, acc.shape), 0.0)
+            tt[r_ix, d_ar, l_ix] = np.where(acc, nt_b, ot)
+            n_moves[sel] += acc
+
+    # rows with zero accepted moves carry the base schedule through
+    # combine(), so bisection + extraction run on the moved rows only;
+    # untouched rows get inert placeholders (overridden downstream)
+    starts = np.broadcast_to(
+        n_lens[:, None, None, None], (n_b, n_d, n_types, k_out)).copy()
+    starts[:, :, :, 0] = 0
+    loads = np.zeros((n_b, n_d, n_types, k_out))
+    segc = np.ones((n_b, n_d, n_types), dtype=np.int64)
+    bott = np.full((n_b, n_d), np.inf)
+    rsel = np.flatnonzero((n_moves > 0).any(axis=1))
+    if rsel.size == 0:
+        return tt, n_moves, starts, loads, segc, bott
+    lat_r, tt_r, kk_r, dl_r = lat[rsel], tt[rsel], kk[rsel], dl[rsel]
+    # tt fixed from here on: one x tensor is shared by all scans (the
+    # move loop left x_cur holding exactly _slack_x_rows(lat, tt))
+    x_all = (x_cur[:, rsel] if x_cur is not None
+             else _slack_x_rows(lat_r, tt_r))
+    x_max = x_all.max(axis=0)
+    totals, _ = _slack_scan_rows(lat_r, tt_r, kk_r,
+                                 np.full_like(dl_r, np.inf), x_all, x_max)
+    hi = np.minimum(dl_r, totals.max(axis=-1))
+    lo = np.zeros_like(hi)
+    for _ in range(_BISECT_ITERS):
+        mid = 0.5 * (lo + hi)
+        _, feas = _slack_scan_rows(lat_r, tt_r, kk_r, mid, x_all, x_max)
+        lo = np.where(feas, lo, mid)
+        hi = np.where(feas, mid, hi)
+
+    n_r = rsel.size
+    k_ar = np.arange(k_out)
+    run = np.zeros((n_r, n_d, n_types))
+    seg = np.zeros((n_r, n_d, n_types), dtype=np.int64)
+    starts_r = np.broadcast_to(
+        n_lens[rsel][:, None, None, None],
+        (n_r, n_d, n_types, k_out)).copy()
+    starts_r[:, :, :, 0] = 0
+    loads_r = np.zeros((n_r, n_d, n_types, k_out))
+    th = hi[:, :, None]
+    for l in range(n_pad):
+        x = x_all[l]
+        nxt = run + x
+        over = nxt > th
+        starts_r = np.where(
+            over[..., None] & (k_ar == (seg + 1)[..., None]), l, starts_r)
+        loads_r = np.where(over[..., None] & (k_ar == seg[..., None]),
+                           run[..., None], loads_r)
+        seg = seg + over
+        run = np.where(over, x, nxt)
+    loads_r = np.where(k_ar == seg[..., None], run[..., None], loads_r)
+    starts[rsel] = starts_r
+    loads[rsel] = loads_r
+    segc[rsel] = seg + 1
+    bott[rsel] = loads_r.max(axis=(-1, -2))
+    return tt, n_moves, starts, loads, segc, bott
+
+
+_jitted_slack = None
+
+
+def _jax_slack_solver():
+    """Jitted twin of :func:`_np_slack_kernel`: the greedy move loop,
+    bisection and segment extraction run as ONE XLA program over every
+    (problem x deadline) cell.  Same elementwise arithmetic (fori_loop
+    bodies mirror the numpy loops statement for statement), so results
+    are bit-identical to the numpy kernel and the scalar oracle."""
+    global _jitted_slack
+    if _jitted_slack is None:
+        import jax
+        import jax.numpy as jnp
+
+        def scan_rows(lat, tt, kk, thr):
+            n_b, n_d, n_pad = tt.shape
+            n_types = lat.shape[1]
+            t_ar = jnp.arange(n_types)
+            th = thr[:, :, None]
+
+            def body(l, st):
+                run, segs, viol = st
+                x = jnp.where(tt[:, :, l][:, :, None] == t_ar,
+                              lat[:, None, :, l], 0.0)
+                nxt = run + x
+                over = nxt > th
+                viol = viol | (over & (x > th))
+                segs = segs + over
+                run = jnp.where(over, x, nxt)
+                return run, segs, viol
+
+            run, segs, viol = jax.lax.fori_loop(
+                0, n_pad, body,
+                (jnp.zeros((n_b, n_d, n_types)),
+                 jnp.ones((n_b, n_d, n_types), jnp.int64),
+                 jnp.zeros((n_b, n_d, n_types), bool)))
+            feas = ((segs <= kk[:, None, :]) & ~viol).all(axis=-1)
+            return run, feas
+
+        def solve(lat, tt0, kk, mv_layer, mv_to, mv_valid, gate, dl,
+                  n_lens, k_out):
+            n_b, n_types, n_pad = lat.shape
+            n_d = dl.shape[1]
+            n_m = mv_layer.shape[1]
+            l_ar = jnp.arange(n_pad)
+            tt = jnp.broadcast_to(tt0[:, None, :], (n_b, n_d, n_pad))
+            n_moves = jnp.zeros((n_b, n_d), jnp.int64)
+
+            def mv_body(j, st):
+                tt, n_moves = st
+                onehot = l_ar[None, :] == mv_layer[:, j][:, None]
+                tt_new = jnp.where(onehot[:, None, :],
+                                   mv_to[:, j][:, None, None], tt)
+                _, feas = scan_rows(lat, tt_new, kk, dl)
+                acc = feas & gate & mv_valid[:, j][:, None]
+                tt = jnp.where(acc[:, :, None], tt_new, tt)
+                return tt, n_moves + acc
+
+            tt, n_moves = jax.lax.fori_loop(0, n_m, mv_body,
+                                            (tt, n_moves))
+
+            totals, _ = scan_rows(lat, tt, kk,
+                                  jnp.full_like(dl, jnp.inf))
+            hi = jnp.minimum(dl, totals.max(axis=-1))
+            lo = jnp.zeros_like(hi)
+
+            def bs_body(_, st):
+                lo, hi = st
+                mid = 0.5 * (lo + hi)
+                _, feas = scan_rows(lat, tt, kk, mid)
+                return jnp.where(feas, lo, mid), jnp.where(feas, mid, hi)
+
+            lo, hi = jax.lax.fori_loop(0, _BISECT_ITERS, bs_body,
+                                       (lo, hi))
+
+            t_ar = jnp.arange(n_types)
+            k_ar = jnp.arange(k_out)
+            th = hi[:, :, None]
+            starts0 = jnp.where(
+                k_ar == 0, 0,
+                jnp.broadcast_to(n_lens[:, None, None, None],
+                                 (n_b, n_d, n_types, k_out)))
+
+            def ex_body(l, st):
+                run, seg, starts, loads = st
+                x = jnp.where(tt[:, :, l][:, :, None] == t_ar,
+                              lat[:, None, :, l], 0.0)
+                nxt = run + x
+                over = nxt > th
+                starts = jnp.where(
+                    over[..., None] & (k_ar == (seg + 1)[..., None]),
+                    l, starts)
+                loads = jnp.where(
+                    over[..., None] & (k_ar == seg[..., None]),
+                    run[..., None], loads)
+                seg = seg + over
+                run = jnp.where(over, x, nxt)
+                return run, seg, starts, loads
+
+            run, seg, starts, loads = jax.lax.fori_loop(
+                0, n_pad, ex_body,
+                (jnp.zeros((n_b, n_d, n_types)),
+                 jnp.zeros((n_b, n_d, n_types), jnp.int64),
+                 starts0, jnp.zeros((n_b, n_d, n_types, k_out))))
+            loads = jnp.where(k_ar == seg[..., None],
+                              run[..., None], loads)
+            bott = loads.max(axis=(-1, -2))
+            return tt, n_moves, starts, loads, seg + 1, bott
+
+        _jitted_slack = jax.jit(solve, static_argnums=(9,))
+    return _jitted_slack
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSlackResult:
+    """Array-level output of :func:`batch_slack_schedule`.
+
+    Every field with a leading ``[B, D]`` is indexed (problem,
+    deadline); ``base`` is the latency-only :class:`BatchHeteroResult`
+    the slack pass started from.  Cells without slack (deadline <= the
+    latency-optimal bottleneck, or no accepted move) carry the base
+    schedule unchanged, so the slack result weakly dominates the base
+    everywhere by construction."""
+
+    base: BatchHeteroResult
+    deadlines: np.ndarray         # [B, D] absolute deadlines
+    layer_type: np.ndarray        # [B, D, L_pad]
+    starts: np.ndarray            # [B, D, T, k_out] full-axis starts
+    seg_counts: np.ndarray        # [B, D, T]
+    loads: np.ndarray             # [B, D, T, k_out]
+    bottleneck: np.ndarray        # [B, D] (<= deadline wherever slack)
+    total: np.ndarray             # [B, D] sum of assigned layer latency
+    energy: np.ndarray            # [B, D] sum of assigned layer energy
+    n_moves: np.ndarray           # [B, D] accepted energy moves
+    feasible: np.ndarray          # [B, D] bottleneck <= deadline
+
+    def __len__(self) -> int:
+        return int(self.bottleneck.shape[0])
+
+    @property
+    def n_deadlines(self) -> int:
+        return int(self.bottleneck.shape[1])
+
+    def schedule(self, i: int, d: int = 0) -> HeteroSchedule:
+        if not self.feasible[i, d]:
+            lab = (self.base.labels[i] if self.base.labels is not None
+                   else f"problem {i}")
+            raise ValueError(
+                f"{lab}: infeasible at deadline {self.deadlines[i, d]} "
+                f"(latency-optimal bottleneck "
+                f"{float(self.base.bottleneck[i])}) — no schedule meets "
+                "the deadline")
+        n_t = self.base.counts.shape[1]
+        n_l = int(self.base.n_layers[i])
+        tt = self.layer_type[i, d, :n_l]
+        counts = self.base.counts[i]
+        core_off = np.concatenate([[0], np.cumsum(counts)])
+        types = tuple(int(t) for t in np.repeat(np.arange(n_t), counts))
+        loads = np.zeros(int(core_off[-1]))
+        layer_core = np.zeros(n_l, dtype=np.intp)
+        for t in range(n_t):
+            if counts[t] == 0:
+                continue
+            kk = int(self.seg_counts[i, d, t])
+            st = self.starts[i, d, t, :kk]
+            ends = np.concatenate([st[1:], [n_l]])
+            lt = np.flatnonzero(tt == t)
+            if lt.size:
+                layer_core[lt] = core_off[t] + np.searchsorted(
+                    ends, lt, side="right")
+            loads[core_off[t]:core_off[t] + kk] = self.loads[i, d, t, :kk]
+        bott = float(self.bottleneck[i, d])
+        total = float(self.total[i, d])
+        return HeteroSchedule(
+            types=types, layer_type=tuple(int(t) for t in tt),
+            layer_core=tuple(int(c) for c in layer_core),
+            loads=tuple(float(x) for x in loads),
+            bottleneck=bott,
+            speedup=total / bott if bott > 0 else float("inf"),
+            n_layers=n_l)
+
+
+def batch_slack_schedule(latencies, energies, counts, deadlines,
+                         n_layers=None,
+                         use_jax: bool | None = None,
+                         *,
+                         strict: bool = True,
+                         labels=None,
+                         base: BatchHeteroResult | None = None,
+                         ) -> BatchSlackResult:
+    """Solve every energy-aware slack schedule in ONE call.
+
+    ``latencies``/``energies``: per-problem ``[n_types, n_layers]``
+    matrices — a sequence of such, or dense ``[B, T, L]`` (or
+    ``[B, S, T, L]`` with a fault-scenario axis, flattened
+    scenario-minor exactly like :func:`batch_schedule_hetero`).
+    ``deadlines``: absolute pipeline-latency budgets — a scalar, a
+    ``[D]`` vector shared by every problem, or ``[B, D]`` per-problem
+    rows.  For each (problem, deadline) cell the latency-argmin
+    schedule is computed first (``base``, reusable across calls), then
+    layers are greedily moved to lower-energy types while the greedy-
+    covering scan keeps the pipeline within the deadline — all cells in
+    one jitted dispatch.  Bit-exact against
+    :func:`slack_schedule_oracle` per cell.  ``strict``/``labels``
+    follow :func:`batch_schedule_hetero` (used only when ``base`` is
+    not supplied)."""
+    lat_in, en_in = latencies, energies
+    if isinstance(lat_in, np.ndarray) and lat_in.ndim == 4:
+        en_in = np.asarray(en_in, dtype=np.float64)
+        if en_in.shape != lat_in.shape:
+            raise ValueError(
+                f"energies shape {en_in.shape} != latencies shape "
+                f"{lat_in.shape}")
+        b0, n_s = lat_in.shape[:2]
+        lat_in = lat_in.reshape(b0 * n_s, *lat_in.shape[2:])
+        en_in = en_in.reshape(b0 * n_s, *en_in.shape[2:])
+        cnts_in = np.asarray(counts)
+        if cnts_in.ndim == 3:
+            counts = cnts_in.reshape(b0 * n_s, cnts_in.shape[2])
+        elif cnts_in.ndim == 2:
+            counts = np.repeat(cnts_in, n_s, axis=0)
+        if n_layers is not None:
+            nl = np.asarray(n_layers, dtype=np.int64)
+            n_layers = (np.repeat(nl, n_s) if nl.ndim == 1
+                        else nl.reshape(b0 * n_s))
+    dense = isinstance(lat_in, np.ndarray) and lat_in.ndim == 3
+    if dense:
+        n_b, in_types, n_max = lat_in.shape
+        n_lens = (np.full(n_b, n_max, dtype=np.int64) if n_layers is None
+                  else np.asarray(n_layers, dtype=np.int64))
+        prob_types = np.full(n_b, in_types, np.int64)
+    else:
+        lats = [np.asarray(l, dtype=np.float64) for l in lat_in]
+        ens = [np.asarray(e, dtype=np.float64) for e in en_in]
+        if len(ens) != len(lats):
+            raise ValueError(
+                f"{len(ens)} energy matrices for {len(lats)} problems")
+        for l, e in zip(lats, ens):
+            if e.shape != l.shape:
+                raise ValueError(
+                    f"energies shape {e.shape} != latencies {l.shape}")
+        n_b = len(lats)
+        in_types = max((l.shape[0] for l in lats), default=0)
+        n_lens = np.array([l.shape[1] for l in lats], dtype=np.int64)
+        n_max = int(n_lens.max()) if n_b else 0
+        prob_types = np.asarray([l.shape[0] for l in lats],
+                                dtype=np.int64)
+    cnts = np.asarray(counts)
+    if cnts.ndim == 1:
+        cnts = np.broadcast_to(cnts, (n_b, cnts.shape[0]))
+    cnts = cnts.astype(np.int64)
+
+    dl = np.asarray(deadlines, dtype=np.float64)
+    if dl.ndim == 0:
+        dl = dl.reshape(1)
+    if dl.ndim == 1:
+        dl = np.broadcast_to(dl, (max(n_b, 1), dl.shape[0]))
+    if dl.ndim != 2 or (n_b and dl.shape[0] != n_b):
+        raise ValueError(
+            f"deadlines shape {np.asarray(deadlines).shape} is not "
+            f"scalar, [D], or [B={n_b}, D]")
+    n_d = dl.shape[1]
+
+    if n_b == 0:
+        empty_base = batch_schedule_hetero(
+            np.zeros((0, 0, 0)), np.zeros((0, 0), np.int64))
+        z = np.zeros((0, n_d))
+        return BatchSlackResult(
+            base=empty_base, deadlines=np.zeros((0, n_d)),
+            layer_type=np.zeros((0, n_d, 0), np.int64),
+            starts=np.zeros((0, n_d, 0, _K_MAX), np.int64),
+            seg_counts=np.zeros((0, n_d, 0), np.int64),
+            loads=np.zeros((0, n_d, 0, _K_MAX)),
+            bottleneck=z.copy(), total=z.copy(), energy=z.copy(),
+            n_moves=np.zeros((0, n_d), np.int64),
+            feasible=np.zeros((0, n_d), bool))
+
+    if cnts.shape[0] != n_b:
+        raise ValueError(f"counts rows {cnts.shape[0]} != problems {n_b}")
+    # counts on type slots past a problem's latency rows would hand
+    # layers to a phantom zero-latency/zero-energy type once densified
+    ghost = np.arange(cnts.shape[1])[None, :] >= prob_types[:, None]
+    if (cnts * ghost).any():
+        raise ValueError("counts for more types than latency rows")
+
+    n_types = max(in_types, cnts.shape[1])
+    counts2 = np.zeros((n_b, n_types), dtype=np.int64)
+    counts2[:, :cnts.shape[1]] = cnts
+    lat_d = np.zeros((n_b, n_types, n_max))
+    en_d = np.zeros((n_b, n_types, n_max))
+    if dense:
+        lat_d[:, :in_types, :] = lat_in
+        en_src = np.asarray(en_in, dtype=np.float64)
+        if en_src.shape != np.asarray(lat_in).shape:
+            raise ValueError(
+                f"energies shape {en_src.shape} != latencies shape "
+                f"{np.asarray(lat_in).shape}")
+        en_d[:, :in_types, :] = en_src
+    else:
+        for i, (l, e) in enumerate(zip(lats, ens)):
+            lat_d[i, :l.shape[0], :l.shape[1]] = l
+            en_d[i, :e.shape[0], :e.shape[1]] = e
+    # the scan and the sequential energy/total sums rely on EXACT zeros
+    # past each problem's true layer count — scrub dense garbage columns
+    valid_cols = np.arange(n_max)[None, :] < n_lens[:, None]
+    lat_d = np.where(valid_cols[:, None, :], lat_d, 0.0)
+    en_d = np.where(valid_cols[:, None, :], en_d, 0.0)
+
+    if base is None:
+        base = batch_schedule_hetero(lat_d, counts2, n_lens, use_jax,
+                                     strict=strict, labels=labels)
+    elif len(base) != n_b:
+        raise ValueError(
+            f"base has {len(base)} problems, inputs have {n_b}")
+
+    use_jax = (jax_available() if use_jax is None else use_jax)
+
+    # host precompute: energy argmin targets + move order per problem
+    tt0 = base.layer_type[:, :n_max].astype(np.int64)
+    avail = counts2 > 0
+    te = np.argmin(np.where(avail[:, :, None], en_d, np.inf), axis=1)
+    l_idx = np.arange(n_max)
+    valid_l = l_idx[None, :] < n_lens[:, None]
+    e_cur = np.take_along_axis(en_d, tt0[:, None, :], axis=1)[:, 0, :]
+    e_new = np.take_along_axis(en_d, te[:, None, :], axis=1)[:, 0, :]
+    d_e = e_cur - e_new
+    cand = (te != tt0) & (d_e > 0) & valid_l
+    key = np.where(cand, -d_e, np.inf)
+    order = np.lexsort(
+        (np.broadcast_to(l_idx, key.shape), key), axis=-1)
+    n_mv = cand.sum(axis=1)
+    n_m = int(n_mv.max()) if n_b else 0
+    mv_layer = order[:, :n_m]
+    mv_valid = np.arange(n_m)[None, :] < n_mv[:, None]
+    mv_to = np.take_along_axis(te, mv_layer, axis=1) if n_m else \
+        np.zeros((n_b, 0), np.int64)
+    with np.errstate(invalid="ignore"):
+        gate = dl > base.bottleneck[:, None]       # inf-bottleneck safe
+    kk = np.maximum(counts2, 1)
+    k_out = max(base.starts.shape[2],
+                max(1, min(int(counts2.max(initial=1)), n_max)))
+
+    if use_jax:
+        b_pad = _bucketed(n_b, _ROW_BUCKET)
+        l_pad = _bucketed(n_max, _N_BUCKET)
+        m_pad = _bucketed(max(n_m, 1), 8)   # fori body traced even at 0
+        lat_p = np.zeros((b_pad, n_types, l_pad))
+        lat_p[:n_b, :, :n_max] = lat_d
+        tt_p = np.zeros((b_pad, l_pad), np.int64)
+        tt_p[:n_b, :n_max] = tt0
+        kk_p = np.ones((b_pad, n_types), np.int64)
+        kk_p[:n_b] = kk
+        mvl_p = np.zeros((b_pad, m_pad), np.int64)
+        mvl_p[:n_b, :n_m] = mv_layer
+        mvt_p = np.zeros((b_pad, m_pad), np.int64)
+        mvt_p[:n_b, :n_m] = mv_to
+        mvv_p = np.zeros((b_pad, m_pad), bool)
+        mvv_p[:n_b, :n_m] = mv_valid
+        gate_p = np.zeros((b_pad, n_d), bool)
+        gate_p[:n_b] = gate
+        dl_p = np.ones((b_pad, n_d))
+        dl_p[:n_b] = dl
+        nl_p = np.ones(b_pad, np.int64)
+        nl_p[:n_b] = n_lens
+        from jax.experimental import enable_x64
+        with enable_x64():
+            out = _jax_slack_solver()(
+                lat_p, tt_p, kk_p, mvl_p, mvt_p, mvv_p, gate_p, dl_p,
+                nl_p, k_out)
+        tt_s, n_moves, starts_s, loads_s, segc_s, bott_s = (
+            np.asarray(o)[:n_b] for o in out)
+        tt_s, starts_s, loads_s = (tt_s[:, :, :n_max],
+                                   starts_s, loads_s)
+    else:
+        tt_s, n_moves, starts_s, loads_s, segc_s, bott_s = \
+            _np_slack_kernel(lat_d, tt0, kk, mv_layer, mv_to, mv_valid,
+                             gate, dl, n_lens, k_out)
+
+    # combine: cells without slack (or with zero accepted moves) carry
+    # the base schedule unchanged — weak dominance by construction
+    use = gate & (n_moves > 0)
+    layer_type = np.where(use[:, :, None], tt_s, tt0[:, None, :])
+    k_b = base.starts.shape[2]
+    base_starts = base.starts
+    base_loads = base.loads
+    if k_out > k_b:
+        base_starts = np.concatenate(
+            [base_starts, np.broadcast_to(
+                n_lens[:, None, None],
+                (n_b, base_starts.shape[1], k_out - k_b))], axis=2)
+        base_loads = np.concatenate(
+            [base_loads, np.zeros(
+                (n_b, base_loads.shape[1], k_out - k_b))], axis=2)
+    starts = np.where(use[:, :, None, None], starts_s,
+                      base_starts[:, None])
+    loads = np.where(use[:, :, None, None], loads_s,
+                     base_loads[:, None])
+    seg_counts = np.where(use[:, :, None], segc_s,
+                          base.seg_counts[:, None])
+    bottleneck = np.where(use, bott_s, base.bottleneck[:, None])
+    n_moves = np.where(use, n_moves, 0)
+    with np.errstate(invalid="ignore"):
+        feasible = ((base.feasible[:, None]
+                     if base.feasible is not None else True)
+                    & (bottleneck <= dl))
+
+    # totals + energies of the COMBINED assignment: sequential per-layer
+    # loops (padded cells gather type 0 whose padding is exact 0.0)
+    l_sel = np.take_along_axis(
+        np.broadcast_to(lat_d[:, None], (n_b, n_d) + lat_d.shape[1:]),
+        layer_type[:, :, None, :], axis=2)[:, :, 0, :]
+    e_sel = np.take_along_axis(
+        np.broadcast_to(en_d[:, None], (n_b, n_d) + en_d.shape[1:]),
+        layer_type[:, :, None, :], axis=2)[:, :, 0, :]
+    total = np.zeros((n_b, n_d))
+    energy = np.zeros((n_b, n_d))
+    for l in range(n_max):
+        total = total + l_sel[:, :, l]
+        energy = energy + e_sel[:, :, l]
+    # base cells keep base.total bit-for-bit (its per-type prefix-sum
+    # order differs from the sequential re-gather by ulps)
+    total = np.where(use, total, base.total[:, None])
+
+    return BatchSlackResult(
+        base=base, deadlines=np.ascontiguousarray(dl),
+        layer_type=layer_type, starts=starts, seg_counts=seg_counts,
+        loads=loads, bottleneck=bottleneck, total=total, energy=energy,
+        n_moves=n_moves, feasible=feasible)

@@ -332,8 +332,10 @@ class DSEService:
 
     def _get_points(self, metric: str, *, exact: bool,
                     budget_end: Optional[float] = None) -> tuple:
-        """(problems, raw energy [n_chips, n_net], raw latency) for one
-        tier — the solved chip points every deadline re-sweep reuses."""
+        """(problems, raw energy [n_chips, n_net], raw latency, solved
+        BatchHeteroResult) for one tier — the solved chip points every
+        deadline re-sweep reuses; the result feeds the energy-aware
+        slack pass without re-solving."""
         tier, grid, _ = self._tier(exact)
         ck = (tier, metric)
         if ck in self._points:
@@ -351,9 +353,11 @@ class DSEService:
                 max_types=self.max_types,
                 pool_size=min(self.pool_size, grid.n), bound=self.bound,
                 metric=metric, backend=backend, stream=stream)
-            base = hetero.pareto_codesign(probs, n_deadlines=2)
+            res = partition.batch_schedule_hetero(
+                probs.lat_dense, probs.counts, n_layers=probs.n_layers_b)
+            base = hetero.pareto_codesign(probs, res, n_deadlines=2)
             self._record_cost(key, self._clock() - t0)
-            return probs, base.energy, base.latency
+            return probs, base.energy, base.latency, res
 
         out = self._with_retries(run, key=key, budget_end=budget_end)
         self._points[ck] = out
@@ -650,11 +654,12 @@ class DSEService:
                                   answer=self._config_answer(
                                       r, stream, idx_map))
                     for r in grp]
-        probs, pts_e, pts_l = self._get_points(metric, exact=tier_exact)
+        probs, pts_e, pts_l, res = self._get_points(metric,
+                                                    exact=tier_exact)
         deadlines = sorted({float(r.deadline) for r in grp})
-        par = hetero.pareto_codesign(probs,
+        par = hetero.pareto_codesign(probs, res,
                                      deadlines=np.asarray(deadlines),
-                                     points=(pts_e, pts_l))
+                                     points=(pts_e, pts_l), slack=True)
         out = []
         for r in grp:
             di = deadlines.index(float(r.deadline))
@@ -663,6 +668,7 @@ class DSEService:
             else:
                 ans = dict(network=r.network,
                            frontier=par.frontier(r.network),
+                           slack_frontier=par.slack_frontier(r.network),
                            pool=[int(idx_map[p]) for p in probs.pool])
             out.append(self._respond(r, ok=True, degraded=degraded,
                                      answer=ans))
@@ -683,12 +689,24 @@ class DSEService:
         ci = int(par.best_chip[di])
         if ci < 0:
             return dict(feasible=False, deadline=float(par.deadlines[di]))
-        return dict(
+        ans = dict(
             feasible=True, deadline=float(par.deadlines[di]),
             chip_types=[int(idx_map[probs.pool[p]])
                         for p in par.chip_types[ci]],
             chip_counts=[int(c) for c in par.chip_counts[ci]],
             score=float(par.scores[ci, di]))
+        if par.slack_scores is not None:
+            cs = int(par.best_chip_slack[di])
+            ans["slack"] = dict(
+                chip_types=[int(idx_map[probs.pool[p]])
+                            for p in par.chip_types[cs]],
+                chip_counts=[int(c) for c in par.chip_counts[cs]],
+                score=float(par.slack_scores[cs, di]),
+                moves=int(par.slack_moves[cs, :, di].sum()),
+                energy_saved_pct=float(
+                    (1.0 - par.slack_scores[cs, di] / par.scores[cs, di])
+                    * 100.0))
+        return ans
 
     def _respond(self, r, *, ok, degraded, answer, error=None):
         lat = self._clock() - r.submitted_at

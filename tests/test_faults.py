@@ -194,8 +194,19 @@ def test_service_chaos_answers_match_clean_run(grid, networks, seed):
     def ask(svc):
         svc.submit("best_config")
         svc.submit("best_chip", deadline=2.0)
+        # loose deadlines leave real slack, so these answers carry the
+        # energy-aware slack block (moves, energy_saved_pct) and the
+        # pareto answer its slack_frontier — chaos recovery must
+        # reproduce the slack-scheduled numbers too, not just the
+        # latency-only ones
+        svc.submit("best_chip", network=list(networks)[0], deadline=4.0)
+        svc.submit("pareto", network=list(networks)[0], deadline=3.0)
         out, drained = svc.run_until_drained(max_steps=50)
         assert drained
+        for r in out:
+            if r.ok and not r.degraded and "slack" in (r.answer or {}):
+                assert r.answer["slack"]["score"] <= \
+                    r.answer["score"] * (1.0 + 1e-9)
         return {r.rid: r for r in out}
 
     def close(a, b):

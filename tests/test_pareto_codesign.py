@@ -22,38 +22,9 @@ except ImportError:                                    # pragma: no cover
             reason="property test needs hypothesis "
             "(pip install -r requirements-dev.txt)")(f)
 
-
-def _brute_frontier(value, latency):
-    """O(C²) dominance filter: point c survives unless some other point
-    is ≤ in both coordinates and < in at least one."""
-    C = value.shape[0]
-    keep = np.ones(C, dtype=bool)
-    for c in range(C):
-        for o in range(C):
-            if (value[o] <= value[c] and latency[o] <= latency[c]
-                    and (value[o] < value[c] or latency[o] < latency[c])):
-                keep[c] = False
-                break
-    return keep
-
-
-def _loop_scores(value, latency, deadlines):
-    """Per-deadline python loop twin of the batched scoring."""
-    C, N = value.shape
-    D = deadlines.shape[1]
-    best = np.full(D, -1, dtype=np.int64)
-    best_net = np.full((N, D), -1, dtype=np.int64)
-    for d in range(D):
-        best_s = np.inf
-        net_s = np.full(N, np.inf)
-        for c in range(C):
-            feas = latency[c] <= deadlines[:, d]
-            if feas.all() and value[c].mean() < best_s:
-                best_s, best[d] = value[c].mean(), c
-            for j in np.flatnonzero(feas):
-                if value[c, j] < net_s[j]:
-                    net_s[j], best_net[j, d] = value[c, j], c
-    return best, best_net
+# Shared differential harness (tests/oracles.py): O(C²) dominance filter
+# + per-deadline scoring loop.
+from oracles import brute_frontier, loop_pareto_scores
 
 
 def _check_instance(value, latency, deadlines, use_jax):
@@ -67,17 +38,17 @@ def _check_instance(value, latency, deadlines, use_jax):
     np.testing.assert_array_equal(masked, want_masked)
     np.testing.assert_array_equal(scores, want_masked.mean(axis=1))
     # per-deadline argmins against the python loop
-    l_best, l_best_net = _loop_scores(value, latency, deadlines)
+    l_best, l_best_net = loop_pareto_scores(value, latency, deadlines)
     np.testing.assert_array_equal(best, l_best)
     np.testing.assert_array_equal(best_net, l_best_net)
     # frontier per network against the brute-force dominance filter
     for j in range(N):
         np.testing.assert_array_equal(
-            net_front[:, j], _brute_frontier(value[:, j], latency[:, j]),
+            net_front[:, j], brute_frontier(value[:, j], latency[:, j]),
             err_msg=f"net {j}")
     np.testing.assert_array_equal(
-        chip_front, _brute_frontier(value.mean(axis=1),
-                                    latency.mean(axis=1)))
+        chip_front, brute_frontier(value.mean(axis=1),
+                                   latency.mean(axis=1)))
 
 
 def test_pareto_scores_small_deterministic():

@@ -10,6 +10,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import accelerator, energymodel, partition, topology
 
+from oracles import dp_partition_loop
+
 lat_lists = st.lists(st.floats(0.01, 100.0), min_size=2, max_size=14)
 cores = st.integers(2, 5)
 
@@ -91,9 +93,10 @@ def test_batch_partition_matches_dp(lat_groups, ks):
     test_stream_engine.py without per-example dispatch overhead.)"""
     ks = sorted(ks)
     res = partition.batch_partition(lat_groups, ks, use_jax=False)
+    want = dp_partition_loop(lat_groups, ks)
     for i, lat in enumerate(lat_groups):
         for k in ks:
-            dp = partition.dp_partition(lat, k)
-            assert res[i][k].pipeline_latency == dp.pipeline_latency
+            assert res[i][k].pipeline_latency == \
+                want[i, k].pipeline_latency
             assert res[i][k].boundaries[0] == 0
             assert sum(res[i][k].loads) == pytest.approx(sum(lat))

@@ -390,6 +390,62 @@ def test_resilience_all_types_dead_is_infeasible(grid, networks):
         assert np.isinf(res.worst_score[c])
 
 
+def test_frontier_with_strict_false_infeasible_chips(grid, networks):
+    """strict=False infeasibility flows all the way through
+    `ResilienceCoDesign.frontier()`: chips whose worst case is +inf (the
+    fault kills every core) still render as frontier rows — reported,
+    never raised — and the nominal winner keeps its front seat."""
+    res = hetero.resilience_codesign(grid, networks, 1, max_types=1,
+                                     pool_size=2, degradations=())
+    assert np.isinf(res.worst_score).all()     # every chip 1-core, 1-type
+    front = res.frontier()
+    assert front                               # never empty
+    chips = [c for c, _, _ in front]
+    assert res.best_nominal in chips
+    # best-nominal-first ordering, worst column all +inf
+    noms = [n for _, n, _ in front]
+    assert noms == sorted(noms)
+    assert all(np.isinf(w) for _, _, w in front)
+    assert front[0][1] == pytest.approx(res.nominal_score.min())
+    # the infeasible schedule extraction still names the dead scenario
+    # via the strict=False labels instead of crashing numerically
+    s = 1                                      # core_loss@slot0
+    assert not res.feasible[:, :, s].any()
+    assert np.isinf(res.energy[:, :, s]).all()
+
+
+def test_resilience_deadline_mode_saves_energy(grid, networks):
+    """resilience_codesign(deadline=...) re-solves every (chip, net,
+    scenario) cell with the energy-aware slack pass: energies never rise
+    above the latency-only solve, moves are reported, and cells that
+    cannot meet the deadline are +inf (not raised)."""
+    base = hetero.resilience_codesign(grid, networks, 4, max_types=2,
+                                      pool_size=4, degradations=((2, 2),))
+    res = hetero.resilience_codesign(grid, networks, 4, max_types=2,
+                                     pool_size=4, degradations=((2, 2),),
+                                     deadline=3.0)
+    assert res.deadline == 3.0 and base.deadline is None
+    assert res.slack_moves is not None
+    assert res.slack_moves.shape == res.energy.shape
+    assert (res.slack_moves >= 0).all()
+    feas = res.feasible
+    # deadline-mode energy <= latency-only energy wherever both feasible
+    both = feas & base.feasible
+    assert (res.energy[both] <=
+            base.energy[both] * (1.0 + 1e-9)).all()
+    assert (res.slack_moves[both] > 0).any()   # slack actually used
+    # the deadline binds: feasible cells meet it, the rest are +inf
+    assert np.isinf(res.energy[~feas]).all()
+    assert np.isinf(res.bottleneck[~feas]).all()
+    # a crushing deadline kills everything — reported, never raised
+    tight = hetero.resilience_codesign(grid, networks, 4, max_types=2,
+                                       pool_size=4,
+                                       degradations=((2, 2),),
+                                       deadline=0.01)
+    assert not tight.feasible.any()
+    assert np.isinf(tight.scores).all()
+
+
 # ---------------------------------------------------------------------------
 # DSEService.fault_event
 # ---------------------------------------------------------------------------

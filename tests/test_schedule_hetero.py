@@ -22,51 +22,10 @@ except ImportError:                                    # pragma: no cover
             reason="property test needs hypothesis "
             "(pip install -r requirements-dev.txt)")(f)
 
-
-def _brute_force_hetero(lat, counts):
-    """Brute-force oracle within the solver's semantics: per-layer argmin
-    type assignment, then EVERY contiguous segmentation of each type's
-    subsequence enumerated (`brute_force_partition`), bottleneck = max
-    over types.  ≤8 layers / ≤3 types keeps this trivial."""
-    lat = np.asarray(lat, dtype=np.float64)
-    counts = np.asarray(counts, dtype=np.int64)
-    cost = np.where((counts > 0)[:, None], lat, np.inf)
-    tt = np.argmin(cost, axis=0)
-    bottleneck = 0.0
-    for t in range(lat.shape[0]):
-        sub = lat[t, tt == t]
-        if counts[t] <= 0 or sub.size == 0:
-            continue
-        p = partition.brute_force_partition(sub, int(counts[t]))
-        bottleneck = max(bottleneck, p.pipeline_latency)
-    return bottleneck
-
-
-def _assert_schedule_valid(s, lat, counts):
-    lat = np.asarray(lat, dtype=np.float64)
-    counts = np.asarray(counts, dtype=np.int64)
-    assert s.n_cores == counts.sum()
-    assert len(s.layer_type) == len(s.layer_core) == lat.shape[1]
-    # per-type core budget respected; core/type bookkeeping consistent
-    used = {}
-    for ty, co in zip(s.layer_type, s.layer_core):
-        assert counts[ty] > 0
-        assert s.types[co] == ty
-        used.setdefault(ty, set()).add(co)
-    for ty, cores in used.items():
-        assert len(cores) <= counts[ty]
-    # loads recompute from the assignment; bottleneck = max load
-    loads = np.zeros(len(s.types))
-    for l in range(lat.shape[1]):
-        loads[s.layer_core[l]] += lat[s.layer_type[l], l]
-    np.testing.assert_allclose(loads, s.loads, rtol=1e-12, atol=1e-12)
-    assert s.bottleneck == pytest.approx(max(s.loads))
-    # contiguity: each core's layers form one contiguous run of its
-    # type's subsequence (layer order within a type never interleaves)
-    for ty, cores in used.items():
-        seq = [s.layer_core[l] for l in range(lat.shape[1])
-               if s.layer_type[l] == ty]
-        assert seq == sorted(seq)
+# Shared differential harness (tests/oracles.py): brute-force oracle,
+# schedule validity checker, seeded instance generator.
+from oracles import (assert_schedule_valid, brute_force_hetero,
+                     seeded_hetero_instances)
 
 
 if _HAS_HYPOTHESIS:
@@ -98,14 +57,14 @@ def test_matches_bruteforce_oracle(lat, data):
                          for _ in range(lat.shape[0])])
     if counts.sum() == 0:
         counts[0] = 1
-    want = _brute_force_hetero(lat, counts)
+    want = brute_force_hetero(lat, counts)
     oracle = partition.schedule_hetero_oracle(lat, counts)
     assert oracle["bottleneck"] == pytest.approx(want, rel=1e-12)
     for use_jax in (False, True):
         res = partition.batch_schedule_hetero([lat], [counts],
                                               use_jax=use_jax)
         assert res.bottleneck[0] == oracle["bottleneck"], use_jax
-        _assert_schedule_valid(res.schedule(0), lat, counts)
+        assert_schedule_valid(res.schedule(0), lat, counts)
 
 
 @_degeneracy_property
@@ -123,35 +82,20 @@ def test_single_type_degenerates_to_batch_partition(lat_groups, k):
 def test_bruteforce_oracle_deterministic_seeded():
     """Non-hypothesis twin of the property test (always runs): 120 seeded
     random ≤(3 × 8) instances vs the brute-force enumeration."""
-    rng = np.random.default_rng(123)
-    for _ in range(120):
-        t = int(rng.integers(1, 4))
-        n = int(rng.integers(1, 9))
-        lat = rng.uniform(0.01, 100.0, size=(t, n))
-        counts = rng.integers(0, 4, size=t)
-        if counts.sum() == 0:
-            counts[int(rng.integers(t))] = 1
-        want = _brute_force_hetero(lat, counts)
+    for lat, counts in seeded_hetero_instances(123, 120):
+        want = brute_force_hetero(lat, counts)
         for use_jax in (False, True):
             res = partition.batch_schedule_hetero([lat], [counts],
                                                   use_jax=use_jax)
             assert res.bottleneck[0] == pytest.approx(want, rel=1e-12)
-            _assert_schedule_valid(res.schedule(0), lat, counts)
+            assert_schedule_valid(res.schedule(0), lat, counts)
 
 
 def test_batched_many_problems_both_backends():
     """A mixed batch (ragged T and L, zero-count padding types) solves to
     the oracle on every problem, with identical results across backends."""
-    rng = np.random.default_rng(7)
-    problems = []
-    for _ in range(40):
-        t = int(rng.integers(1, 4))
-        n = int(rng.integers(1, 30))
-        lat = rng.uniform(0.01, 10.0, size=(t, n))
-        counts = rng.integers(0, 4, size=t)
-        if counts.sum() == 0:
-            counts[int(rng.integers(t))] = 2
-        problems.append((lat, counts))
+    problems = seeded_hetero_instances(7, 40, max_layers=29,
+                                       lat_range=(0.01, 10.0))
     lats = [p[0] for p in problems]
     counts = np.zeros((len(problems), 3), dtype=np.int64)
     for i, (lat, cn) in enumerate(problems):

@@ -161,6 +161,52 @@ def test_stream_networks_resume(grid, networks, kill_at):
                                       ref.boundary_idx[nm])
 
 
+def test_resume_with_duplicated_grid_rows(grid, networks):
+    """A grid with DUPLICATED rows (exact metric ties at every duplicate)
+    still resumes bit-exactly from any chunk boundary: the (value, flat
+    index) tie-break keeps the fold split-invariant even when the values
+    alone cannot order the candidates."""
+    idx = np.array([0, 1, 1, 2, 5, 5, 5, 9, 9, 3])
+    dup = grid.take(idx)
+    assert dup.n == idx.size
+    ref = _run(dup, networks, chunk=3, backend="numpy")
+    states = []
+    _run(dup, networks, chunk=3, backend="numpy", on_chunk=states.append)
+    for fs in states:
+        res = _run(dup, networks, chunk=3, backend="numpy",
+                   resume_from=fs.export_state())
+        _assert_same(res, ref, networks)
+    # duplicated winners: ties broke toward the LOWER flat index, so a
+    # duplicate of the winner never displaces it
+    for col in range(ref.topk_idx.shape[1]):
+        ti = [i for i in ref.topk_idx[:, col] if i >= 0]
+        assert len(set(ti)) == len(ti)          # no index repeats
+        assert ti == sorted(ti, key=lambda i: (ref.topk_metric[
+            list(ref.topk_idx[:, col]).index(i), col], i))
+
+
+def test_empty_boundary_set_on_zero_row_grid(grid, networks):
+    """bound=... against a zero-row grid: the stream completes with an
+    EMPTY boundary set (not a crash), +inf minima and -1 top-k
+    sentinels, and a complete resumable state."""
+    empty = grid.take(np.array([], dtype=np.int64))
+    assert empty.n == 0
+    states = []
+    res = _run(empty, networks, chunk=5, backend="numpy",
+               on_chunk=states.append)
+    for nm in networks:
+        assert res.boundary_idx[nm].size == 0
+        assert res.boundary_energy[nm].size == 0
+        assert res.boundary_latency[nm].size == 0
+    assert np.isinf(res.min_metric).all()
+    assert (res.topk_idx == -1).all()
+    # zero chunks -> zero on_chunk callbacks, but a fresh resume from
+    # nothing still reproduces the same (empty) result
+    assert states == []
+    res2 = _run(empty, networks, chunk=5, backend="numpy")
+    _assert_same(res2, res, networks)
+
+
 def test_codesign_pool_survives_kill(grid, networks):
     """hetero.codesign_problems_streaming passthrough: a pool build killed
     mid-sweep and resumed yields the identical pool and problem set."""
