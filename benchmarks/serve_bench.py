@@ -13,7 +13,17 @@ proves functionally (tests/test_faults.py, tests/test_stream_resume.py):
   uninterrupted time (the crash-safety tax; floor-checked to stay <= 20%),
   plus ``max_rel_err_resume`` which MUST be 0.0 — resume is bit-exact;
 * ``chaos`` — the service under the CI seed matrix of random fault plans:
-  every accepted query answered, zero errors.
+  every accepted query answered, zero errors;
+* ``restart`` (schema 2) — the DURABLE service process-killed mid-sweep
+  (``FaultPlan.pkill_at``), restarted over the same ``state_dir``, and
+  drained: ``recovery_tax`` = (killed + restart time) / uninterrupted
+  durable time − 1 — both sides pay the journal/store fsyncs, so the tax
+  isolates the kill + replay overhead itself (floor-checked ≤ 25% on
+  full runs) — ``max_rel_err_restart`` MUST be 0.0
+  (replayed answers bit-identical to the uninterrupted run, tuples and
+  JSON-round-tripped lists compared as equal) with zero duplicate rids,
+  and a third warm launch over the same state answers the whole mix from
+  the persistent store — ``warm_hit_ratio`` floor-checked ≥ 0.8.
 
 ``benchmarks/check_floors.py`` asserts the guardrails in
 ``benchmarks/floors.json`` (``serve`` section; ``*_max`` keys are
@@ -25,6 +35,7 @@ from __future__ import annotations
 import argparse
 import json
 import platform
+import tempfile
 import time
 from pathlib import Path
 
@@ -32,7 +43,7 @@ import numpy as np
 
 from repro.core import energymodel, topology
 from repro.core.accelerator import ConfigGrid, extended_grid
-from repro.ft.faults import FaultPlan, inject_chunk_faults
+from repro.ft.faults import FaultPlan, ProcessKill, inject_chunk_faults
 from repro.serving.dse_service import DSEService
 
 BENCH_SERVE_JSON = Path("BENCH_serve.json")
@@ -127,6 +138,121 @@ def _chaos_metrics(grid, networks, *, chunk_size: int) -> dict:
                 degraded=degraded)
 
 
+def _max_rel_err(got, want):
+    """Structural max-rel-err: tuples and lists compare as equal (JSON
+    round trips turn tuples into lists), shapes/keys must match exactly,
+    numeric leaves contribute their relative difference, any other
+    mismatch is +inf."""
+    if isinstance(got, dict) and isinstance(want, dict):
+        if sorted(got) != sorted(want):
+            return float("inf")
+        return max((_max_rel_err(got[k], want[k]) for k in got),
+                   default=0.0)
+    if isinstance(got, (list, tuple)) and isinstance(want, (list, tuple)):
+        if len(got) != len(want):
+            return float("inf")
+        return max((_max_rel_err(g, w) for g, w in zip(got, want)),
+                   default=0.0)
+    if (isinstance(got, (int, float)) and isinstance(want, (int, float))
+            and not isinstance(got, bool) and not isinstance(want, bool)):
+        g, w = float(got), float(want)
+        if g == w:                      # covers inf == inf
+            return 0.0
+        if not (np.isfinite(g) and np.isfinite(w)):
+            return float("inf")
+        return abs(g - w) / max(abs(w), 1e-30)
+    return 0.0 if got == want else float("inf")
+
+
+def _restart_metrics(grid, networks, *, n_queries: int,
+                     chunk_size: int) -> dict:
+    """Kill the durable service mid-sweep, restart over its state_dir,
+    drain, and compare against the uninterrupted run; then measure the
+    warm-restart path that answers the same mix from the store."""
+    names = list(networks)
+
+    def submit_mix(svc):
+        rng = np.random.default_rng(7)
+        for _ in range(n_queries):
+            kind = ("best_config", "best_chip",
+                    "pareto")[int(rng.integers(3))]
+            svc.submit(kind,
+                       network=(names[int(rng.integers(len(names)))]
+                                if kind != "best_config" else None),
+                       deadline=float(rng.choice([1.5, 2.0, 3.0])))
+
+    def mk(state_dir):
+        return DSEService(grid, networks, chunk_size=chunk_size,
+                          max_queue=n_queries, state_dir=state_dir)
+
+    warm = mk(None)                      # warm the jit caches first so the
+    submit_mix(warm)                     # timed runs compare folds, not
+    warm.run_until_drained()             # traces
+
+    # the clean reference is ALSO durable (fresh state dir): recovery_tax
+    # isolates what the kill + journal-replay restart costs, not what
+    # durability itself costs (both sides pay the journal/store fsyncs)
+    with tempfile.TemporaryDirectory() as sd_clean:
+        t0 = time.perf_counter()
+        clean = mk(sd_clean)
+        submit_mix(clean)
+        clean_out, drained = clean.run_until_drained()
+        t_clean = time.perf_counter() - t0
+        clean.close()
+    assert drained
+    by_rid = {r.rid: r for r in clean_out}
+
+    n_chunks = -(-grid.n // chunk_size)
+    kill_chunk = max(1, n_chunks // 2)
+    with tempfile.TemporaryDirectory() as sd:
+        t0 = time.perf_counter()
+        s1 = mk(sd)
+        submit_mix(s1)
+        try:
+            with inject_chunk_faults(FaultPlan(pkill_at=kill_chunk)):
+                s1.run_until_drained()
+        except ProcessKill:
+            pass
+        t_killed = time.perf_counter() - t0
+        killed_out = list(s1.responses)  # delivered before the kill
+        s1.close()
+
+        t0 = time.perf_counter()
+        s2 = mk(sd)                      # journal replay + ckpt resume
+        replayed_out, drained = s2.run_until_drained()
+        t_restart = time.perf_counter() - t0
+        assert drained
+        s2.close()
+
+        all_out = killed_out + replayed_out
+        rids = [r.rid for r in all_out]
+        duplicates = len(rids) - len(set(rids))
+        err = 0.0 if len(all_out) == len(clean_out) else float("inf")
+        for r in all_out:
+            err = max(err, _max_rel_err(r.answer, by_rid[r.rid].answer))
+
+        t0 = time.perf_counter()
+        s3 = mk(sd)                      # warm restart: store-served
+        submit_mix(s3)
+        warm_out, drained = s3.run_until_drained()
+        t_warm = time.perf_counter() - t0
+        assert drained
+        hits = s3.stats["answer_hits"]
+        s3.close()
+
+    return dict(
+        n_queries=n_queries, n_chunks=n_chunks, kill_chunk=kill_chunk,
+        t_clean_s=t_clean, t_killed_s=t_killed, t_restart_s=t_restart,
+        recovery_tax=(t_killed + t_restart) / t_clean - 1.0,
+        max_rel_err_restart=err,
+        duplicate_responses=duplicates,
+        served_before_kill=len(killed_out),
+        served_after_restart=len(replayed_out),
+        t_warm_s=t_warm,
+        warm_hit_ratio=hits / max(len(warm_out), 1),
+        warm_restart_speedup=t_clean / max(t_warm, 1e-9))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -145,7 +271,7 @@ def main() -> None:
         out_path = BENCH_SERVE_JSON
 
     payload = dict(
-        schema=1,
+        schema=2,
         quick=bool(args.quick),
         host=platform.node(),
         python=platform.python_version(),
@@ -153,14 +279,19 @@ def main() -> None:
                                  chunk_size=chunk),
         recovery=_recovery_metrics(grid, nets, chunk_size=chunk),
         chaos=_chaos_metrics(grid, nets, chunk_size=chunk),
+        restart=_restart_metrics(grid, nets, n_queries=n_queries,
+                                 chunk_size=chunk),
     )
     out_path.write_text(json.dumps(payload, indent=2) + "\n")
     svc = payload["service"]
     rec = payload["recovery"]
+    rst = payload["restart"]
     print(f"{out_path}: {svc['served']}/{svc['n_queries']} queries at "
           f"{svc['queries_per_sec']:.2f} q/s, recovery_ratio="
           f"{rec['recovery_ratio']:.3f}, chaos errors="
-          f"{payload['chaos']['errors']}")
+          f"{payload['chaos']['errors']}, recovery_tax="
+          f"{rst['recovery_tax']:.3f}, warm_hit_ratio="
+          f"{rst['warm_hit_ratio']:.2f}")
 
 
 if __name__ == "__main__":

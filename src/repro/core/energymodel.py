@@ -1942,6 +1942,98 @@ def stream_layer_topk(grid: ConfigGrid,
         boundary_energy=b_e, boundary_latency=b_t)
 
 
+def _shift_idx(idx: np.ndarray, offset: int) -> np.ndarray:
+    """Shift flat grid indices by ``offset``, preserving -1 sentinels."""
+    idx = np.asarray(idx)
+    return np.where(idx >= 0, idx + offset, idx)
+
+
+def merge_layer_topk(a: LayerTopK, b: LayerTopK) -> LayerTopK:
+    """Fold two completed streamed sweeps over consecutive grid-row ranges.
+
+    ``a`` covers rows ``[0, a.n_cfg)`` of some grid and ``b`` the APPENDED
+    rows ``[a.n_cfg, a.n_cfg + b.n_cfg)`` streamed as a standalone grid
+    (its flat indices are local, so they are shifted by ``a.n_cfg`` here).
+    Because every streamed reduction tie-breaks by (value, flat index),
+    the fold is split-point-invariant: the merge is BIT-identical to
+    re-streaming the concatenated grid from scratch — this is the
+    incremental-grid-delta entry point
+    :meth:`repro.serving.dse_service.DSEService.extend_grid` folds
+    appended config rows through.
+
+    Boundary-set exactness: each part's sets were pruned against its own
+    running minimum; the merged threshold ``min(a_min, b_min)·(1+bound)``
+    is no looser than either part's, so every merged-boundary row was
+    already retained by its part — nothing pruned early is ever needed.
+    """
+    if a.networks != b.networks:
+        raise ValueError(
+            f"cannot merge streams over different network sets "
+            f"{a.networks} vs {b.networks}")
+    if a.metric != b.metric or a.bound != b.bound:
+        raise ValueError(
+            f"cannot merge streams with different reduction parameters: "
+            f"(metric, bound) = ({a.metric!r}, {a.bound}) vs "
+            f"({b.metric!r}, {b.bound})")
+    if a.topk_idx.shape != b.topk_idx.shape:
+        raise ValueError(
+            f"cannot merge streams with different top-k sizes "
+            f"{a.topk_idx.shape[0]} vs {b.topk_idx.shape[0]}")
+    off = int(a.n_cfg)
+    k = a.topk_idx.shape[0]
+
+    # -- top-k with the per-layer rows gathered alongside ------------------
+    all_v = np.concatenate([a.topk_metric, b.topk_metric], axis=0)
+    all_i = np.concatenate([a.topk_idx, _shift_idx(b.topk_idx, off)],
+                           axis=0)
+    order = np.lexsort((all_i, all_v), axis=0)[:k]
+    top_v = np.take_along_axis(all_v, order, axis=0)
+    top_i = np.take_along_axis(all_i, order, axis=0)
+    all_e = np.concatenate([a.layer_energy, b.layer_energy], axis=0)
+    all_t = np.concatenate([a.layer_latency, b.layer_latency], axis=0)
+    top_e = np.take_along_axis(all_e, order[:, :, None], axis=0)
+    top_t = np.take_along_axis(all_t, order[:, :, None], axis=0)
+
+    # -- aggregate minima: strict < keeps the LOWER-index (a) side on ties
+    better = b.min_metric < a.min_metric
+    min_m = np.where(better, b.min_metric, a.min_metric)
+    argm = np.where(better, _shift_idx(b.argmin, off), a.argmin)
+    lbetter = b.layer_min_metric < a.layer_min_metric
+    lmin = np.where(lbetter, b.layer_min_metric, a.layer_min_metric)
+    larg = np.where(lbetter, _shift_idx(b.layer_argmin, off),
+                    a.layer_argmin)
+
+    b_idx = b_e = b_t = None
+    if a.bound is not None:
+        bd = float(a.bound)
+        b_idx, b_e, b_t = {}, {}, {}
+        for j, nm in enumerate(a.networks):
+            idx = np.concatenate([a.boundary_idx[nm],
+                                  b.boundary_idx[nm] + off])
+            ee = np.concatenate([a.boundary_energy[nm],
+                                 b.boundary_energy[nm]])
+            tt = np.concatenate([a.boundary_latency[nm],
+                                 b.boundary_latency[nm]])
+            v = _metric_of(a.metric, ee, tt)
+            keep = v <= min_m[j] * (1.0 + bd)   # prune to the merged min
+            idx, ee, tt, v = idx[keep], ee[keep], tt[keep], v[keep]
+            order = np.lexsort((idx, v))        # metric, then lower index
+            b_idx[nm], b_e[nm], b_t[nm] = idx[order], ee[order], tt[order]
+
+    return LayerTopK(
+        networks=a.networks, n_cfg=off + int(b.n_cfg), metric=a.metric,
+        layer_counts=a.layer_counts,
+        topk_idx=top_i, topk_metric=top_v,
+        layer_energy=top_e, layer_latency=top_t,
+        min_energy=np.minimum(a.min_energy, b.min_energy),
+        min_latency=np.minimum(a.min_latency, b.min_latency),
+        min_edp=np.minimum(a.min_edp, b.min_edp),
+        min_metric=min_m, argmin=argm,
+        layer_min_metric=lmin, layer_argmin=larg,
+        bound=a.bound, boundary_idx=b_idx,
+        boundary_energy=b_e, boundary_latency=b_t)
+
+
 def simulate_grid(configs: Sequence[AcceleratorConfig] | ConfigGrid,
                   layers: Sequence[Layer], use_jax: bool = False,
                   backend: str | None = None):

@@ -762,19 +762,33 @@ class ParetoCoDesign:
     def n_chips(self) -> int:
         return len(self.chip_types)
 
-    def slack_frontier(self, name: str) -> List[Tuple[int, float, float]]:
+    def slack_frontier(self, name: str,
+                       deadline_index: int | None = None,
+                       ) -> List[Tuple[int, float, float]]:
         """One network's non-dominated ``(chip, latency, energy)`` points
-        over the UNION of the latency-only points and every deadline's
-        slack point — the widened front.  Falls back to :meth:`frontier`
-        when the sweep ran without ``slack=True``."""
+        over the UNION of the latency-only points and the slack points —
+        the widened front.  Falls back to :meth:`frontier` when the sweep
+        ran without ``slack=True``.
+
+        With ``deadline_index`` the slack union is restricted to that one
+        deadline column, making the answer a function of (problem, that
+        deadline) only — required wherever the result must not depend on
+        which OTHER deadlines happened to share the sweep (e.g. the DSE
+        service's coalesced batches and its persistent answer cache).
+        ``None`` keeps the historical all-deadlines union."""
         if self.slack_energy is None:
             return self.frontier(name)
         j = self.names.index(name)
-        n_c, n_d = self.n_chips, self.slack_energy.shape[2]
+        n_c = self.n_chips
+        if deadline_index is None:
+            cols = np.arange(self.slack_energy.shape[2])
+        else:
+            cols = np.array([int(deadline_index)])
+        n_d = cols.size
         lat = np.concatenate([self.latency[:, j],
-                              self.slack_latency[:, j, :].ravel()])
+                              self.slack_latency[:, j, cols].ravel()])
         en = np.concatenate([self.energy[:, j],
-                             self.slack_energy[:, j, :].ravel()])
+                             self.slack_energy[:, j, cols].ravel()])
         chip = np.concatenate([np.arange(n_c),
                                np.repeat(np.arange(n_c), n_d)])
         ok = np.isfinite(lat) & np.isfinite(en)

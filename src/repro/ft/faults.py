@@ -42,7 +42,21 @@ class BackendFault(RuntimeError):
 
 
 class StreamKill(RuntimeError):
-    """Injected mid-stream kill (simulated process death)."""
+    """Injected mid-stream kill (simulated process death).
+
+    The service retry ladder treats this as recoverable: it resumes from
+    the last checkpoint inside the same process."""
+
+
+class ProcessKill(BaseException):
+    """Injected whole-PROCESS death (kill -9 analogue).
+
+    Deliberately a :class:`BaseException` so generic ``except Exception``
+    retry/backoff paths do NOT swallow it — it must propagate all the way
+    out of ``DSEService.step()``, leaving queues, caches and half-written
+    state exactly as the kill found them.  The durable-service chaos tests
+    then construct a FRESH service over the same ``state_dir`` and assert
+    journal replay + checkpoint recovery drain to bit-identical answers."""
 
 
 @dataclasses.dataclass
@@ -52,6 +66,7 @@ class FaultPlan:
     fail_at: Dict[int, int] = dataclasses.field(default_factory=dict)
     corrupt_at: Dict[int, str] = dataclasses.field(default_factory=dict)
     kill_at: Optional[int] = None
+    pkill_at: Optional[int] = None   # whole-process kill (ProcessKill)
     seed: int = 0
     target: str = "e"              # corruption tensor: "e" | "t"
     fired: List[Tuple[int, str]] = dataclasses.field(default_factory=list)
@@ -81,6 +96,10 @@ class FaultPlan:
                    target=target)
 
     def __call__(self, ci: int, e, t):
+        if self.pkill_at is not None and ci == self.pkill_at:
+            self.pkill_at = None
+            self.fired.append((ci, "pkill"))
+            raise ProcessKill(f"injected process kill at chunk {ci}")
         if self.kill_at is not None and ci == self.kill_at:
             self.kill_at = None
             self.fired.append((ci, "kill"))

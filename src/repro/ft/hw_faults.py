@@ -86,6 +86,32 @@ class FaultScenario:
             for e in self.events)
 
 
+def scenario_to_json(scenario: FaultScenario) -> dict:
+    """Plain-JSON form of a scenario (the request journal's wire format)."""
+    return {
+        "name": scenario.name,
+        "events": [
+            dict(kind=type(e).__name__, **dataclasses.asdict(e))
+            for e in scenario.events
+        ],
+    }
+
+
+def scenario_from_json(obj: dict) -> FaultScenario:
+    """Inverse of :func:`scenario_to_json`; round-trips :meth:`key`."""
+    events: List[FaultEvent] = []
+    for ev in obj["events"]:
+        ev = dict(ev)
+        kind = ev.pop("kind")
+        if kind == "CoreFailure":
+            events.append(CoreFailure(**ev))
+        elif kind == "DegradedArray":
+            events.append(DegradedArray(**ev))
+        else:
+            raise ValueError(f"unknown fault-event kind {kind!r}")
+    return FaultScenario(name=obj["name"], events=tuple(events))
+
+
 def apply_counts(counts: Sequence[int], scenario: FaultScenario
                  ) -> np.ndarray:
     """Surviving per-type core counts under ``scenario`` (clamped at 0)."""

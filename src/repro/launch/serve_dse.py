@@ -11,9 +11,17 @@ first served best-chip answer and drains the resulting re-schedule query
 through the same loop — the chip's layers re-map across the survivors
 without a service restart.
 
+``--state-dir DIR`` makes the service durable: requests journal to disk
+before admission, warm tiers and answers persist in the store, and a
+re-launch over the same directory replays whatever an earlier (killed)
+launch accepted but never answered — those replayed queries drain FIRST.
+SIGTERM/SIGINT trigger a graceful drain: admission closes, the queue is
+served to completion, and the journal is closed before exit.
+
     PYTHONPATH=src python -m repro.launch.serve_dse --requests 12
     PYTHONPATH=src python -m repro.launch.serve_dse --chaos 0 --deadline-s 5
     PYTHONPATH=src python -m repro.launch.serve_dse --fault-event
+    PYTHONPATH=src python -m repro.launch.serve_dse --state-dir /tmp/dse
 """
 
 from __future__ import annotations
@@ -21,6 +29,7 @@ from __future__ import annotations
 import argparse
 import contextlib
 import json
+import signal
 import time
 
 import numpy as np
@@ -32,6 +41,21 @@ from repro.ft.hw_faults import all_single_core_failures
 from repro.serving.dse_service import DSEService
 
 KINDS = ("best_config", "best_chip", "pareto")
+
+
+def install_graceful(svc, *, signals=(signal.SIGTERM, signal.SIGINT)):
+    """Graceful-drain handler: on signal, close admission (``max_queue=0``
+    rejects everything), serve the queue to completion, close the journal,
+    and exit 0 — accepted work is answered, not re-queued for a replay.
+    Returns the handler so tests can invoke it without a real signal."""
+    def handler(signum, frame):
+        svc.max_queue = 0
+        svc.run_until_drained()
+        svc.close()
+        raise SystemExit(0)
+    for s in signals:
+        signal.signal(s, handler)
+    return handler
 
 
 def main(argv=None, *, clock=None, sleep=None, grid=None):
@@ -48,6 +72,10 @@ def main(argv=None, *, clock=None, sleep=None, grid=None):
     ap.add_argument("--degrade-stride", type=int, default=8)
     ap.add_argument("--backend", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--state-dir", default=None,
+                    help="durable state root (journal + cache + "
+                    "checkpoints); re-launching over it replays "
+                    "unanswered requests")
     ap.add_argument("--chaos", type=int, default=None,
                     help="inject a seeded fault plan while serving")
     ap.add_argument("--fault-event", action="store_true",
@@ -66,7 +94,14 @@ def main(argv=None, *, clock=None, sleep=None, grid=None):
     svc = DSEService(grid, nets, max_queue=args.max_queue,
                      chunk_size=args.chunk_size,
                      degrade_stride=args.degrade_stride,
-                     backend=args.backend, **extra)
+                     backend=args.backend, state_dir=args.state_dir,
+                     **extra)
+    prev_handlers = {s: signal.getsignal(s)
+                     for s in (signal.SIGTERM, signal.SIGINT)}
+    install_graceful(svc)
+    if svc.stats["replayed"]:
+        print(f"replayed {svc.stats['replayed']} unanswered requests "
+              f"from {args.state_dir}")
 
     rng = np.random.default_rng(args.seed)
     names = list(nets)
@@ -128,6 +163,9 @@ def main(argv=None, *, clock=None, sleep=None, grid=None):
                       f"counts_after={a.get('counts_after')}")
 
     print(json.dumps(svc.health(), indent=2, default=str))
+    svc.close()
+    for s, h in prev_handlers.items():   # leave no handler behind (tests
+        signal.signal(s, h)              # call main() in-process)
     return responses
 
 

@@ -1,2 +1,3 @@
 from .engine import ServeEngine  # noqa: F401
 from .dse_service import DSEService  # noqa: F401
+from .store import DurableStore, Journal  # noqa: F401

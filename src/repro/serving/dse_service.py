@@ -51,10 +51,30 @@ Scenarios that kill every core come back ``feasible=False`` per network
    query with budget to finish.
 5. *Observability*: :meth:`DSEService.health` snapshots queue depth, cache
    hits, fault/retry/fallback/resume counters, and p50/p99 latency.
+6. *Durability* (``state_dir=``): a :class:`repro.serving.store.Journal`
+   write-ahead log makes admission survive process death — every accepted
+   request is journalled before it enters the queue and marked done when
+   its answer is delivered, so a restarted service over the same
+   ``state_dir`` replays exactly the accepted-but-unanswered requests (by
+   rid) and drains to bit-identical answers.  A
+   :class:`repro.serving.store.DurableStore` persists the warm tiers:
+   completed streamed sweeps (content-addressed on grid/network hashes),
+   exact per-request answers, and mid-stream checkpoints (``_ckpt``
+   spills through :meth:`repro.core.energymodel.StreamFoldState.save`
+   keyed by ``stream_input_hash``; stale checkpoint files are
+   garbage-collected on startup).  The in-memory re-schedule cache stays
+   memory-only: its ``fault_event`` invalidation enumerates keys by chip
+   identity, which a content-addressed store cannot do.
+7. *Incremental grid deltas*: :meth:`DSEService.extend_grid` folds ONLY
+   the appended config rows into every completed stream via
+   :func:`repro.core.energymodel.merge_layer_topk` — bit-identical to
+   re-streaming the grown grid from scratch — and invalidates exactly
+   the store groups whose grid hash changed.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
@@ -65,6 +85,7 @@ from ..core import energymodel, hetero, partition
 from ..core.accelerator import ConfigGrid
 from ..core.topology import Layer
 from ..ft import hw_faults
+from . import store as store_mod
 
 
 class ServiceFault(RuntimeError):
@@ -136,6 +157,9 @@ class DSEService:
                  max_retries: int = 3,
                  backoff_s: float = 0.05,
                  safety_factor: float = 2.0,
+                 state_dir=None,
+                 lat_window: int = 4096,
+                 ckpt_every: int = 4,
                  clock=time.monotonic,
                  sleep=time.sleep):
         self.grid = grid
@@ -152,10 +176,11 @@ class DSEService:
         self.max_retries = int(max_retries)
         self.backoff_s = float(backoff_s)
         self.safety = float(safety_factor)
+        self.ckpt_every = max(int(ckpt_every), 1)
         self._clock = clock
         self._sleep = sleep
-        stride = max(1, min(int(degrade_stride), grid.n))
-        self._sub_idx = np.arange(0, grid.n, stride)
+        self._stride = max(1, min(int(degrade_stride), grid.n))
+        self._sub_idx = np.arange(0, grid.n, self._stride)
         self._sub_grid = grid.take(self._sub_idx)
 
         self._queue: List[DSERequest] = []
@@ -167,7 +192,11 @@ class DSEService:
         self._points: Dict[Tuple[str, str], tuple] = {}
         self._ckpt: Dict[tuple, energymodel.StreamFoldState] = {}
         self._cost: Dict[tuple, float] = {}     # measured seconds, EMA
-        self._lat: List[float] = []
+        # bounded ring buffer: p50/p99 over the last `lat_window` samples,
+        # O(window) memory no matter how long the service lives
+        self.lat_window = max(int(lat_window), 1)
+        self._lat: collections.deque = collections.deque(
+            maxlen=self.lat_window)
         self.stats: Dict[str, int] = dict(
             submitted=0, accepted=0, rejected=0, completed=0, degraded=0,
             deadline_missed=0, errors=0, faults=0, retries=0,
@@ -176,9 +205,127 @@ class DSEService:
             points_cache_hits=0, points_cache_misses=0,
             coalesced_batches=0,
             fault_events=0, reschedules=0, schedule_invalidations=0,
-            resched_cache_hits=0, resched_cache_misses=0)
+            resched_cache_hits=0, resched_cache_misses=0,
+            store_hits=0, store_misses=0, answer_hits=0,
+            replayed=0, replay_dropped=0, ckpt_gc=0,
+            grid_extensions=0, delta_folds=0, cache_invalidated=0)
         # (chip_types, chip_counts, scenario.key(), metric) → answer dict
         self._resched: Dict[tuple, Dict[str, Any]] = {}
+
+        # -- durable state (all no-ops when state_dir is None) -------------
+        self.state_dir = None if state_dir is None else str(state_dir)
+        self._grid_hash = store_mod.grid_hash(self.grid)
+        self._sub_hash = store_mod.grid_hash(self._sub_grid)
+        self._nets_hash = store_mod.networks_hash(self.networks)
+        self.store: Optional[store_mod.DurableStore] = None
+        self._journal: Optional[store_mod.Journal] = None
+        if self.state_dir is not None:
+            self.store = store_mod.DurableStore(self.state_dir)
+            self._recover()
+
+    # -- durable state -----------------------------------------------------
+    def _journal_path(self) -> str:
+        return str(self.store.root / "journal.jsonl")
+
+    def _params_key(self) -> tuple:
+        """Service parameters every cached artifact depends on."""
+        return ("params", self.bound, self.pool_size, self.m_cores,
+                self.max_types, self.topk)
+
+    def _tier_hash(self, tier: str) -> str:
+        return self._grid_hash if tier == "exact" else self._sub_hash
+
+    def _stream_key(self, tier: str, metric: str) -> tuple:
+        return (self._tier_hash(tier), self._nets_hash, "stream", metric,
+                ("params", self.bound, self.topk))
+
+    def _answer_key(self, r: DSERequest, metric: str) -> tuple:
+        """Store key of one EXACT answer.  best_config answers do not
+        depend on the deadline; chip-family answers do (best_chip is
+        scored at it, pareto's slack front is widened by it)."""
+        dl = (float(r.deadline)
+              if r.kind in ("best_chip", "pareto") else None)
+        return (self._grid_hash, self._nets_hash, "answer", r.kind,
+                metric, r.network, dl, self._params_key())
+
+    def _expected_ckpt_hash(self, tier: str, fs) -> str:
+        """The ``stream_input_hash`` a live stream of ``tier`` at the
+        checkpoint's (metric, bound, topk) would carry — a checkpoint
+        matches iff its own hash equals this."""
+        _, grid, _ = self._tier(tier == "exact")
+        chunk = max(1, min(self.chunk_size, grid.n))
+        return energymodel.stream_input_hash(
+            grid, self.networks, kind=fs.kind, metric=fs.metric,
+            bound=fs.bound, topk=fs.topk, chunk=chunk)
+
+    def _recover(self) -> None:
+        """Restart path: replay the journal's unanswered requests in
+        admission order, garbage-collect stale checkpoint files, and
+        register live ones for resume — then reopen the journal for
+        append so recovered and new traffic share one log."""
+        rr = store_mod.Journal.replay(self._journal_path())
+        self._next_rid = max(self._next_rid, rr.next_rid)
+        pending = rr.pending
+        self._journal = store_mod.Journal(self._journal_path())
+        for rec in pending:
+            try:
+                self._queue.append(self._request_from_journal(rec))
+                self.stats["replayed"] += 1
+            except Exception:
+                self.stats["replay_dropped"] += 1
+        # checkpoint GC: a file is live iff its input hash matches what a
+        # stream of one of our tiers would compute right now
+        for path, fs in self.store.iter_ckpts():
+            tier = next((t for t in ("exact", "sub")
+                         if fs.input_hash == self._expected_ckpt_hash(
+                             t, fs)), None)
+            if tier is None:
+                self.store.drop_ckpt(fs.input_hash)
+                self.stats["ckpt_gc"] += 1
+            else:
+                self._ckpt[("stream", tier, fs.metric)] = fs
+
+    def _request_from_journal(self, rec: Mapping[str, Any]) -> DSERequest:
+        """Rebuild a journalled request; ``submitted_at`` is refreshed —
+        monotonic clocks do not survive the process they came from."""
+        sc = rec.get("scenario")
+        return DSERequest(
+            rid=int(rec["rid"]), kind=rec["kind"], metric=rec["metric"],
+            network=rec.get("network"),
+            deadline=float(rec.get("deadline", 2.0)),
+            deadline_s=rec.get("deadline_s"),
+            submitted_at=self._clock(),
+            chip_types=(None if rec.get("chip_types") is None
+                        else tuple(int(t) for t in rec["chip_types"])),
+            chip_counts=(None if rec.get("chip_counts") is None
+                         else tuple(int(c) for c in rec["chip_counts"])),
+            scenario=(None if sc is None
+                      else hw_faults.scenario_from_json(sc)))
+
+    def _journal_submit(self, r: DSERequest) -> None:
+        if self._journal is None:
+            return
+        self._journal.submit(r.rid, dict(
+            kind=r.kind, metric=r.metric, network=r.network,
+            deadline=r.deadline, deadline_s=r.deadline_s,
+            chip_types=(None if r.chip_types is None
+                        else list(r.chip_types)),
+            chip_counts=(None if r.chip_counts is None
+                         else list(r.chip_counts)),
+            scenario=(None if r.scenario is None
+                      else hw_faults.scenario_to_json(r.scenario))))
+
+    def _drop_ckpt(self, key: tuple) -> None:
+        """Forget a checkpoint in memory AND on disk."""
+        fs = self._ckpt.pop(key, None)
+        if fs is not None and self.store is not None:
+            self.store.drop_ckpt(fs.input_hash)
+
+    def close(self) -> None:
+        """Release the journal file handle (the store is handle-free)."""
+        if self._journal is not None:
+            self._journal.close()
+            self._journal = None
 
     # -- admission ---------------------------------------------------------
     @staticmethod
@@ -231,11 +378,15 @@ class DSEService:
                                 retry_after_s=self._drain_estimate())
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(DSERequest(
+        req = DSERequest(
             rid=rid, kind=kind, metric=metric, network=network,
             deadline=float(deadline), deadline_s=deadline_s,
             submitted_at=self._clock(), chip_types=chip_types,
-            chip_counts=chip_counts, scenario=scenario))
+            chip_counts=chip_counts, scenario=scenario)
+        # write-ahead: the fsync'd journal line lands BEFORE the request
+        # is queued, so a kill after this point still replays it
+        self._journal_submit(req)
+        self._queue.append(req)
         self.stats["accepted"] += 1
         return SubmitResult(accepted=True, rid=rid,
                             queue_depth=len(self._queue))
@@ -271,7 +422,7 @@ class DSEService:
             except energymodel.StreamStateError:
                 # stale checkpoint (inputs changed) — drop it, count the
                 # wasted attempt, start the stream over
-                self._ckpt.pop(key, None)
+                self._drop_ckpt(key)
                 attempt += 1
             except Exception as e:
                 self.stats["faults"] += 1
@@ -305,11 +456,28 @@ class DSEService:
         if ck in self._streams:
             self.stats["sweep_cache_hits"] += 1
             return self._streams[ck]
+        if self.store is not None:
+            got = self.store.get(self._stream_key(tier, metric))
+            if got is not None:
+                self.stats["store_hits"] += 1
+                self.stats["sweep_cache_hits"] += 1
+                st = store_mod.stream_from_payload(*got)
+                self._streams[ck] = st
+                return st
+            self.stats["store_misses"] += 1
         self.stats["sweep_cache_misses"] += 1
         key = ("stream", tier, metric)
 
         def on_chunk(fs):
             self._ckpt[key] = fs
+            # durable spill is throttled: an fsync'd npz per chunk would
+            # tax the stream ~2×; every `ckpt_every` chunks bounds the
+            # re-fold after a process kill at ckpt_every-1 chunks while
+            # keeping the tax small.  In-process retries still resume
+            # from the PER-CHUNK in-memory state above.
+            if (self.store is not None
+                    and fs.next_chunk % self.ckpt_every == 0):
+                self.store.save_ckpt(fs)
             if budget_end is not None and self._clock() > budget_end:
                 raise _BudgetExhausted(
                     f"stream {key} out of budget at chunk {fs.next_chunk}"
@@ -326,9 +494,18 @@ class DSEService:
             return st
 
         st = self._with_retries(run, key=key, budget_end=budget_end)
-        self._ckpt.pop(key, None)
+        self._drop_ckpt(key)
         self._streams[ck] = st
+        self._persist_stream(tier, metric, st)
         return st
+
+    def _persist_stream(self, tier: str, metric: str,
+                        st: energymodel.LayerTopK) -> None:
+        if self.store is None:
+            return
+        arrays, meta = store_mod.stream_payload(st)
+        self.store.put(self._stream_key(tier, metric),
+                       arrays=arrays, meta=meta)
 
     def _get_points(self, metric: str, *, exact: bool,
                     budget_end: Optional[float] = None) -> tuple:
@@ -362,6 +539,73 @@ class DSEService:
         out = self._with_retries(run, key=key, budget_end=budget_end)
         self._points[ck] = out
         return out
+
+    # -- incremental grid deltas -------------------------------------------
+    def extend_grid(self, new_rows: ConfigGrid) -> Dict[str, Any]:
+        """Append config rows to the design space WITHOUT re-streaming it.
+
+        Every completed streamed sweep folds just the appended rows via
+        :func:`repro.core.energymodel.merge_layer_topk` — bit-identical
+        to a from-scratch stream over the grown grid, because all
+        streamed reductions tie-break by (value, flat index).  The
+        subsampled tier keeps the same stride, and ``arange(0, n,
+        stride)`` is a prefix of ``arange(0, n + k, stride)``, so it
+        delta-folds too.  Only the store groups keyed on the two
+        superseded grid hashes are invalidated; solved chip points and
+        in-flight checkpoints are dropped (their inputs changed), and the
+        merged streams are re-persisted under the new hashes."""
+        if sorted(new_rows.fields) != sorted(self.grid.fields):
+            raise ValueError(
+                f"extend_grid: column mismatch — grid has "
+                f"{sorted(self.grid.fields)}, new rows have "
+                f"{sorted(new_rows.fields)}")
+        old_n = self.grid.n
+        old_sub_n = int(self._sub_idx.size)
+        old_hashes = (self._grid_hash, self._sub_hash)
+
+        new_grid = ConfigGrid.concat([self.grid, new_rows])
+        new_sub_idx = np.arange(0, new_grid.n, self._stride)
+        delta_sub = new_sub_idx[old_sub_n:] - old_n  # rows INTO new_rows
+
+        merged: Dict[Tuple[str, str], energymodel.LayerTopK] = {}
+        n_folds = 0
+        for (tier, metric), st in self._streams.items():
+            if tier == "exact":
+                drows = new_rows
+            elif delta_sub.size:
+                drows = new_rows.take(delta_sub)
+            else:                  # no new stride multiple: tier unchanged
+                merged[(tier, metric)] = st
+                continue
+            delta = energymodel.stream_layer_topk(
+                drows, self.networks, topk=self.topk, bound=self.bound,
+                metric=metric, chunk_size=self.chunk_size,
+                backend=self.backend)
+            merged[(tier, metric)] = energymodel.merge_layer_topk(
+                st, delta)
+            n_folds += 1
+
+        self.grid = new_grid
+        self._sub_idx = new_sub_idx
+        self._sub_grid = new_grid.take(new_sub_idx)
+        self._grid_hash = store_mod.grid_hash(self.grid)
+        self._sub_hash = store_mod.grid_hash(self._sub_grid)
+        self._streams = merged
+        self._points.clear()           # candidate pools may change
+        for key in list(self._ckpt):   # mid-stream state is now stale
+            self._drop_ckpt(key)
+        invalidated = 0
+        if self.store is not None:
+            for h in old_hashes:
+                invalidated += self.store.invalidate_group(h)
+            for (tier, metric), st in self._streams.items():
+                self._persist_stream(tier, metric, st)
+        self.stats["grid_extensions"] += 1
+        self.stats["delta_folds"] += n_folds
+        self.stats["cache_invalidated"] += invalidated
+        return dict(added=int(new_rows.n), n_cfg=int(self.grid.n),
+                    n_cfg_degraded=int(self._sub_grid.n),
+                    delta_folds=n_folds, invalidated=invalidated)
 
     def _record_cost(self, key: tuple, dt: float):
         prev = self._cost.get(key)
@@ -413,6 +657,23 @@ class DSEService:
         return out
 
     def _serve_batch(self, batch, metric, chip_family):
+        # persistent answer tier: a request whose EXACT answer is already
+        # in the store is served without touching a single sweep — the
+        # warm-restart path costs one npz read per query
+        served = []
+        if self.store is not None:
+            rest = []
+            for r in batch:
+                got = self.store.get(self._answer_key(r, metric))
+                if got is not None:
+                    self.stats["answer_hits"] += 1
+                    served.append(self._respond(r, ok=True, degraded=False,
+                                                answer=got[1]))
+                else:
+                    rest.append(r)
+            if not rest:
+                return served
+            batch = rest
         now = self._clock()
 
         def rem(r):
@@ -431,9 +692,9 @@ class DSEService:
                 self._ensure_tier(metric, chip_family, exact=False,
                                   budget_end=None)
             except ServiceFault as e:
-                return [self._respond(r, ok=False, degraded=True,
-                                      answer={}, error=str(e))
-                        for r in batch]
+                return served + [self._respond(r, ok=False, degraded=True,
+                                               answer={}, error=str(e))
+                                 for r in batch]
             proj = self._projected_exact_cost(metric, chip_family)
             exact_grp, degraded_grp = [], []
             for r in batch:
@@ -467,7 +728,7 @@ class DSEService:
                 out.extend(self._respond(r, ok=False, degraded=degraded,
                                          answer={}, error=str(e))
                            for r in grp)
-        return out
+        return served + out
 
     # -- hardware-fault re-scheduling --------------------------------------
     def fault_event(self, chip_types: Sequence[int],
@@ -650,10 +911,13 @@ class DSEService:
         _, _, idx_map = self._tier(tier_exact)
         if not chip_family:
             stream = self._get_stream(metric, exact=tier_exact)
-            return [self._respond(r, ok=True, degraded=degraded,
-                                  answer=self._config_answer(
-                                      r, stream, idx_map))
-                    for r in grp]
+            out = []
+            for r in grp:
+                ans = self._config_answer(r, stream, idx_map)
+                self._cache_answer(r, metric, ans, degraded=degraded)
+                out.append(self._respond(r, ok=True, degraded=degraded,
+                                         answer=ans))
+            return out
         probs, pts_e, pts_l, res = self._get_points(metric,
                                                     exact=tier_exact)
         deadlines = sorted({float(r.deadline) for r in grp})
@@ -666,13 +930,29 @@ class DSEService:
             if r.kind == "best_chip":
                 ans = self._chip_answer(par, probs, di, idx_map)
             else:
+                # the slack union is restricted to THIS request's deadline
+                # so the answer is independent of the coalesced batch's
+                # other deadlines — a precondition for caching it and for
+                # restart-replay bit-parity (the restarted batch is a
+                # subset of the original one)
                 ans = dict(network=r.network,
                            frontier=par.frontier(r.network),
-                           slack_frontier=par.slack_frontier(r.network),
+                           slack_frontier=par.slack_frontier(
+                               r.network, deadline_index=di),
                            pool=[int(idx_map[p]) for p in probs.pool])
+            self._cache_answer(r, metric, ans, degraded=degraded)
             out.append(self._respond(r, ok=True, degraded=degraded,
                                      answer=ans))
         return out
+
+    def _cache_answer(self, r, metric, ans, *, degraded):
+        """Persist one EXACT answer (degraded ones are budget artefacts,
+        not functions of the design space — never cached).  The JSON
+        round trip returns lists where the computed answer had tuples;
+        see the note in :mod:`repro.serving.store`."""
+        if self.store is None or degraded:
+            return
+        self.store.put(self._answer_key(r, metric), meta=ans)
 
     def _config_answer(self, r, stream, idx_map):
         def one(j):
@@ -715,9 +995,9 @@ class DSEService:
         self.stats["degraded"] += int(degraded and ok)
         self.stats["deadline_missed"] += int(missed)
         self.stats["errors"] += int(not ok)
-        self._lat.append(lat)
-        if len(self._lat) > 4096:
-            del self._lat[:2048]
+        self._lat.append(lat)          # deque(maxlen=) bounds the window
+        if self._journal is not None:
+            self._journal.done(r.rid)  # answered — replay skips this rid
         return DSEResponse(rid=r.rid, kind=r.kind, ok=ok,
                            degraded=degraded, deadline_missed=missed,
                            answer=answer, error=error, latency_s=lat,
@@ -756,4 +1036,7 @@ class DSEService:
             last_backend=energymodel.last_backend(),
             jit=energymodel.jit_cache_stats(),
             p50_s=pct(0.50), p99_s=pct(0.99), n_lat=len(lat),
+            lat_window=self.lat_window,
+            state_dir=self.state_dir,
+            store=None if self.store is None else self.store.health(),
             **self.stats)

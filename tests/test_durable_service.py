@@ -1,0 +1,274 @@
+"""Durable `DSEService` (state_dir=): process-kill at EVERY chunk of the
+seeded mix must restart-replay to answers bit-identical to the clean run
+with zero duplicate responses (`FaultPlan.pkill_at` raising `ProcessKill`
+— a BaseException the retry ladder cannot swallow); a second restart
+replays nothing; a warm re-launch answers from the persistent store
+without recomputing a single sweep; stale checkpoints garbage-collect on
+startup while live ones register for resume; the latency window stays
+bounded.  `REPRO_CHAOS_SEEDS` / `REPRO_CHAOS_STATE_DIR` mirror the CI
+chaos job (artifact-able state dirs on failure)."""
+
+import os
+import re
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.accelerator import ConfigGrid
+from repro.ft import hw_faults
+from repro.ft.faults import FaultPlan, ProcessKill, inject_chunk_faults
+from repro.serving.dse_service import DSEService
+from repro.serving.store import Journal
+
+NETS = ("AlexNet", "MobileNet")
+SEEDS = [int(s) for s in
+         os.environ.get("REPRO_CHAOS_SEEDS", "0,1,2").split(",")]
+CHUNK = 5          # 18-row grid -> 4 exact chunks (5+5+5+3), 1 sub chunk
+N_KILL_POINTS = 4
+
+
+@pytest.fixture(scope="module")
+def networks():
+    return {n: topology.get_network(n) for n in NETS}
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return ConfigGrid.product(arrays=((16, 16), (32, 32), (64, 64)),
+                              gb_psum_kb=(13, 54, 216),
+                              gb_ifmap_kb=(27, 108))
+
+
+@pytest.fixture
+def state_root(tmp_path, request):
+    """Per-test state root; under REPRO_CHAOS_STATE_DIR when set so a CI
+    failure uploads the journal + quarantine evidence as an artifact."""
+    base = os.environ.get("REPRO_CHAOS_STATE_DIR")
+    if not base:
+        return tmp_path
+    d = Path(base) / re.sub(r"[^\w.-]+", "_", request.node.name)
+    d.mkdir(parents=True, exist_ok=True)
+    return d
+
+
+def _mk(grid, networks, state_dir, **kw):
+    kw.setdefault("chunk_size", CHUNK)
+    kw.setdefault("degrade_stride", 8)
+    kw.setdefault("ckpt_every", 1)     # spill every chunk: worst-case tax,
+    return DSEService(grid, networks,   # best-case restart resume coverage
+                      state_dir=state_dir, **kw)
+
+
+def _mix(seed, n=6):
+    kinds = ("best_config", "best_chip", "pareto")
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        kind = kinds[int(rng.integers(len(kinds)))]
+        out.append(dict(
+            kind=kind, metric=("edp", "energy")[int(rng.integers(2))],
+            network=(None if kind == "best_config"
+                     else NETS[int(rng.integers(len(NETS)))]),
+            deadline=float(rng.choice([1.5, 2.0, 3.0]))))
+    return out
+
+
+def _submit(svc, mix):
+    for q in mix:
+        assert svc.submit(q["kind"], network=q["network"],
+                          metric=q["metric"], deadline=q["deadline"]).accepted
+
+
+def _eq(a, b):
+    """Structural equality with tuple == list (the JSON note in
+    repro.serving.store) and NaN == NaN."""
+    if isinstance(a, (list, tuple)) and isinstance(b, (list, tuple)):
+        return len(a) == len(b) and all(_eq(x, y) for x, y in zip(a, b))
+    if isinstance(a, dict) and isinstance(b, dict):
+        return a.keys() == b.keys() and all(_eq(a[k], b[k]) for k in a)
+    if isinstance(a, float) and isinstance(b, float):
+        return a == b or (np.isnan(a) and np.isnan(b))
+    return type(a) is type(b) and a == b
+
+
+# -- kill-restart parity matrix --------------------------------------------
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_kill_restart_parity_every_chunk(grid, networks, state_root, seed):
+    mix = _mix(seed)
+    clean = _mk(grid, networks, state_root / "clean")
+    _submit(clean, mix)
+    clean_out, drained = clean.run_until_drained()
+    clean.close()
+    assert drained and all(r.ok and not r.degraded for r in clean_out)
+    by_rid = {r.rid: r for r in clean_out}
+
+    for kill in range(N_KILL_POINTS):
+        sd = state_root / f"kill{kill}"
+        s1 = _mk(grid, networks, sd)
+        _submit(s1, mix)
+        with inject_chunk_faults(FaultPlan(pkill_at=kill)) as plan:
+            with pytest.raises(ProcessKill):
+                s1.run_until_drained()
+        assert (kill, "pkill") in plan.fired
+        killed_out = list(s1.responses)     # s1 is now a dead process
+
+        s2 = _mk(grid, networks, sd)        # restart over the same dir
+        assert s2.stats["replayed"] == len(mix) - len(killed_out)
+        restart_out, drained = s2.run_until_drained()
+        s2.close()
+        assert drained
+
+        rids = [r.rid for r in killed_out + restart_out]
+        assert len(rids) == len(set(rids)) == len(mix)   # exactly-once
+        for r in killed_out + restart_out:
+            ref = by_rid[r.rid]
+            assert (r.kind, r.ok, r.degraded) == (
+                ref.kind, ref.ok, ref.degraded)
+            assert _eq(r.answer, ref.answer), (
+                f"kill={kill} rid={r.rid}: {r.answer!r} != {ref.answer!r}")
+
+
+def test_second_restart_replays_nothing(grid, networks, state_root):
+    svc = _mk(grid, networks, state_root)
+    _submit(svc, _mix(0))
+    svc.run_until_drained()
+    svc.close()
+    s2 = _mk(grid, networks, state_root)
+    assert s2.stats["replayed"] == 0
+    assert s2.health()["queue_depth"] == 0
+    s2.close()
+
+
+def test_reschedule_request_survives_restart(grid, networks, state_root):
+    scen = hw_faults.all_single_core_failures((2, 2))[0]
+    svc = _mk(grid, networks, state_root)
+    svc.submit("reschedule", chip_types=(0, 1), chip_counts=(2, 2),
+               scenario=scen)
+    # killed before any step: the journal is the only trace
+    s2 = _mk(grid, networks, state_root)
+    assert s2.stats["replayed"] == 1
+    (r,), drained = s2.run_until_drained()
+    s2.close()
+    assert drained and r.ok and r.kind == "reschedule"
+    assert r.answer["scenario"] == scen.name
+    # the replayed request round-tripped its scenario through JSON
+    ref = _mk(grid, networks, state_root / "ref")
+    ref.submit("reschedule", chip_types=(0, 1), chip_counts=(2, 2),
+               scenario=scen)
+    (rr,), _ = ref.run_until_drained()
+    ref.close()
+    assert _eq(r.answer, rr.answer)
+
+
+# -- warm restart ----------------------------------------------------------
+
+
+def test_warm_restart_answers_from_store(grid, networks, state_root):
+    mix = _mix(1)
+    s1 = _mk(grid, networks, state_root)
+    _submit(s1, mix)
+    first, _ = s1.run_until_drained()
+    s1.close()
+
+    s2 = _mk(grid, networks, state_root)
+    _submit(s2, mix)
+    warm, drained = s2.run_until_drained()
+    assert drained and len(warm) == len(mix)
+    h = s2.health()
+    s2.close()
+    assert h["answer_hits"] == len(mix)      # every query: one npz read
+    assert h["sweep_cache_misses"] == 0      # not a single sweep re-run
+    assert h["store"]["n_quarantined_files"] == 0
+    # same submission order -> same answers (modulo the JSON tuple note)
+    for r, ref in zip(sorted(warm, key=lambda r: r.rid),
+                      sorted(first, key=lambda r: r.rid)):
+        assert _eq(r.answer, ref.answer)
+
+
+def test_warm_restart_streams_from_store_on_new_queries(grid, networks,
+                                                        state_root):
+    s1 = _mk(grid, networks, state_root)
+    s1.submit("best_config")
+    s1.run_until_drained()
+    s1.close()
+    s2 = _mk(grid, networks, state_root)
+    s2.submit("best_config", network="AlexNet")  # different query,
+    (r,), _ = s2.run_until_drained()             # same streams
+    h = s2.health()
+    s2.close()
+    assert r.ok and h["answer_hits"] == 0
+    assert h["store_hits"] == 2                  # exact + sub tiers
+    assert h["sweep_cache_misses"] == 0
+
+
+# -- checkpoint GC / registration ------------------------------------------
+
+
+def _kill_mid_stream(grid, networks, sd, *, kill=2):
+    svc = _mk(grid, networks, sd)
+    svc.submit("best_config")
+    with inject_chunk_faults(FaultPlan(pkill_at=kill)):
+        with pytest.raises(ProcessKill):
+            svc.run_until_drained()
+
+
+def test_live_checkpoint_registers_for_resume(grid, networks, state_root):
+    _kill_mid_stream(grid, networks, state_root)
+    s2 = _mk(grid, networks, state_root)
+    assert s2.health()["checkpoints"] >= 1       # registered, not GC'd
+    assert s2.stats["ckpt_gc"] == 0
+    (r,), drained = s2.run_until_drained()
+    assert drained and r.ok
+    assert s2.stats["resumes"] >= 1              # folded from the spill
+    s2.close()
+
+
+def test_stale_checkpoint_gcs_on_startup(grid, networks, state_root):
+    _kill_mid_stream(grid, networks, state_root)
+    other = grid.take(np.arange(12))             # the design space moved on
+    s2 = _mk(other, networks, state_root)
+    h = s2.health()
+    s2.close()
+    assert h["ckpt_gc"] >= 1 and h["checkpoints"] == 0
+    assert h["store"]["n_ckpt_files"] == 0
+
+
+# -- admission / journal discipline ----------------------------------------
+
+
+def test_rejected_requests_never_journalled(grid, networks, state_root):
+    svc = _mk(grid, networks, state_root, max_queue=1)
+    assert svc.submit("best_config").accepted
+    assert not svc.submit("best_config", network="AlexNet").accepted
+    rr = Journal.replay(svc._journal_path())
+    svc.close()
+    assert len(rr.pending) == 1                  # overflow left no trace
+
+
+def test_rids_continue_across_restarts(grid, networks, state_root):
+    s1 = _mk(grid, networks, state_root)
+    _submit(s1, _mix(2, n=3))
+    s1.run_until_drained()
+    s1.close()
+    s2 = _mk(grid, networks, state_root)
+    sub = s2.submit("best_config")
+    s2.close()
+    assert sub.rid == 3                          # fresh, never reused
+
+
+# -- bounded latency window ------------------------------------------------
+
+
+def test_latency_window_is_bounded(grid, networks):
+    svc = DSEService(grid, networks, chunk_size=CHUNK, lat_window=4)
+    for _ in range(9):
+        svc.submit("best_config")
+    out, drained = svc.run_until_drained()
+    assert drained and len(out) == 9
+    h = svc.health()
+    assert h["n_lat"] == 4 and h["lat_window"] == 4
+    assert len(svc._lat) == 4

@@ -1,0 +1,201 @@
+"""`DSEService.extend_grid`: folding ONLY the appended config rows into
+every completed stream via `repro.core.energymodel.merge_layer_topk` must
+be bit-identical to re-streaming the grown grid from scratch — both tiers,
+including the case where the append lands a NEW subsampled-tier stride
+multiple and the case where it lands none — and the durable store must
+invalidate exactly the superseded grid-hash groups while re-persisting the
+merged streams under the new hashes."""
+
+import numpy as np
+import pytest
+
+from repro.core import energymodel, topology
+from repro.core.accelerator import ConfigGrid
+from repro.serving import store as store_mod
+from repro.serving.dse_service import DSEService
+
+NETS = ("AlexNet", "MobileNet")
+CHUNK = 5
+STRIDE = 8
+
+
+@pytest.fixture(scope="module")
+def networks():
+    return {n: topology.get_network(n) for n in NETS}
+
+
+@pytest.fixture(scope="module")
+def big_grid():
+    # 27 rows; rows [0:18) seed the service, the tail arrives later
+    return ConfigGrid.product(arrays=((16, 16), (32, 32), (64, 64)),
+                              gb_psum_kb=(13, 54, 216),
+                              gb_ifmap_kb=(27, 108, 216))
+
+
+def _split(big, n_base):
+    return (big.take(np.arange(n_base)),
+            big.take(np.arange(n_base, big.n)))
+
+
+def _assert_same(res, ref, networks):
+    for k in store_mod._STREAM_ARRAYS:
+        np.testing.assert_array_equal(np.asarray(getattr(res, k)),
+                                      np.asarray(getattr(ref, k)),
+                                      err_msg=k)
+    assert res.n_cfg == ref.n_cfg
+    for nm in networks:
+        np.testing.assert_array_equal(res.boundary_idx[nm],
+                                      ref.boundary_idx[nm])
+        np.testing.assert_array_equal(res.boundary_energy[nm],
+                                      ref.boundary_energy[nm])
+        np.testing.assert_array_equal(res.boundary_latency[nm],
+                                      ref.boundary_latency[nm])
+
+
+def _warm_service(base, networks, **kw):
+    svc = DSEService(base, networks, chunk_size=CHUNK,
+                     degrade_stride=STRIDE, **kw)
+    svc.submit("best_config")                 # warms exact + sub streams
+    svc.submit("best_chip", deadline=2.0)     # and the solved chip points
+    out, drained = svc.run_until_drained()
+    assert drained and all(r.ok for r in out)
+    return svc
+
+
+@pytest.mark.parametrize("metric", ["edp", "energy"])
+def test_delta_fold_bit_exact_vs_full_restream(big_grid, networks, metric):
+    """18 -> 27 rows: row 24 is a NEW stride-8 multiple, so BOTH tiers
+    must delta-fold and match a from-scratch stream of the grown grid."""
+    base, new_rows = _split(big_grid, 18)
+    svc = DSEService(base, networks, chunk_size=CHUNK,
+                     degrade_stride=STRIDE)
+    svc.submit("best_config", metric=metric)
+    svc.run_until_drained()
+    summary = svc.extend_grid(new_rows)
+    assert summary["added"] == 9 and summary["n_cfg"] == 27
+    assert summary["n_cfg_degraded"] == 4     # 0, 8, 16, 24
+    assert summary["delta_folds"] == 2        # exact AND sub folded
+
+    for tier, rows in (("exact", np.arange(27)),
+                       ("sub", np.arange(0, 27, STRIDE))):
+        ref = energymodel.stream_layer_topk(
+            big_grid.take(rows), networks, topk=svc.topk, bound=svc.bound,
+            metric=metric, chunk_size=CHUNK)
+        _assert_same(svc._streams[(tier, metric)], ref, NETS)
+
+
+def test_extend_without_new_stride_multiple(big_grid, networks):
+    """18 -> 22 rows: arange(0, 22, 8) == arange(0, 18, 8), so the sub
+    tier is reused untouched while the exact tier folds the delta."""
+    base, tail = _split(big_grid, 18)
+    new_rows = tail.take(np.arange(4))
+    svc = DSEService(base, networks, chunk_size=CHUNK,
+                     degrade_stride=STRIDE)
+    svc.submit("best_config")
+    svc.run_until_drained()
+    sub_before = svc._streams[("sub", "edp")]
+    summary = svc.extend_grid(new_rows)
+    assert summary["delta_folds"] == 1        # exact only
+    assert summary["n_cfg_degraded"] == 3
+    assert svc._streams[("sub", "edp")] is sub_before
+    ref = energymodel.stream_layer_topk(
+        big_grid.take(np.arange(22)), networks, topk=svc.topk,
+        bound=svc.bound, metric="edp", chunk_size=CHUNK)
+    _assert_same(svc._streams[("exact", "edp")], ref, NETS)
+
+
+def test_answers_after_extend_match_fresh_service(big_grid, networks):
+    base, new_rows = _split(big_grid, 18)
+    svc = _warm_service(base, networks)
+    svc.extend_grid(new_rows)
+    for q in (dict(kind="best_config", network=None, deadline=2.0),
+              dict(kind="best_chip", network=None, deadline=2.0),
+              dict(kind="pareto", network="AlexNet", deadline=2.0)):
+        svc.submit(q["kind"], network=q["network"], deadline=q["deadline"])
+    grown, drained = svc.run_until_drained()
+    assert drained
+
+    fresh = DSEService(big_grid, networks, chunk_size=CHUNK,
+                       degrade_stride=STRIDE)
+    for r in grown:
+        fresh.submit(r.kind, network=r.answer.get("network")
+                     if r.kind == "pareto" else None, deadline=2.0)
+    ref, _ = fresh.run_until_drained()
+    for a, b in zip(grown, ref):
+        assert a.kind == b.kind
+        assert a.answer == b.answer           # same types: both computed
+
+
+def test_store_invalidation_and_repersist(big_grid, networks, tmp_path):
+    base, new_rows = _split(big_grid, 18)
+    svc = _warm_service(base, networks, state_dir=tmp_path)
+    old_stream_key = svc._stream_key("exact", "edp")
+    assert svc.store.get(old_stream_key) is not None
+
+    summary = svc.extend_grid(new_rows)
+    # old grid-hash groups (streams AND answers) are gone...
+    assert summary["invalidated"] >= 2        # >= exact stream + answers
+    assert svc.stats["cache_invalidated"] == summary["invalidated"]
+    assert svc.store.get(old_stream_key) is None
+    assert svc.store.stats["quarantined"] == 0
+    # ...and the merged streams re-persisted under the NEW hashes
+    for tier in ("exact", "sub"):
+        assert svc.store.get(svc._stream_key(tier, "edp")) is not None
+    svc.close()
+
+    # a restart over the same dir with the grown grid streams from disk
+    s2 = DSEService(big_grid, networks, chunk_size=CHUNK,
+                    degrade_stride=STRIDE, state_dir=tmp_path)
+    s2.submit("best_config")
+    (r,), _ = s2.run_until_drained()
+    h = s2.health()
+    s2.close()
+    assert r.ok and h["sweep_cache_misses"] == 0 and h["store_hits"] >= 2
+    ref = energymodel.stream_layer_topk(
+        big_grid, networks, topk=s2.topk, bound=s2.bound,
+        metric="edp", chunk_size=CHUNK)
+    for nm in NETS:
+        j = list(NETS).index(nm)
+        assert r.answer[nm]["idx"] == int(ref.argmin[j])
+        assert r.answer[nm]["metric"] == float(ref.min_metric[j])
+
+
+def test_extend_rejects_column_mismatch(big_grid, networks):
+    base, new_rows = _split(big_grid, 18)
+    svc = DSEService(base, networks, chunk_size=CHUNK)
+    bad = object.__new__(ConfigGrid)          # skip validation on purpose
+    object.__setattr__(bad, "fields",
+                       {k: v for k, v in new_rows.fields.items()
+                        if k != "gb_psum_kb"})
+    with pytest.raises(ValueError, match="column mismatch"):
+        svc.extend_grid(bad)
+
+
+def test_extend_drops_stale_checkpoints(big_grid, networks, tmp_path):
+    """A mid-stream checkpoint's input hash references the OLD grid; the
+    extension must drop it (memory and disk), not resume from it."""
+    from repro.ft.faults import FaultPlan, ProcessKill, inject_chunk_faults
+    base, new_rows = _split(big_grid, 18)
+    svc = DSEService(base, networks, chunk_size=CHUNK,
+                     degrade_stride=STRIDE, state_dir=tmp_path,
+                     ckpt_every=1)
+    svc.submit("best_config")
+    with inject_chunk_faults(FaultPlan(pkill_at=2)):
+        with pytest.raises(ProcessKill):
+            svc.run_until_drained()
+    s2 = DSEService(base, networks, chunk_size=CHUNK,
+                    degrade_stride=STRIDE, state_dir=tmp_path,
+                    ckpt_every=1)
+    assert s2.health()["checkpoints"] >= 1
+    s2.extend_grid(new_rows)
+    h = s2.health()
+    assert h["checkpoints"] == 0 and h["store"]["n_ckpt_files"] == 0
+    out, drained = s2.run_until_drained()     # the replayed query, fresh
+    s2.close()
+    assert drained and all(r.ok for r in out)
+    ref = energymodel.stream_layer_topk(
+        big_grid, networks, topk=s2.topk, bound=s2.bound,
+        metric="edp", chunk_size=CHUNK)
+    for r in out:
+        for j, nm in enumerate(NETS):
+            assert r.answer[nm]["idx"] == int(ref.argmin[j])

@@ -95,3 +95,52 @@ def test_unknown_network_errors(tiny_grid):
     with pytest.raises(KeyError):
         serve_dse.main(["--requests", "1", "--networks", "NoSuchNet"],
                        grid=tiny_grid)
+
+
+def test_state_dir_replays_unanswered_requests(tiny_grid, tmp_path, capsys):
+    """A killed earlier launch left an accepted-but-unanswered request in
+    the journal; the next launch replays and answers it FIRST."""
+    from repro.core import topology
+    from repro.serving.dse_service import DSEService
+    nets = {n: topology.get_network(n) for n in ("AlexNet", "MobileNet")}
+    dead = DSEService(tiny_grid, nets, chunk_size=5,
+                      state_dir=tmp_path)
+    dead.submit("pareto", network="AlexNet", deadline=2.0)
+    # no drain, no close: the process died here
+
+    clk = FakeClock()
+    responses = serve_dse.main(
+        ["--requests", "2", "--networks", "AlexNet", "MobileNet",
+         "--chunk-size", "5", "--state-dir", str(tmp_path)],
+        clock=clk, sleep=clk.sleep, grid=tiny_grid)
+    out = capsys.readouterr().out
+    assert "replayed 1 unanswered requests" in out
+    assert len(responses) == 3                       # 1 replayed + 2 new
+    assert responses[0].kind == "pareto"             # replayed drains first
+    assert all(r.ok for r in responses)
+    h = _health_json(out)
+    assert h["replayed"] == 1 and h["errors"] == 0
+
+
+def test_install_graceful_drains_and_exits_zero(tiny_grid, tmp_path):
+    """The handler closes admission, drains, closes the journal, and
+    exits 0 — invoked directly, no real signal needed."""
+    from repro.core import topology
+    from repro.serving.dse_service import DSEService
+    nets = {n: topology.get_network(n) for n in ("AlexNet", "MobileNet")}
+    svc = DSEService(tiny_grid, nets, chunk_size=5, state_dir=tmp_path)
+    svc.submit("best_config")
+    svc.submit("best_chip", deadline=2.0)
+    handler = serve_dse.install_graceful(svc, signals=())
+    with pytest.raises(SystemExit) as ei:
+        handler(None, None)
+    assert ei.value.code == 0
+    assert svc.health()["queue_depth"] == 0          # drained, not dropped
+    assert len(svc.responses) == 2
+    assert all(r.ok for r in svc.responses)
+    assert svc._journal is None                      # journal closed
+    assert not svc.submit("best_config").accepted    # admission stays shut
+    # nothing left to replay: the drain answered everything it accepted
+    s2 = DSEService(tiny_grid, nets, chunk_size=5, state_dir=tmp_path)
+    assert s2.stats["replayed"] == 0
+    s2.close()

@@ -1,0 +1,236 @@
+"""`repro.serving.store` durability: content-addressed entry round trips,
+every corruption mode quarantining (truncated npz, flipped checksum byte,
+wrong schema version, key collision, torn concurrent write) instead of
+crashing or serving garbage, group invalidation, the fsync'd write-ahead
+journal's exactly-once replay (torn final line dropped), and the
+bit-identical LayerTopK <-> payload round trip."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import energymodel, topology
+from repro.core.accelerator import ConfigGrid
+from repro.serving import store as store_mod
+from repro.serving.store import DurableStore, Journal
+
+KEY = ("g0", "nets", "answer", "best_config", "edp")
+KEY2 = ("g0", "nets", "stream", "edp")
+OTHER_GROUP = ("g1", "nets", "answer", "best_config", "edp")
+
+
+def _put_one(st, key=KEY):
+    return st.put(key, arrays={"x": np.arange(6.0).reshape(2, 3)},
+                  meta={"answer": [1, 2.5, "s"], "ok": True})
+
+
+# -- entries ---------------------------------------------------------------
+
+
+def test_round_trip_and_stats(tmp_path):
+    st = DurableStore(tmp_path)
+    _put_one(st)
+    assert st.get(("g0", "missing")) is None          # miss
+    arrays, meta = st.get(KEY)                        # hit
+    np.testing.assert_array_equal(arrays["x"],
+                                  np.arange(6.0).reshape(2, 3))
+    assert meta == {"answer": [1, 2.5, "s"], "ok": True}
+    h = st.health()
+    assert h["puts"] == 1 and h["hits"] == 1 and h["misses"] == 1
+    assert h["n_entries"] == 1 and h["n_quarantined_files"] == 0
+
+
+def test_reopen_sees_entries(tmp_path):
+    _put_one(DurableStore(tmp_path))
+    st2 = DurableStore(tmp_path)                      # fresh handle
+    arrays, _ = st2.get(KEY)
+    np.testing.assert_array_equal(arrays["x"],
+                                  np.arange(6.0).reshape(2, 3))
+
+
+def _assert_quarantined(st, key, *, reason_contains=None):
+    """The damaged entry must fall through to a miss, move aside with a
+    .reason file, and never resurface on the next read."""
+    assert st.get(key) is None
+    assert st.stats["quarantined"] == 1
+    assert st.health()["n_quarantined_files"] == 1
+    assert not st._path(key).exists()                 # moved, not left
+    reasons = list(st.quarantine.glob("*.reason"))
+    assert len(reasons) == 1
+    if reason_contains is not None:
+        assert reason_contains in reasons[0].read_text()
+    assert st.get(key) is None                        # clean miss now
+    assert st.stats["quarantined"] == 1               # no double count
+
+
+def test_truncated_npz_quarantines(tmp_path):
+    st = DurableStore(tmp_path)
+    path = _put_one(st)
+    data = path.read_bytes()
+    path.write_bytes(data[:len(data) // 2])           # crash mid-write
+    _assert_quarantined(st, KEY)
+
+
+def test_flipped_checksum_byte_quarantines(tmp_path):
+    """Flip one array byte but keep the npz container valid: only the
+    store's own checksum can catch this."""
+    st = DurableStore(tmp_path)
+    path = _put_one(st)
+    with np.load(path, allow_pickle=False) as z:
+        payload = {k: z[k] for k in z.files}
+    x = np.array(payload["a_x"], copy=True)
+    x.reshape(-1)[0] += 1.0                           # silent bit damage
+    payload["a_x"] = x
+    with open(path, "wb") as f:                       # rewrite, valid zip
+        np.savez(f, **payload)
+    _assert_quarantined(st, KEY, reason_contains="checksum")
+
+
+def test_wrong_schema_version_quarantines(tmp_path):
+    writer = DurableStore(tmp_path, schema=999)       # a future layout
+    _put_one(writer)
+    st = DurableStore(tmp_path)                       # current reader
+    _assert_quarantined(st, KEY, reason_contains="schema")
+
+
+def test_key_collision_quarantines(tmp_path):
+    """An entry renamed onto another key's path (hash collision or
+    tampering) fails the stored-key check."""
+    st = DurableStore(tmp_path)
+    path = _put_one(st)
+    os.replace(path, st._path(KEY2))
+    _assert_quarantined(st, KEY2, reason_contains="key mismatch")
+
+
+def test_torn_concurrent_replace_quarantines(tmp_path):
+    """A concurrent writer died between opening the temp file and the
+    os.replace: the reader finds garbage bytes at the entry path."""
+    st = DurableStore(tmp_path)
+    path = st._path(KEY)
+    path.write_bytes(b"PK\x03\x04 torn half-write, not a real zip")
+    _assert_quarantined(st, KEY)
+
+
+def test_overwrite_is_atomic_and_last_wins(tmp_path):
+    st = DurableStore(tmp_path)
+    st.put(KEY, meta={"v": 1})
+    st.put(KEY, meta={"v": 2})
+    _, meta = st.get(KEY)
+    assert meta == {"v": 2}
+    assert st.health()["n_entries"] == 1
+    assert not list(st.entries.glob("*.tmp"))         # no temp droppings
+
+
+def test_invalidate_group_spares_other_groups(tmp_path):
+    st = DurableStore(tmp_path)
+    _put_one(st, KEY)
+    _put_one(st, KEY2)
+    _put_one(st, OTHER_GROUP)
+    assert st.invalidate_group("g0") == 2
+    assert st.get(KEY) is None and st.get(KEY2) is None
+    assert st.get(OTHER_GROUP) is not None            # untouched
+    assert st.stats["invalidated"] == 2
+
+
+# -- write-ahead journal ---------------------------------------------------
+
+
+def test_journal_replay_exactly_once_with_torn_tail(tmp_path):
+    p = tmp_path / "journal.jsonl"
+    j = Journal(p)
+    j.submit(0, dict(kind="best_config", metric="edp"))
+    j.submit(1, dict(kind="pareto", metric="edp", network="AlexNet"))
+    j.done(0)
+    j.submit(2, dict(kind="best_chip", metric="edp"))
+    j.close()
+    with open(p, "a") as f:                           # crash mid-append
+        f.write('{"op": "submit", "rid": 3, "kin')
+    rr = Journal.replay(p)
+    assert [r["rid"] for r in rr.pending] == [1, 2]   # admission order
+    assert rr.pending[0]["network"] == "AlexNet"
+    assert rr.next_rid == 3                           # rid 3 never acked
+    assert rr.n_done == 1 and rr.n_torn == 1
+
+
+def test_journal_reopen_extends_one_log(tmp_path):
+    p = tmp_path / "journal.jsonl"
+    j = Journal(p)
+    j.submit(0, dict(kind="best_config", metric="edp"))
+    j.close()
+    j2 = Journal(p)                                   # restart appends
+    j2.done(0)
+    j2.submit(1, dict(kind="best_config", metric="edp"))
+    j2.close()
+    rr = Journal.replay(p)
+    assert [r["rid"] for r in rr.pending] == [1]
+    assert rr.n_done == 1 and rr.next_rid == 2
+
+
+def test_journal_replay_missing_file_is_empty(tmp_path):
+    rr = Journal.replay(tmp_path / "nope.jsonl")
+    assert rr.pending == [] and rr.next_rid == 0
+    assert rr.n_done == 0 and rr.n_torn == 0
+
+
+def test_journal_unknown_op_counts_torn(tmp_path):
+    p = tmp_path / "journal.jsonl"
+    p.write_text(json.dumps({"op": "frobnicate", "rid": 0}) + "\n")
+    assert Journal.replay(p).n_torn == 1
+
+
+# -- stream payload round trip + checkpoints -------------------------------
+
+
+@pytest.fixture(scope="module")
+def stream():
+    grid = ConfigGrid.product(arrays=((16, 16), (32, 32)),
+                              gb_psum_kb=(13, 54),
+                              gb_ifmap_kb=(27,))
+    nets = {n: topology.get_network(n) for n in ("AlexNet", "MobileNet")}
+    return energymodel.stream_layer_topk(grid, nets, topk=4, bound=0.05,
+                                         chunk_size=3)
+
+
+def test_stream_payload_round_trip_bit_identical(stream, tmp_path):
+    st = DurableStore(tmp_path)
+    st.put(KEY2, arrays=store_mod.stream_payload(stream)[0],
+           meta=store_mod.stream_payload(stream)[1])
+    arrays, meta = st.get(KEY2)
+    back = store_mod.stream_from_payload(arrays, meta)
+    assert back.networks == stream.networks
+    assert back.n_cfg == stream.n_cfg
+    assert back.metric == stream.metric and back.bound == stream.bound
+    for k in store_mod._STREAM_ARRAYS:
+        np.testing.assert_array_equal(getattr(back, k), getattr(stream, k))
+    for nm in stream.networks:
+        np.testing.assert_array_equal(back.boundary_idx[nm],
+                                      stream.boundary_idx[nm])
+        np.testing.assert_array_equal(back.boundary_energy[nm],
+                                      stream.boundary_energy[nm])
+        np.testing.assert_array_equal(back.boundary_latency[nm],
+                                      stream.boundary_latency[nm])
+
+
+def test_ckpt_save_iter_drop_and_quarantine(tmp_path):
+    grid = ConfigGrid.product(arrays=((16, 16), (32, 32)),
+                              gb_psum_kb=(13, 54),
+                              gb_ifmap_kb=(27,))
+    nets = {"AlexNet": topology.get_network("AlexNet")}
+    states = []
+    energymodel.stream_layer_topk(grid, nets, topk=4, bound=0.05,
+                                  chunk_size=2, on_chunk=states.append)
+    st = DurableStore(tmp_path)
+    fs = states[0]
+    st.save_ckpt(fs)
+    (tmp_path / "ckpt" / "ckpt_deadbeef.npz").write_bytes(b"not an npz")
+    loaded = list(st.iter_ckpts())                    # bad one quarantines
+    assert len(loaded) == 1
+    assert loaded[0][1].input_hash == fs.input_hash
+    assert st.stats["quarantined"] == 1
+    assert st.drop_ckpt(fs.input_hash)
+    assert not st.drop_ckpt(fs.input_hash)            # already gone
+    h = st.health()
+    assert h["ckpt_saved"] == 1 and h["ckpt_deleted"] == 1
+    assert h["n_ckpt_files"] == 0
