@@ -23,7 +23,16 @@ proves functionally (tests/test_faults.py, tests/test_stream_resume.py):
   (replayed answers bit-identical to the uninterrupted run, tuples and
   JSON-round-tripped lists compared as equal) with zero duplicate rids,
   and a third warm launch over the same state answers the whole mix from
-  the persistent store — ``warm_hit_ratio`` floor-checked ≥ 0.8.
+  the persistent store — ``warm_hit_ratio`` floor-checked ≥ 0.8;
+* ``verify`` (schema 3) — the silent-corruption defense of
+  :mod:`repro.ft.verify`: a seeded finite-corruption matrix
+  (chaos seeds × both tensors × first/middle/last chunk, each scaling
+  ONE streamed element by 1e-3) run under full shadow sampling —
+  ``detection_rate`` MUST be 1.0 and every resume-retry past the
+  poisoned chunk must reproduce the clean answers bit-identically
+  (``recompute_parity``/``max_rel_err_verify``); plus the verification
+  tax at the DEFAULT 1/16 sampling, ``overhead`` = verified stream time
+  / unverified − 1, floor-checked ≤ 10% on full runs.
 
 ``benchmarks/check_floors.py`` asserts the guardrails in
 ``benchmarks/floors.json`` (``serve`` section; ``*_max`` keys are
@@ -44,6 +53,7 @@ import numpy as np
 from repro.core import energymodel, topology
 from repro.core.accelerator import ConfigGrid, extended_grid
 from repro.ft.faults import FaultPlan, ProcessKill, inject_chunk_faults
+from repro.ft.verify import ShadowMismatchError, StreamVerifier
 from repro.serving.dse_service import DSEService
 
 BENCH_SERVE_JSON = Path("BENCH_serve.json")
@@ -253,6 +263,84 @@ def _restart_metrics(grid, networks, *, n_queries: int,
         warm_restart_speedup=t_clean / max(t_warm, 1e-9))
 
 
+def _verify_metrics(grid, networks, *, chunk_size: int) -> dict:
+    """Silent-corruption defense: seeded finite-perturbation matrix at
+    full shadow sampling (detection_rate MUST be 1.0, resume-retries
+    bit-identical to the clean run) + the verification tax at the
+    default 1/16 sampling (both sides on the numpy fold path, so the
+    ratio isolates the checks, not backend dispatch)."""
+    kw = dict(topk=8, bound=0.05, chunk_size=chunk_size, backend="numpy")
+    n_chunks = -(-grid.n // chunk_size)
+    ref = energymodel.stream_layer_topk(grid, networks, **kw)
+
+    # -- detection matrix: every injection must raise with provenance,
+    #    and the service-style resume-retry must recover exactly
+    chunks = sorted({0, n_chunks // 2, n_chunks - 1})
+    injected = detected = parity = 0
+    err_max = 0.0
+    for seed in CHAOS_SEEDS:
+        for target in ("e", "t"):
+            for ci in chunks:
+                injected += 1
+                plan = FaultPlan(perturb_at={ci: 1e-3}, seed=seed,
+                                 target=target)
+                states = []
+                try:
+                    with inject_chunk_faults(plan):
+                        energymodel.stream_layer_topk(
+                            grid, networks, on_chunk=states.append,
+                            verify=StreamVerifier(verify_fraction=1.0),
+                            **kw)
+                except ShadowMismatchError as err:
+                    assert err.chunk == ci and err.mismatches
+                    detected += 1
+                # poisoned chunk never committed (perturb pops once):
+                # retry from the last good fold state, re-verified
+                res = energymodel.stream_layer_topk(
+                    grid, networks,
+                    resume_from=states[-1] if states else None,
+                    verify=StreamVerifier(verify_fraction=1.0), **kw)
+                exact = all(
+                    np.array_equal(np.asarray(g), np.asarray(w))
+                    for g, w in ((res.topk_metric, ref.topk_metric),
+                                 (res.topk_idx, ref.topk_idx),
+                                 (res.min_metric, ref.min_metric),
+                                 (res.argmin, ref.argmin)))
+                parity += int(exact)
+                if not exact:
+                    d = np.abs(np.asarray(res.topk_metric)
+                               - np.asarray(ref.topk_metric))
+                    err_max = max(err_max, float(np.max(
+                        d / np.maximum(np.abs(ref.topk_metric), 1e-30))))
+
+    # -- overhead of the DEFAULT sampling vs an unverified stream
+    def best_of(f, n=3):
+        ts = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            f()
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    t_plain = best_of(lambda: energymodel.stream_layer_topk(
+        grid, networks, **kw))
+    default_fraction = 1.0 / 16.0
+    ver = StreamVerifier(verify_fraction=default_fraction)
+    t_verify = best_of(lambda: energymodel.stream_layer_topk(
+        grid, networks, verify=ver, **kw))
+
+    return dict(
+        n_chunks=n_chunks, injected=injected, detected=detected,
+        detection_rate=detected / injected,
+        recompute_parity=parity / injected,
+        max_rel_err_verify=err_max,
+        shadow_checks=ver.stats["shadow_checks"],
+        invariant_checks=ver.stats["invariant_checks"],
+        verify_fraction=default_fraction,
+        t_plain_s=t_plain, t_verify_s=t_verify,
+        overhead=t_verify / t_plain - 1.0)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -271,7 +359,7 @@ def main() -> None:
         out_path = BENCH_SERVE_JSON
 
     payload = dict(
-        schema=2,
+        schema=3,
         quick=bool(args.quick),
         host=platform.node(),
         python=platform.python_version(),
@@ -281,17 +369,21 @@ def main() -> None:
         chaos=_chaos_metrics(grid, nets, chunk_size=chunk),
         restart=_restart_metrics(grid, nets, n_queries=n_queries,
                                  chunk_size=chunk),
+        verify=_verify_metrics(grid, nets, chunk_size=chunk),
     )
     out_path.write_text(json.dumps(payload, indent=2) + "\n")
     svc = payload["service"]
     rec = payload["recovery"]
     rst = payload["restart"]
+    ver = payload["verify"]
     print(f"{out_path}: {svc['served']}/{svc['n_queries']} queries at "
           f"{svc['queries_per_sec']:.2f} q/s, recovery_ratio="
           f"{rec['recovery_ratio']:.3f}, chaos errors="
           f"{payload['chaos']['errors']}, recovery_tax="
           f"{rst['recovery_tax']:.3f}, warm_hit_ratio="
-          f"{rst['warm_hit_ratio']:.2f}")
+          f"{rst['warm_hit_ratio']:.2f}, verify detection="
+          f"{ver['detected']}/{ver['injected']}, verify overhead="
+          f"{ver['overhead']:.3f}")
 
 
 if __name__ == "__main__":

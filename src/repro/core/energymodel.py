@@ -1471,7 +1471,8 @@ def stream_networks(grid: ConfigGrid,
                     topk: int = 16,
                     resume_from: "StreamFoldState | Mapping | None" = None,
                     on_chunk=None,
-                    nan_guard: bool = True) -> StreamResult:
+                    nan_guard: bool = True,
+                    verify=None) -> StreamResult:
     """Chunked streaming sweep with on-device running reductions.
 
     Never materialises the full ``[n_cfg, n_net]`` matrices: each chunk is
@@ -1487,6 +1488,12 @@ def stream_networks(grid: ConfigGrid,
     uninterrupted run, and a state exported from different inputs is
     rejected (:class:`StreamStateError`).  ``nan_guard`` checks every
     chunk for NaN/inf before folding (:class:`ChunkCorruption`).
+
+    ``verify=`` accepts a :class:`repro.ft.verify.StreamVerifier` (duck-
+    typed: ``bind`` / ``check_resume`` / ``check_chunk`` / ``check_fold``)
+    — fold-invariant checks and sampled numpy-reference shadow recomputes
+    run per chunk BEFORE the new state commits, so a finite silent
+    corruption raises instead of poisoning the fold.
     """
     global _LAST_BACKEND
     backend = resolve_backend(backend, use_jax)
@@ -1514,6 +1521,14 @@ def stream_networks(grid: ConfigGrid,
     if resume_from is not None:
         state, cand, done = _resume_fold(resume_from, kind="networks",
                                          ihash=ihash, names=names)
+    if verify is not None:
+        verify.bind(kind="networks", names=names, metric=metric,
+                    topk=topk, bound=bound, backend=backend,
+                    ref_eval=lambda fc: _eval_fields(
+                        fc, lay, segments, "numpy", False,
+                        _UNIQUE_BUCKET, _MAPPING_BUCKET))
+        if resume_from is not None:
+            verify.check_resume(state, cand)
 
     def emit(ci):
         if on_chunk is None:
@@ -1549,8 +1564,14 @@ def stream_networks(grid: ConfigGrid,
             e, t = _apply_chunk_hook(ci, e, t)
             if nan_guard:
                 _guard_chunk(ci, start, stop, e, t, names)
-            state, mask = _stream_reduce_body(
+            if verify is not None:      # raises BEFORE the fold commits
+                verify.check_chunk(ci, start, stop, fc, e, t)
+            new_state, mask = _stream_reduce_body(
                 np, metric, topk, e, t, start, stop - start, bound, state)
+            if verify is not None:
+                verify.check_fold(ci, start, stop, state, new_state,
+                                  es=e, ts=t, mask=mask)
+            state = new_state
             collect(mask, e, t, start)
             emit(ci)
     else:
@@ -1564,17 +1585,25 @@ def stream_networks(grid: ConfigGrid,
         with enable_x64():
             def reduce_one(item):
                 nonlocal state
-                ci, start, stop, e_d, t_d = item
+                ci, start, stop, e_d, t_d, fc = item
                 if n_dev > 1:
                     e_d = jax.device_put(e_d, devs[0])
                     t_d = jax.device_put(t_d, devs[0])
                 e_d, t_d = _apply_chunk_hook(ci, e_d, t_d)
                 if nan_guard:
                     _guard_chunk(ci, start, stop, e_d, t_d, names)
+                if verify is not None:  # raises BEFORE the fold commits
+                    verify.check_chunk(ci, start, stop, fc, e_d, t_d)
                 _JIT_STATS["calls"] += 1
-                state, mask = _jax_reduce_step()(
+                new_state, mask = _jax_reduce_step()(
                     metric, topk, e_d, t_d, state, np.int64(start),
                     np.int64(stop - start), float(bound))
+                if verify is not None:
+                    verify.check_fold(ci, start, stop, state, new_state,
+                                      es=np.asarray(e_d),
+                                      ts=np.asarray(t_d),
+                                      mask=np.asarray(mask))
+                state = new_state
                 # only the boundary mask and the hit rows cross to the
                 # host — the [chunk, n_net] matrices stay on device
                 rows_i, cols_i = np.nonzero(np.asarray(mask))
@@ -1594,7 +1623,8 @@ def stream_networks(grid: ConfigGrid,
             for ci, start, stop, fc in chunks():
                 dev = devs[ci % n_dev] if n_dev > 1 else None
                 e_d, t_d = _dispatch_chunk(fc, lay, segments, dev, backend)
-                pending.append((ci, start, stop, e_d, t_d))
+                pending.append((ci, start, stop, e_d, t_d,
+                                fc if verify is not None else None))
                 if len(pending) > 2 * n_dev:
                     reduce_one(pending.pop(0))
             for item in pending:
@@ -1771,7 +1801,8 @@ def stream_layer_topk(grid: ConfigGrid,
                       bound: float | None = None,
                       resume_from: "StreamFoldState | Mapping | None" = None,
                       on_chunk=None,
-                      nan_guard: bool = True) -> LayerTopK:
+                      nan_guard: bool = True,
+                      verify=None) -> LayerTopK:
     """Streamed per-layer sweep: one pass, every co-design reduction.
 
     Equivalent to ``evaluate_networks(..., per_layer=True)`` followed by
@@ -1794,7 +1825,10 @@ def stream_layer_topk(grid: ConfigGrid,
     uninterrupted run, and a state exported from different inputs is
     rejected (:class:`StreamStateError`).  ``nan_guard`` checks every
     chunk's layer-summed aggregates for NaN/inf before the fold commits
-    (:class:`ChunkCorruption` with chunk provenance)."""
+    (:class:`ChunkCorruption` with chunk provenance); ``verify=`` takes a
+    :class:`repro.ft.verify.StreamVerifier` for the finite-corruption
+    rungs — per-chunk fold-invariant checks and sampled numpy-reference
+    shadow recomputes, both raising BEFORE the poisoned state commits."""
     global _LAST_BACKEND
     backend = resolve_backend(backend, use_jax)
     _LAST_BACKEND = backend
@@ -1831,6 +1865,14 @@ def stream_layer_topk(grid: ConfigGrid,
     if resume_from is not None:
         state, cand, done = _resume_fold(resume_from, kind="layer_topk",
                                          ihash=ihash, names=names)
+    if verify is not None:
+        verify.bind(kind="layer_topk", names=names, metric=metric,
+                    topk=k, bound=bound, backend=backend,
+                    ref_eval=lambda fc: _eval_fields(
+                        fc, lay, segments, "numpy", False,
+                        _UNIQUE_BUCKET, _MAPPING_BUCKET, per_layer=True))
+        if resume_from is not None:
+            verify.check_resume(state, cand)
 
     def emit(ci):
         if on_chunk is None:
@@ -1869,11 +1911,17 @@ def stream_layer_topk(grid: ConfigGrid,
                                   _UNIQUE_BUCKET, _MAPPING_BUCKET,
                                   per_layer=True)
             ec, tc = _apply_chunk_hook(ci, ec, tc)
+            if nan_guard:     # raises BEFORE the fold commits
+                _guard_chunk(ci, start, stop, ec.sum(axis=2),
+                             tc.sum(axis=2), names)
+            if verify is not None:
+                verify.check_chunk(ci, start, stop, fc, ec, tc)
             new_state, mask, es, ts = _layer_reduce_body(
                 np, metric, k, ec, tc, start, stop - start, b,
                 lay_valid, state)
-            if nan_guard:     # raises BEFORE the fold commits
-                _guard_chunk(ci, start, stop, es, ts, names)
+            if verify is not None:
+                verify.check_fold(ci, start, stop, state, new_state,
+                                  es=es, ts=ts, mask=mask)
             state = new_state
             collect(mask, es, ts, start)
             emit(ci)
@@ -1886,7 +1934,7 @@ def stream_layer_topk(grid: ConfigGrid,
         with enable_x64():
             def reduce_one(item):
                 nonlocal state
-                ci, start, stop, e_d, t_d = item
+                ci, start, stop, e_d, t_d, fc = item
                 if n_dev > 1:
                     e_d = jax.device_put(e_d, devs[0])
                     t_d = jax.device_put(t_d, devs[0])
@@ -1897,6 +1945,13 @@ def stream_layer_topk(grid: ConfigGrid,
                     np.int64(stop - start), float(b), lay_valid)
                 if nan_guard:     # raises BEFORE the fold commits
                     _guard_chunk(ci, start, stop, es, ts, names)
+                if verify is not None:
+                    verify.check_chunk(ci, start, stop, fc,
+                                       np.asarray(e_d), np.asarray(t_d))
+                    verify.check_fold(ci, start, stop, state, new_state,
+                                      es=np.asarray(es),
+                                      ts=np.asarray(ts),
+                                      mask=np.asarray(mask))
                 state = new_state
                 collect(mask, es, ts, start)
                 emit(ci)
@@ -1905,7 +1960,8 @@ def stream_layer_topk(grid: ConfigGrid,
                 dev = devs[ci % n_dev] if n_dev > 1 else None
                 ec, tc = _dispatch_chunk(fc, lay, segments, dev, backend,
                                          per_layer=True)
-                pending.append((ci, start, stop, ec, tc))
+                pending.append((ci, start, stop, ec, tc,
+                                fc if verify is not None else None))
                 if len(pending) > 2 * n_dev:
                     reduce_one(pending.pop(0))
             for item in pending:

@@ -1,6 +1,9 @@
 from .supervisor import Supervisor, FaultInjector  # noqa: F401
-from .faults import (BackendFault, FaultPlan, StreamKill,  # noqa: F401
-                     inject_chunk_faults)
+from .faults import (BackendFault, FaultPlan, ProcessKill,  # noqa: F401
+                     StreamKill, inject_chunk_faults)
+from .verify import (FoldInvariantError, ShadowMismatchError,  # noqa: F401
+                     StreamVerifier, VerifyConfig,
+                     check_layer_topk_result, scrub_layer_topk)
 from .hw_faults import (CoreFailure, DegradedArray,  # noqa: F401
                         FaultScenario, ScenarioBatch,
                         all_single_core_failures, apply_counts,

@@ -16,7 +16,12 @@ chosen chunk indices:
   :class:`repro.core.energymodel.ChunkCorruption` with chunk provenance),
 * ``kill_at``   — raise :class:`StreamKill` (a simulated process death
   mid-stream; recovery resumes from the last exported
-  :class:`repro.core.energymodel.StreamFoldState` and must be bit-exact).
+  :class:`repro.core.energymodel.StreamFoldState` and must be bit-exact),
+* ``perturb_at`` — multiply one seeded-random element of the chunk's
+  energies or latencies by ``1 + perturb_rel`` (a FINITE silent data
+  corruption — the bit-flip / kernel-miscompile model; the NaN/inf guard
+  can NOT see it, only :class:`repro.ft.verify.StreamVerifier`'s shadow
+  recompute catches it).
 
 Everything is deterministic given (plan, seed): ``FaultPlan.random`` builds
 a reproducible plan from a seed, and corruption positions derive from
@@ -67,6 +72,9 @@ class FaultPlan:
     corrupt_at: Dict[int, str] = dataclasses.field(default_factory=dict)
     kill_at: Optional[int] = None
     pkill_at: Optional[int] = None   # whole-process kill (ProcessKill)
+    # finite corruption: chunk -> relative perturbation of one element
+    perturb_at: Dict[int, float] = dataclasses.field(default_factory=dict)
+    perturb_rel: float = 1e-3
     seed: int = 0
     target: str = "e"              # corruption tensor: "e" | "t"
     fired: List[Tuple[int, str]] = dataclasses.field(default_factory=list)
@@ -78,13 +86,19 @@ class FaultPlan:
 
     @classmethod
     def random(cls, seed: int, n_chunks: int, *, p_fail: float = 0.2,
-               p_corrupt: float = 0.1, max_fails: int = 2) -> "FaultPlan":
+               p_corrupt: float = 0.1, max_fails: int = 2,
+               p_perturb: float = 0.0,
+               perturb_rel: float = 1e-3) -> "FaultPlan":
         """Reproducible random plan over ``n_chunks`` chunk indices.
 
         Per-chunk fail counts stay ≤ ``max_fails`` so any retry budget
         > ``max_fails`` is guaranteed to converge.  The corruption target
         is a seeded coin flip between the energy and latency tensors, so
-        the chaos matrix exercises the latency-side guard path too."""
+        the chaos matrix exercises the latency-side guard path too.
+        ``p_perturb`` adds seeded FINITE corruptions (``perturb_at``);
+        its draws come after all existing ones so plans built with
+        ``p_perturb=0`` are bit-identical to plans built before the knob
+        existed."""
         rng = np.random.default_rng(seed)
         target = "e" if rng.random() < 0.5 else "t"
         fail_at = {ci: int(rng.integers(1, max_fails + 1))
@@ -92,8 +106,11 @@ class FaultPlan:
         corrupt_at = {ci: ("nan" if rng.random() < 0.5 else "inf")
                       for ci in range(n_chunks)
                       if rng.random() < p_corrupt}
-        return cls(fail_at=fail_at, corrupt_at=corrupt_at, seed=seed,
-                   target=target)
+        perturb_at = {ci: perturb_rel for ci in range(n_chunks)
+                      if rng.random() < p_perturb and ci not in corrupt_at}
+        return cls(fail_at=fail_at, corrupt_at=corrupt_at,
+                   perturb_at=perturb_at, perturb_rel=perturb_rel,
+                   seed=seed, target=target)
 
     def __call__(self, ci: int, e, t):
         if self.pkill_at is not None and ci == self.pkill_at:
@@ -118,6 +135,29 @@ class FaultPlan:
             rng = np.random.default_rng(self.seed * 1_000_003 + ci)
             flat = int(rng.integers(victim.size))
             victim.reshape(-1)[flat] = np.nan if kind == "nan" else np.inf
+            if self.target == "e":
+                e = victim
+            else:
+                t = victim
+        rel = self.perturb_at.pop(ci, None)
+        if rel is not None:
+            # finite silent corruption: scale ONE element by (1 + rel) —
+            # stays finite and plausible, so only the shadow recompute
+            # (never the NaN/inf guard) can catch it.  Pop-once, so the
+            # service's retry of the failed chunk is clean.
+            self.fired.append((ci, "perturb"))
+            victim = e if self.target == "e" else t
+            victim = np.array(np.asarray(victim), dtype=np.float64,
+                              copy=True)
+            rng = np.random.default_rng(self.seed * 1_000_003 + ci)
+            # pick among NONZERO finite elements: scaling a zero (the
+            # per-layer tensors zero-pad each network's layer tail) would
+            # be a no-op, not a corruption
+            flat_v = victim.reshape(-1)
+            eligible = np.nonzero(np.isfinite(flat_v) & (flat_v != 0.0))[0]
+            flat = int(eligible[rng.integers(eligible.size)]
+                       if eligible.size else rng.integers(flat_v.size))
+            flat_v[flat] *= (1.0 + rel)
             if self.target == "e":
                 e = victim
             else:

@@ -43,11 +43,15 @@ class Preemption(RuntimeError):
 
 @dataclasses.dataclass
 class FaultInjector:
-    """Deterministic fault plan for tests: {step: 'fail'|'slow'|'preempt'}."""
+    """Deterministic fault plan for tests: {step: 'fail'|'slow'|'preempt'}.
+
+    ``sleep`` is injectable (a fake clock's ``sleep`` in tests) so "slow"
+    steps don't depend on host timing; the default is wall-clock."""
 
     plan: Dict[int, str] = dataclasses.field(default_factory=dict)
     slow_s: float = 0.3
     fired: List[int] = dataclasses.field(default_factory=list)
+    sleep: Callable[[float], None] = time.sleep
 
     def check(self, step: int):
         kind = self.plan.get(step)
@@ -57,7 +61,7 @@ class FaultInjector:
         if kind == "fail":
             raise WorkerFailure(f"injected worker failure at step {step}")
         if kind == "slow":
-            time.sleep(self.slow_s)
+            self.sleep(self.slow_s)
         if kind == "preempt":
             raise Preemption(f"injected preemption at step {step}")
 
@@ -74,6 +78,9 @@ class Supervisor:
     # to a hot spare holding its own replica — here we log the event and
     # carry on with the (successfully computed) result.
     reexecute_stragglers: bool = True
+    # injectable time source (a deterministic fake in tests, like
+    # DSEService's clock=); the default is wall-clock
+    clock: Callable[[], float] = time.perf_counter
 
     def run(self, *, state: Any, step_fn: Callable[[Any, int], Any],
             num_steps: int, start_step: int = 0,
@@ -90,27 +97,41 @@ class Supervisor:
         retries = 0
         events: List[str] = []
         self.events = events
+        # (step, slow_dt, reexec_dt | None) per detected straggler
+        stragglers: List[tuple] = []
+        self.stragglers = stragglers
 
         while step < num_steps:
-            t0 = time.perf_counter()
+            t0 = self.clock()
             try:
                 if injector is not None:
                     injector.check(step)
                 new_state = step_fn(state, step)
-                dt = time.perf_counter() - t0
+                dt = self.clock() - t0
 
-                # straggler detection (p50-based deadline)
+                # straggler detection (p50-based deadline); the slow
+                # sample is NEVER appended to the p50 window — a burst of
+                # stragglers must not inflate the deadline they are
+                # measured against
+                straggled = False
                 if len(times) >= self.min_timing_samples:
                     med = sorted(times)[len(times) // 2]
                     if dt > self.straggler_factor * med:
-                        events.append(f"straggler@{step}:{dt:.3f}s")
+                        straggled = True
+                        dt2 = None
                         if self.reexecute_stragglers:
                             # re-dispatch once; deterministic step_fn makes
                             # the re-execution a hot-spare replay
-                            t1 = time.perf_counter()
+                            t1 = self.clock()
                             new_state = step_fn(state, step)
-                            dt = time.perf_counter() - t1
-                times.append(dt)
+                            dt2 = self.clock() - t1
+                            times.append(dt2)
+                        stragglers.append((step, dt, dt2))
+                        events.append(
+                            f"straggler@{step}:{dt:.3f}s"
+                            + (f"->{dt2:.3f}s" if dt2 is not None else ""))
+                if not straggled:
+                    times.append(dt)
                 state = new_state
                 retries = 0
 

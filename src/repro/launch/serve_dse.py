@@ -17,6 +17,11 @@ re-launch over the same directory replays whatever an earlier (killed)
 launch accepted but never answered — those replayed queries drain FIRST.
 SIGTERM/SIGINT trigger a graceful drain: admission closes, the queue is
 served to completion, and the journal is closed before exit.
+``--scrub`` runs a full durable-store audit after draining — cached
+stream payloads are re-derived through the numpy reference path and
+poisoned entries quarantined-with-reason + recomputed; ``--no-verify``
+disables the in-stream silent-corruption defense (see
+:mod:`repro.ft.verify`).
 
     PYTHONPATH=src python -m repro.launch.serve_dse --requests 12
     PYTHONPATH=src python -m repro.launch.serve_dse --chaos 0 --deadline-s 5
@@ -81,6 +86,16 @@ def main(argv=None, *, clock=None, sleep=None, grid=None):
     ap.add_argument("--fault-event", action="store_true",
                     help="after draining, report a single-core loss on "
                     "the first best-chip answer and re-schedule")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="disable the silent-corruption defense "
+                    "(invariant checks + shadow recompute + idle scrub)")
+    ap.add_argument("--verify-fraction", type=float, default=1.0 / 16.0,
+                    help="seeded fraction of chunks shadow-recomputed "
+                    "on the numpy reference (default 1/16)")
+    ap.add_argument("--scrub", action="store_true",
+                    help="after draining, run a FULL store scrub "
+                    "(audit + quarantine + recompute) and print its "
+                    "counters; requires --state-dir")
     args = ap.parse_args(argv)
 
     if grid is None:
@@ -95,6 +110,8 @@ def main(argv=None, *, clock=None, sleep=None, grid=None):
                      chunk_size=args.chunk_size,
                      degrade_stride=args.degrade_stride,
                      backend=args.backend, state_dir=args.state_dir,
+                     verify=not args.no_verify,
+                     verify_fraction=args.verify_fraction,
                      **extra)
     prev_handlers = {s: signal.getsignal(s)
                      for s in (signal.SIGTERM, signal.SIGINT)}
@@ -161,6 +178,15 @@ def main(argv=None, *, clock=None, sleep=None, grid=None):
                       f"ok={r.ok} degraded={r.degraded} "
                       f"feasible={a.get('feasible')} "
                       f"counts_after={a.get('counts_after')}")
+
+    if args.scrub:
+        if svc.store is None:
+            print("scrub: no --state-dir, nothing to audit")
+        else:
+            res = svc.scrub()
+            print(f"scrub: scanned {res['scanned']} entries, "
+                  f"{res['bad']} quarantined, "
+                  f"{res['recomputed']} recomputed")
 
     print(json.dumps(svc.health(), indent=2, default=str))
     svc.close()

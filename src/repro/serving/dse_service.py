@@ -70,6 +70,17 @@ Scenarios that kill every core come back ``feasible=False`` per network
    :func:`repro.core.energymodel.merge_layer_topk` — bit-identical to
    re-streaming the grown grid from scratch — and invalidates exactly
    the store groups whose grid hash changed.
+8. *Silent-corruption defense* (``verify=True``, the default): every
+   streamed sweep runs under a :class:`repro.ft.verify.StreamVerifier`
+   — per-chunk fold-invariant checks plus a seeded
+   ``verify_fraction``-sampled numpy shadow recompute — so a FINITE
+   wrong value (bit-flip, kernel miscompile) raises before the poisoned
+   chunk commits and the normal retry/resume ladder recomputes it.
+   :meth:`DSEService.scrub` (also run incrementally from idle
+   :meth:`step` ticks) audits at-rest store entries through
+   :func:`repro.ft.verify.scrub_layer_topk`, quarantines-with-reason,
+   and recomputes; ``health()`` exposes ``shadow_checks``,
+   ``invariant_violations``, ``scrub_entries``, ``scrubbed_bad``.
 """
 
 from __future__ import annotations
@@ -85,6 +96,7 @@ from ..core import energymodel, hetero, partition
 from ..core.accelerator import ConfigGrid
 from ..core.topology import Layer
 from ..ft import hw_faults
+from ..ft import verify as ft_verify
 from . import store as store_mod
 
 
@@ -161,7 +173,12 @@ class DSEService:
                  lat_window: int = 4096,
                  ckpt_every: int = 4,
                  clock=time.monotonic,
-                 sleep=time.sleep):
+                 sleep=time.sleep,
+                 verify: bool = True,
+                 verify_fraction: float = 1.0 / 16.0,
+                 verify_seed: int = 0,
+                 scrub_rows: int = 2,
+                 idle_scrub: bool = True):
         self.grid = grid
         self.networks = dict(networks)
         self.names = tuple(self.networks)
@@ -179,6 +196,12 @@ class DSEService:
         self.ckpt_every = max(int(ckpt_every), 1)
         self._clock = clock
         self._sleep = sleep
+        self.verify = bool(verify)
+        self.verify_fraction = float(verify_fraction)
+        self.verify_seed = int(verify_seed)
+        self._scrub_rows = int(scrub_rows)
+        self._idle_scrub = bool(idle_scrub)
+        self._scrub_cursor: Optional[str] = None
         self._stride = max(1, min(int(degrade_stride), grid.n))
         self._sub_idx = np.arange(0, grid.n, self._stride)
         self._sub_grid = grid.take(self._sub_idx)
@@ -208,7 +231,10 @@ class DSEService:
             resched_cache_hits=0, resched_cache_misses=0,
             store_hits=0, store_misses=0, answer_hits=0,
             replayed=0, replay_dropped=0, ckpt_gc=0,
-            grid_extensions=0, delta_folds=0, cache_invalidated=0)
+            grid_extensions=0, delta_folds=0, cache_invalidated=0,
+            shadow_checks=0, shadow_mismatches=0,
+            invariant_checks=0, invariant_violations=0,
+            scrub_entries=0, scrubbed_bad=0, scrub_recomputed=0)
         # (chip_types, chip_counts, scenario.key(), metric) → answer dict
         self._resched: Dict[tuple, Dict[str, Any]] = {}
 
@@ -442,6 +468,89 @@ class DSEService:
                 self.stats["retries"] += 1
                 self._sleep(delay)
 
+    # -- silent-corruption defense -----------------------------------------
+    def _make_verifier(self) -> Optional[ft_verify.StreamVerifier]:
+        if not self.verify:
+            return None
+        return ft_verify.StreamVerifier(
+            verify_fraction=self.verify_fraction, seed=self.verify_seed)
+
+    def _harvest_verify(self, v: Optional[ft_verify.StreamVerifier]):
+        """Fold a per-run verifier's counters into the service stats —
+        in a finally block, so counts from a detected-and-raised
+        corruption are kept too."""
+        if v is None:
+            return
+        for k, n in v.stats.items():
+            self.stats[k] = self.stats.get(k, 0) + n
+
+    def scrub(self, *, max_entries: Optional[int] = None,
+              cursor: Optional[str] = None,
+              recompute: bool = True) -> Dict[str, Any]:
+        """Audit at-rest store entries for silent corruption.
+
+        Walks (a slice of) the durable store through
+        :meth:`repro.serving.store.DurableStore.scrub`, with cached
+        stream payloads re-derived through
+        :func:`repro.ft.verify.scrub_layer_topk` (structural invariants
+        + ``scrub_rows`` sampled rows recomputed on the numpy reference
+        path).  Poisoned entries are quarantined-with-reason, evicted
+        from the warm caches, and — with ``recompute=True`` — rebuilt
+        immediately so the next query is served clean.  Answer entries
+        are covered by the integrity check only (they are JSON meta
+        derived from stream payloads, which ARE re-derived)."""
+        if self.store is None:
+            return dict(scanned=0, bad=0, bad_keys=[], recomputed=0,
+                        cursor=cursor)
+        import ast
+
+        def parse_stream_key(key_repr):
+            """(tier, metric) of a CURRENT stream entry, else None."""
+            try:
+                key = ast.literal_eval(key_repr)
+            except (ValueError, SyntaxError):
+                return None
+            if not (isinstance(key, tuple) and len(key) >= 4
+                    and key[2] == "stream"):
+                return None
+            tier = ("exact" if key[0] == self._grid_hash else
+                    "sub" if key[0] == self._sub_hash else None)
+            if tier is None or key[1] != self._nets_hash:
+                return None      # superseded entry; invalidation reaps it
+            return tier, str(key[3])
+
+        def checker(key_repr, arrays, meta):
+            tm = parse_stream_key(key_repr)
+            if tm is None:
+                return None
+            tier, _ = tm
+            grid = self.grid if tier == "exact" else self._sub_grid
+            try:
+                st = store_mod.stream_from_payload(arrays, meta)
+            except Exception as e:
+                return f"stream payload does not decode: {e}"
+            return ft_verify.scrub_layer_topk(
+                st, grid, self.networks, rows=self._scrub_rows,
+                seed=self.verify_seed)
+
+        res = self.store.scrub(checker, max_entries=max_entries,
+                               cursor=cursor)
+        self.stats["scrub_entries"] += res["scanned"]
+        self.stats["scrubbed_bad"] += res["bad"]
+        recomputed = 0
+        for key_repr in res["bad_keys"]:
+            tm = parse_stream_key(key_repr) if key_repr else None
+            if tm is None:
+                continue
+            tier, metric = tm
+            self._streams.pop((tier, metric), None)
+            self._points.pop((tier, metric), None)
+            if recompute:
+                self._get_stream(metric, exact=(tier == "exact"))
+                recomputed += 1
+        self.stats["scrub_recomputed"] += recomputed
+        return dict(res, recomputed=recomputed)
+
     # -- cached artifacts --------------------------------------------------
     def _tier(self, exact: bool):
         if exact:
@@ -485,10 +594,15 @@ class DSEService:
 
         def run(backend, resume):
             t0 = self._clock()
-            st = energymodel.stream_layer_topk(
-                grid, self.networks, topk=self.topk, bound=self.bound,
-                metric=metric, chunk_size=self.chunk_size, backend=backend,
-                resume_from=resume, on_chunk=on_chunk)
+            v = self._make_verifier()
+            try:
+                st = energymodel.stream_layer_topk(
+                    grid, self.networks, topk=self.topk, bound=self.bound,
+                    metric=metric, chunk_size=self.chunk_size,
+                    backend=backend, resume_from=resume, on_chunk=on_chunk,
+                    verify=v)
+            finally:
+                self._harvest_verify(v)
             if resume is None:
                 self._record_cost(key, self._clock() - t0)
             return st
@@ -577,10 +691,14 @@ class DSEService:
             else:                  # no new stride multiple: tier unchanged
                 merged[(tier, metric)] = st
                 continue
-            delta = energymodel.stream_layer_topk(
-                drows, self.networks, topk=self.topk, bound=self.bound,
-                metric=metric, chunk_size=self.chunk_size,
-                backend=self.backend)
+            v = self._make_verifier()
+            try:
+                delta = energymodel.stream_layer_topk(
+                    drows, self.networks, topk=self.topk, bound=self.bound,
+                    metric=metric, chunk_size=self.chunk_size,
+                    backend=self.backend, verify=v)
+            finally:
+                self._harvest_verify(v)
             merged[(tier, metric)] = energymodel.merge_layer_topk(
                 st, delta)
             n_folds += 1
@@ -634,8 +752,18 @@ class DSEService:
     # -- serving -----------------------------------------------------------
     def step(self) -> List[DSEResponse]:
         """Serve ONE coalesced batch: every queued request sharing the
-        head request's family and metric."""
+        head request's family and metric.
+
+        An idle tick (empty queue) spends itself on the background
+        scrubber instead: ONE store entry is audited per tick, the
+        cursor carrying across ticks, so a service that keeps stepping
+        while idle eventually re-verifies its whole cache."""
         if not self._queue:
+            if (self._idle_scrub and self.verify
+                    and self.store is not None):
+                res = self.scrub(max_entries=1,
+                                 cursor=self._scrub_cursor)
+                self._scrub_cursor = res["cursor"]
             return []
         head = self._queue[0]
         family = self._family(head.kind)

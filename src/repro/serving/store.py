@@ -15,6 +15,11 @@ process; this module is the disk tier that survives it.  Three pieces:
   ``get`` returns ``None`` and the caller recomputes.  Writes follow the
   PR-6 crash-safety discipline (temp file, fsync, ``os.replace``), so a
   concurrent reader sees either the old complete entry or the new one.
+  :meth:`DurableStore.scrub` goes beyond the checksum (which only
+  protects against damage AFTER the write): it re-audits decoded
+  entries through a caller-supplied domain checker — the service wires
+  :func:`repro.ft.verify.scrub_layer_topk` in — and quarantines entries
+  that were poisoned BEFORE they were written.
 
 * :class:`Journal` — a write-ahead request log (JSONL, one fsync'd line
   per record).  ``submit`` records are appended BEFORE the request
@@ -125,7 +130,8 @@ class DurableStore:
             d.mkdir(parents=True, exist_ok=True)
         self.stats: Dict[str, int] = dict(
             puts=0, hits=0, misses=0, quarantined=0, invalidated=0,
-            ckpt_saved=0, ckpt_loaded=0, ckpt_deleted=0)
+            ckpt_saved=0, ckpt_loaded=0, ckpt_deleted=0,
+            scrub_entries=0, scrubbed_bad=0)
 
     # -- key addressing ----------------------------------------------------
 
@@ -156,6 +162,27 @@ class DurableStore:
         self.stats["puts"] += 1
         return path
 
+    def _load_entry(self, path: Path
+                    ) -> Tuple[str, Dict[str, np.ndarray], Any]:
+        """Load + integrity-check one entry file.
+
+        Returns ``(key_repr, arrays, meta)`` with the ``a_`` prefixes
+        stripped; raises on any damage (unreadable npz, missing members,
+        schema or checksum mismatch).  Shared by :meth:`get` and
+        :meth:`scrub`."""
+        with np.load(path, allow_pickle=False) as z:
+            head = json.loads(_json_scalar(z, "__head__"))
+            meta_json = _json_scalar(z, "__meta__")
+            arrays = {k: z[k] for k in z.files
+                      if k not in ("__head__", "__meta__")}
+        if int(head["schema"]) != self.schema:
+            raise StreamStateError(
+                f"schema {head['schema']} != {self.schema}")
+        if head["checksum"] != _checksum(arrays, meta_json):
+            raise StreamStateError("checksum mismatch")
+        return (head["key"], {k[2:]: v for k, v in arrays.items()},
+                json.loads(meta_json))
+
     def get(self, key: tuple
             ) -> Optional[Tuple[Dict[str, np.ndarray], Any]]:
         """Load one entry, or ``None`` (miss, or quarantined on damage).
@@ -168,26 +195,65 @@ class DurableStore:
             self.stats["misses"] += 1
             return None
         try:
-            with np.load(path, allow_pickle=False) as z:
-                head = json.loads(_json_scalar(z, "__head__"))
-                meta_json = _json_scalar(z, "__meta__")
-                arrays = {k: z[k] for k in z.files
-                          if k not in ("__head__", "__meta__")}
-            if int(head["schema"]) != self.schema:
-                raise StreamStateError(
-                    f"schema {head['schema']} != {self.schema}")
-            if head["key"] != repr(key):
+            key_repr, arrays, meta = self._load_entry(path)
+            if key_repr != repr(key):
                 raise StreamStateError("key mismatch (hash collision or "
                                        "tampered entry)")
-            if head["checksum"] != _checksum(arrays, meta_json):
-                raise StreamStateError("checksum mismatch")
         except Exception as e:
             self._quarantine(path, reason=str(e))
             self.stats["misses"] += 1
             return None
         self.stats["hits"] += 1
-        return ({k[2:]: v for k, v in arrays.items()},
-                json.loads(meta_json))
+        return arrays, meta
+
+    def scrub(self, checker=None, *, max_entries: Optional[int] = None,
+              cursor: Optional[str] = None) -> Dict[str, Any]:
+        """Audit cached entries beyond what the checksum can see.
+
+        The checksum protects against damage AFTER the write; an entry
+        whose payload was silently corrupted BEFORE ``put`` verifies
+        clean forever.  ``scrub`` walks entry files (integrity check
+        first) and hands each decoded entry to ``checker(key_repr,
+        arrays, meta)`` — a domain auditor returning a quarantine-reason
+        string or ``None``/falsy (the service wires
+        :func:`repro.ft.verify.scrub_layer_topk` in here).  Bad entries
+        are quarantined-with-reason; the caller recomputes on the next
+        miss.
+
+        ``cursor``/``max_entries`` support incremental idle-time passes:
+        pass the returned ``cursor`` back in to continue the walk
+        (wrapping around), bound each pass with ``max_entries``.
+        Returns ``dict(scanned=..., bad=..., bad_keys=[key_repr | None,
+        ...], cursor=...)``."""
+        names = sorted(p.name for p in self.entries.glob("*.npz"))
+        if cursor is not None:
+            after = [nm for nm in names if nm > cursor]
+            names = after + [nm for nm in names if nm <= cursor]
+        if max_entries is not None:
+            names = names[:max(0, int(max_entries))]
+        scanned = bad = 0
+        bad_keys: List[Optional[str]] = []
+        for nm in names:
+            path = self.entries / nm
+            if not path.exists():      # racing invalidation
+                continue               # pragma: no cover
+            scanned += 1
+            try:
+                key_repr, arrays, meta = self._load_entry(path)
+            except Exception as e:
+                self._quarantine(path, reason=f"scrub: {e}")
+                bad += 1
+                bad_keys.append(None)  # key unrecoverable from the file
+                continue
+            reason = checker(key_repr, arrays, meta) if checker else None
+            if reason:
+                self._quarantine(path, reason=f"scrub: {reason}")
+                bad += 1
+                bad_keys.append(key_repr)
+        self.stats["scrub_entries"] += scanned
+        self.stats["scrubbed_bad"] += bad
+        return dict(scanned=scanned, bad=bad, bad_keys=bad_keys,
+                    cursor=names[-1] if names else cursor)
 
     def _quarantine(self, path: Path, *, reason: str = "") -> None:
         """Atomically move a damaged file aside (never delete evidence)."""

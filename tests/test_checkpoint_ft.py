@@ -85,6 +85,87 @@ def test_supervisor_straggler_redispatch(tmp_path):
     assert any(e.startswith("straggler@") for e in sup.events)
 
 
+class FakeClock:
+    """Deterministic injectable time source: every ``clock()`` call
+    advances a fixed small tick, and ``sleep(s)`` advances by ``s`` —
+    so straggler detection depends only on the injected plan, never on
+    host timing."""
+
+    def __init__(self, tick=0.01):
+        self.now = 0.0
+        self.tick = tick
+
+    def __call__(self):
+        self.now += self.tick
+        return self.now
+
+    def sleep(self, s):
+        self.now += s
+
+
+def _run_clocked(tmp_path, plan, *, reexecute=True, steps=20,
+                 factor=3.0, slow_s=1.0):
+    clk = FakeClock()
+    inj = FaultInjector(plan, slow_s=slow_s, sleep=clk.sleep)
+    sup = Supervisor(CheckpointManager(tmp_path), checkpoint_every=100,
+                     straggler_factor=factor,
+                     reexecute_stragglers=reexecute, clock=clk)
+
+    def step_fn(state, step):
+        inj.check(step)
+        return {"w": state["w"] + 1.0, "step": state["step"] + 1.0}
+
+    final = sup.run(state=_state(0.0), step_fn=step_fn, num_steps=steps)
+    return final, sup
+
+
+def test_straggler_detection_is_deterministic(tmp_path):
+    """With the injected clock the straggler event is guaranteed (a real
+    sleep raced the host scheduler): both timings recorded, state exact."""
+    final, sup = _run_clocked(tmp_path, {15: "slow"})
+    assert float(final["w"].ravel()[0]) == 20.0
+    assert sup.stragglers and sup.stragglers[0][0] == 15
+    step, dt, dt2 = sup.stragglers[0]
+    assert dt > dt2                        # slow attempt vs re-execution
+    assert dt == pytest.approx(1.0 + 0.01)     # sleep + one clock tick
+    # the event string carries BOTH timings (slow -> re-executed)
+    ev = next(e for e in sup.events if e.startswith("straggler@15"))
+    assert "->" in ev and f"{dt:.3f}s" in ev and f"{dt2:.3f}s" in ev
+
+
+def test_straggler_samples_excluded_from_p50_window(tmp_path):
+    """A burst of stragglers must not inflate the p50 deadline they are
+    measured against: with the slow samples excluded, EVERY slow step in
+    the burst is detected — the old behaviour (appending them) let later
+    ones hide under the poisoned median."""
+    burst = {s: "slow" for s in range(10, 16)}
+    final, sup = _run_clocked(tmp_path, burst, reexecute=False)
+    assert float(final["w"].ravel()[0]) == 20.0
+    assert [s for s, _, _ in sup.stragglers] == list(range(10, 16))
+    # reexecute=False: flagged, NOT re-run, and no second timing
+    assert all(dt2 is None for _, _, dt2 in sup.stragglers)
+    assert all("->" not in e for e in sup.events
+               if e.startswith("straggler@"))
+
+
+def test_straggler_reexecution_feeds_clean_sample(tmp_path):
+    """reexecute=True appends the RE-EXECUTED time (a clean sample), so
+    the window keeps sliding on honest data."""
+    _, sup = _run_clocked(tmp_path, {8: "slow", 14: "slow"})
+    assert [s for s, _, _ in sup.stragglers] == [8, 14]
+    assert all(dt2 is not None and dt2 < dt
+               for _, dt, dt2 in sup.stragglers)
+
+
+def test_supervisor_wallclock_defaults():
+    """The injectable knobs default to real wall-clock functions."""
+    import time
+    assert Supervisor.__dataclass_fields__["clock"].default \
+        is time.perf_counter
+    assert FaultInjector.__dataclass_fields__["sleep"].default \
+        is time.sleep
+
+
 def test_supervisor_preemption_checkpoints(tmp_path):
     inj = FaultInjector({8: "preempt"})
     mgr = CheckpointManager(tmp_path)

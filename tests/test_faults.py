@@ -25,6 +25,7 @@ from repro.core import energymodel, topology
 from repro.core.accelerator import ConfigGrid
 from repro.ft.faults import (BackendFault, FaultPlan, StreamKill,
                              inject_chunk_faults)
+from repro.ft.verify import ShadowMismatchError, StreamVerifier
 from repro.serving.dse_service import DSEService
 
 SEEDS = tuple(int(s) for s in
@@ -145,6 +146,143 @@ def test_corruption_mutates_only_the_chosen_tensor():
     assert np.isfinite(np.asarray(e2)).all()
     assert np.isnan(np.asarray(t2)).sum() == 1
     assert np.isfinite(t).all()            # input never mutated in place
+
+
+# -- finite (silent) corruption: only the verifier can see it --------------
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_finite_corruption_detection_rate_is_one(grid, networks, seed):
+    """The seeded finite-corruption matrix: EVERY perturbed chunk — both
+    targets, every chunk index, padded last chunk included — raises
+    ShadowMismatchError with chunk provenance, and the service-style
+    resume-retry recovers an answer bit-identical to the clean run."""
+    ref = _stream(grid, networks)
+    n_chunks = -(-grid.n // 5)
+    for target in ("e", "t"):
+        for ci in range(n_chunks):
+            plan = FaultPlan(perturb_at={ci: 1e-3}, seed=seed,
+                             target=target)
+            states = []
+            with inject_chunk_faults(plan):
+                with pytest.raises(ShadowMismatchError) as ei:
+                    _stream(grid, networks,
+                            verify=StreamVerifier(verify_fraction=1.0),
+                            on_chunk=states.append)
+                # the poisoned chunk never committed; the retry re-runs
+                # it (perturb_at pops once) from the last good state
+                res = _stream(
+                    grid, networks,
+                    verify=StreamVerifier(verify_fraction=1.0),
+                    resume_from=states[-1] if states else None)
+            err = ei.value
+            assert err.chunk == ci
+            assert (err.start, err.stop) == (5 * ci, min(5 * ci + 5,
+                                                         grid.n))
+            assert err.mismatches and \
+                err.mismatches[0]["network"] in NETS
+            assert plan.fired == [(ci, "perturb")]
+            assert len(states) == ci      # exactly the chunks before it
+            np.testing.assert_array_equal(res.topk_idx, ref.topk_idx)
+            np.testing.assert_array_equal(res.topk_metric,
+                                          ref.topk_metric)
+            np.testing.assert_array_equal(res.argmin, ref.argmin)
+
+
+def test_finite_corruption_silent_without_verification(grid, networks,
+                                                       tmp_path):
+    """DOCUMENTED FAILURE MODE: with verification off, a finite
+    perturbation sails through the NaN/inf guard, the WRONG answer is
+    served, and the durable store caches it behind a VALID checksum —
+    then a later scrub() catches, quarantines, and recomputes it.
+    (seed=0, chunk=2 is a combination whose perturbed element lands in
+    a served top-k row; see the detection-rate test for the proof that
+    verification catches every such combination.)"""
+    clean_svc = DSEService(grid, networks, chunk_size=5, verify=False)
+    clean_svc.submit("best_config")
+    clean_svc.run_until_drained(max_steps=10)
+    ref = clean_svc._streams[("exact", "edp")]
+    svc = DSEService(grid, networks, chunk_size=5, verify=False,
+                     scrub_rows=999, state_dir=tmp_path)
+    with inject_chunk_faults(FaultPlan(perturb_at={2: 1e-3}, seed=0)):
+        svc.submit("best_config")
+        (r,), drained = svc.run_until_drained(max_steps=10)
+    assert drained and r.ok and not r.degraded
+    poisoned = svc._streams[("exact", "edp")]
+    assert poisoned.topk_metric.shape == ref.topk_metric.shape
+    assert not np.array_equal(poisoned.topk_metric, ref.topk_metric)
+    assert svc.health()["shadow_checks"] == 0      # nothing was watching
+    # the store serves the poisoned entry back — its checksum is VALID
+    # (it protects the write, not the data that went into it)
+    got = svc.store.get(svc._stream_key("exact", "edp"))
+    assert got is not None
+    assert not np.array_equal(got[0]["topk_metric"], ref.topk_metric)
+    # the scrubber is the backstop: quarantine + recompute
+    res = svc.scrub()
+    assert res["bad"] == 1 and res["recomputed"] == 1
+    clean = svc._streams[("exact", "edp")]
+    np.testing.assert_array_equal(clean.topk_metric, ref.topk_metric)
+    assert svc.health()["scrubbed_bad"] == 1
+    svc.close()
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_service_recovers_from_finite_corruption(grid, networks, seed):
+    """Verification-on service under a perturb-only plan: detection
+    counters tick, the retry ladder recomputes, and every answer equals
+    the clean service's bit-for-bit (pop-once perturbations retry on the
+    same backend, so no cross-backend tolerance is needed)."""
+    def ask(svc):
+        svc.submit("best_config")
+        svc.submit("best_chip", deadline=2.0)
+        svc.submit("pareto", network=list(networks)[0], deadline=3.0)
+        out, drained = svc.run_until_drained(max_steps=50)
+        assert drained
+        return {r.rid: r for r in out}
+
+    clean = ask(DSEService(grid, networks, chunk_size=5, verify=False))
+    svc = DSEService(grid, networks, chunk_size=5, verify_fraction=1.0,
+                     max_retries=30, backoff_s=1e-4)
+    n_chunks = -(-grid.n // 5)
+    plan = FaultPlan.random(seed, n_chunks, p_fail=0.0, p_corrupt=0.0,
+                            p_perturb=0.5)
+    with inject_chunk_faults(plan):
+        chaotic = ask(svc)
+    h = svc.health()
+    n_perturbed = sum(1 for _, k in plan.fired if k == "perturb")
+    assert h["shadow_mismatches"] == n_perturbed
+    assert h["faults"] >= n_perturbed     # each detection surfaced
+    for rid, r in chaotic.items():
+        assert r.ok and not r.degraded
+        assert repr(r.answer) == repr(clean[rid].answer)
+
+
+def test_random_plan_perturb_knob_and_backcompat():
+    a = FaultPlan.random(5, 20, p_perturb=0.4)
+    b = FaultPlan.random(5, 20, p_perturb=0.4)
+    assert a.perturb_at == b.perturb_at and a.perturb_at
+    assert not (set(a.perturb_at) & set(a.corrupt_at))
+    # p_perturb draws come AFTER the legacy ones: plans built without
+    # the knob are bit-identical to pre-knob plans
+    old = FaultPlan.random(5, 20)
+    assert (old.fail_at, old.corrupt_at, old.target) == \
+        (a.fail_at, a.corrupt_at, a.target)
+    assert old.perturb_at == {}
+
+
+def test_perturb_mutates_one_nonzero_element():
+    e = np.zeros((3, 2, 4))
+    e[:, :, :2] = 7.0                     # layer tail zero-padded
+    t = np.full((3, 2, 4), 3.0)
+    plan = FaultPlan(perturb_at={0: 1e-3}, seed=11)
+    e2, t2 = plan(0, e, t)
+    assert np.array_equal(t2, t)
+    changed = np.asarray(e2) != e
+    assert changed.sum() == 1
+    assert e[changed][0] != 0.0           # never a padding zero
+    assert np.isclose(np.asarray(e2)[changed][0],
+                      e[changed][0] * 1.001)
+    assert plan.fired == [(0, "perturb")]
+    assert np.all(e[:, :, 2:] == 0.0)     # input untouched
 
 
 # -- degradation: the service stays live under chaos ----------------------
